@@ -1,0 +1,63 @@
+"""Incremental optimization ablation (paper Fig. 6b).
+
+Enable stratum's optimizations cumulatively on iteration 1 of the paper
+workload:  none → +logical (CSE & rewrites) → +operator selection (native
+backends) → +inter-op parallelism → +cache (iteration-2 path).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.agents import paper_workload_batches
+from repro.agents.aide import second_iteration_batch
+from repro.core import Stratum
+
+LEVELS = [
+    ("none", ("lowering",)),
+    ("+logical", ("lowering", "logical")),
+    ("+selection", ("lowering", "logical", "selection")),
+    ("+parallel", ("lowering", "logical", "selection", "parallel")),
+    ("+cache", ("lowering", "logical", "selection", "parallel", "cache")),
+]
+
+
+def _run_level(enable, n_rows, cv_k):
+    name, batch, ctx = next(iter(paper_workload_batches(
+        n_rows=n_rows, cv_k=cv_k)))
+    s = Stratum(memory_budget_bytes=4 << 30, enable=enable)
+    t0 = time.perf_counter()
+    res, rep = s.run_batch(batch)
+    best = min(res, key=lambda k: float(np.asarray(res[k])))
+    b2, _ = second_iteration_batch(ctx["specs"][best])
+    s.run_batch(b2)
+    return time.perf_counter() - t0, rep
+
+
+def run(n_rows: int = 20_000, cv_k: int = 3) -> list:
+    """Full two-iteration workload per optimization level (paper Fig. 6b
+    denominator: iteration 1 + grid-search iteration 2).
+
+    Each level runs twice: an untimed warmup absorbs jit compilation (else
+    the first jax-tier level is charged all compile cost and later levels
+    ride its cache), then a FRESH session (cold result cache, warm jit
+    cache) is timed — steady-state execution per level."""
+    results = []
+    base_time = None
+    for label, enable in LEVELS:
+        _run_level(enable, n_rows, cv_k)               # warmup, untimed
+        dt, rep = _run_level(enable, n_rows, cv_k)     # timed
+        if base_time is None:
+            base_time = dt
+        results.append((label, dt, base_time / dt, rep.run.per_backend))
+    return results
+
+
+def rows() -> list:
+    out = []
+    for label, dt, speedup, backends in run():
+        out.append((f"ablation_{label}", dt * 1e6,
+                    f"speedup={speedup:.2f}x backends={backends}"))
+    return out

@@ -1,0 +1,54 @@
+"""Paper baselines (Fig. 6a): Base and Base_par execution modes.
+
+* ``Base``     — how AIDE actually executes: each pipeline is run start to
+  finish in isolation, sequentially, on the interpreted ("python") operator
+  tier; no fusion, no CSE across pipelines, no cache, fresh data load per
+  pipeline.
+* ``Base_par`` — AIDE triggering pipelines concurrently: same isolated
+  execution, thread pool across pipelines.  (The paper's Base_par uses
+  multiprocessing on 48 cores with 8× memory blow-up; this container has one
+  core, so Base_par measures the overhead side of naive parallelism —
+  reported as such in EXPERIMENTS.md.)
+
+Both run each pipeline's DAG after lowering (a CV score still needs its
+folds), but with per-pipeline isolation: shared prefixes are re-executed per
+pipeline, exactly like stateless agent-generated scripts.
+"""
+
+from __future__ import annotations
+
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+from repro.core.dag import LazyRef
+from repro.core.lowering import lower
+from repro.core.metadata import collect_metadata
+from repro.core.runtime import Runtime
+from repro.core.scheduler import SchedulerConfig, plan as make_plan
+from repro.core.selection import SelectionConfig, select
+
+
+def run_pipeline_isolated(sink: LazyRef, backends=("python",)):
+    """One pipeline, no sharing with anything else."""
+    sinks = lower([sink])
+    collect_metadata(sinks)
+    sel = select(sinks, SelectionConfig(allowed_backends=backends))
+    plan = make_plan(sinks, sel, SchedulerConfig(enable_inter_op=False))
+    rt = Runtime(cache=None, parallel=False)
+    results, report = rt.execute(sinks, plan, sel)
+    return results[0], report
+
+
+def run_base(sinks, backends=("python",)):
+    t0 = time.perf_counter()
+    results = [run_pipeline_isolated(s, backends)[0] for s in sinks]
+    return results, time.perf_counter() - t0
+
+
+def run_base_par(sinks, backends=("python",), max_workers: int = 4):
+    t0 = time.perf_counter()
+    with ThreadPoolExecutor(max_workers=max_workers) as pool:
+        futures = [pool.submit(run_pipeline_isolated, s, backends)
+                   for s in sinks]
+        results = [f.result()[0] for f in futures]
+    return results, time.perf_counter() - t0

@@ -1,0 +1,105 @@
+"""Microbenchmarks (paper §6 components): cache, operator selection tiers,
+kernel interpret-mode correctness cost, scheduler throughput."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import PipelineBatch, Stratum
+from repro.core.cache import IntermediateCache
+from repro.core.dag import LazyOp, TRANSFORM
+from repro.core.selection import impls_for
+import repro.tabular as T
+
+
+def _time(fn, reps=3):
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def cache_micro() -> list:
+    c = IntermediateCache(budget_bytes=64 << 20)
+    val = (np.zeros((1000, 64)),)
+    t_put = _time(lambda: [c.put(f"k{i}", val) for i in range(100)]) / 100
+    t_hit = _time(lambda: [c.get(f"k{i}") for i in range(100)]) / 100
+    return [("micro_cache_put", t_put * 1e6, ""),
+            ("micro_cache_hit", t_hit * 1e6,
+             f"hit_rate={c.stats.hit_rate:.2f}")]
+
+
+def selection_micro(n_rows: int = 40_000) -> list:
+    """Per-op python vs jax tier times (what the cost model must order)."""
+    from repro.data.tabular import generate_uk_housing
+    X = np.asarray(generate_uk_housing(n_rows, seed=0))
+    out = []
+    cases = [
+        ("onehot", {"cards": (5, 2, 3)}, [X[:, 2:5]], None),
+        ("string_encode", {"dim": 16}, [X[:, 5:6]], 0),
+        ("scaler_fit", {}, [np.nan_to_num(X[:, 10:14])], None),
+        ("ridge_fit", {"alpha": 1.0},
+         [np.nan_to_num(X[:, 1:]), np.log1p(X[:, 0])], 0),
+    ]
+    for name, spec, ins, seed in cases:
+        op = LazyOp(name, TRANSFORM, spec=spec, seed=seed)
+        impls = {i.backend: i for i in impls_for(name)
+                 if i.fidelity == "exact"}
+        times = {}
+        for be, impl in impls.items():
+            impl.fn(op, ins)  # warm (jit compile)
+            times[be] = _time(lambda impl=impl: impl.fn(op, ins))
+        ratio = times["python"] / times.get("jax", times["python"])
+        out.append((f"micro_select_{name}", times["python"] * 1e6,
+                    f"jax_speedup={ratio:.1f}x"))
+    return out
+
+
+def kernel_micro() -> list:
+    """Reference-path kernel timings (CPU; TPU numbers come from §Roofline)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import flash_attention, rmsnorm, ssd_scan
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(1, 8, 1024, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 1024, 64)), jnp.float32)
+    fa = jax.jit(lambda q, k: flash_attention(q, k, k))
+    fa(q, k).block_until_ready()
+    t_fa = _time(lambda: fa(q, k).block_until_ready())
+
+    x = jnp.asarray(rng.normal(size=(8, 1024, 512)), jnp.float32)
+    w = jnp.ones((512,), jnp.float32)
+    rn = jax.jit(lambda x, w: rmsnorm(x, w))
+    rn(x, w).block_until_ready()
+    t_rn = _time(lambda: rn(x, w).block_until_ready())
+
+    c = jnp.asarray(rng.normal(size=(1, 4, 512, 16)), jnp.float32)
+    xs = jnp.asarray(rng.normal(size=(1, 4, 512, 32)), jnp.float32)
+    la = -jnp.abs(jnp.asarray(rng.normal(size=(1, 4, 512)), jnp.float32))
+    sc = jax.jit(lambda c, xs, la: ssd_scan(c, c * 0.3, xs, la * 0.1,
+                                            -la)[0])
+    sc(c, xs, la).block_until_ready()
+    t_sc = _time(lambda: sc(c, xs, la).block_until_ready())
+    return [("micro_kernel_flash_ref", t_fa * 1e6, "S=1024 H=8 GQA4"),
+            ("micro_kernel_rmsnorm_ref", t_rn * 1e6, "8x1024x512"),
+            ("micro_kernel_ssd_ref", t_sc * 1e6, "S=512 H=4")]
+
+
+def optimizer_overhead_micro() -> list:
+    """Plan-time cost of the whole stratum compiler on the fused workload."""
+    from repro.agents import paper_workload_batches
+    _, batch, _ = next(iter(paper_workload_batches(n_rows=2000, cv_k=3)))
+    s = Stratum(memory_budget_bytes=1 << 30)
+    t = _time(lambda: s.compile_batch(
+        PipelineBatch(list(batch.sinks), list(batch.names))))
+    n = len(batch.sinks)
+    return [("micro_compile_batch", t * 1e6, f"pipelines={n}")]
+
+
+def rows() -> list:
+    return (cache_micro() + selection_micro() + kernel_micro()
+            + optimizer_overhead_micro())

@@ -1,0 +1,74 @@
+"""Benchmark harness entry point — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (mandated format).
+
+Sections:
+  * characterize — paper Fig. 2  (diff sizes, redundancy)
+  * e2e          — paper Fig. 6a (Base / Base_par / stratum speedup)
+  * ablation     — paper Fig. 6b (incremental optimizations)
+  * micro        — paper §6 components (cache, selection tiers, kernels)
+  * roofline     — §Roofline summary rows from the dry-run artifacts
+
+``python -m benchmarks.run [--sections a,b,...] [--rows N]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sections",
+                    default="characterize,micro,ablation,e2e,roofline")
+    ap.add_argument("--rows", type=int, default=20_000,
+                    help="dataset rows for the agentic workload")
+    args = ap.parse_args()
+    sections = args.sections.split(",")
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for section in sections:
+        try:
+            if section == "characterize":
+                from . import characterize as mod
+                rows = mod.rows()
+            elif section == "micro":
+                from . import micro as mod
+                rows = mod.rows()
+            elif section == "ablation":
+                from .ablation import run as run_ablation
+                rows = [(f"ablation_{label}", dt * 1e6,
+                         f"speedup={speedup:.2f}x")
+                        for label, dt, speedup, _ in run_ablation(
+                            n_rows=args.rows)]
+            elif section == "e2e":
+                from .e2e_agentic import run as run_e2e
+                r = run_e2e(n_rows=args.rows)
+                rows = [("e2e_base", r["base_s"] * 1e6, ""),
+                        ("e2e_base_par", r.get("base_par_s", 0) * 1e6,
+                         f"speedup={r.get('speedup_vs_base_par', 0):.1f}x"),
+                        ("e2e_stratum", r["stratum_s"] * 1e6,
+                         f"speedup={r['speedup_vs_base']:.1f}x"
+                         f" (paper: 16.6x)"),
+                        ("e2e_score_agreement", r["score_rel_diff"] * 1e6,
+                         "rel_diff_x1e-6")]
+            elif section == "roofline":
+                from . import roofline as mod
+                rows = mod.rows()
+            else:
+                raise KeyError(section)
+            for name, us, derived in rows:
+                print(f"{name},{us:.1f},{derived}")
+            sys.stdout.flush()
+        except Exception:
+            failures += 1
+            print(f"{section},ERROR,{traceback.format_exc(limit=1)!r}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

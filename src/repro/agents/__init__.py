@@ -1,0 +1,10 @@
+"""repro.agents — deterministic MLE-agent simulators driving stratum.
+
+No LLM runs in this container; the drivers replay seeded search policies
+whose emitted-pipeline statistics match the paper's workload characterization
+(Fig. 2) and its §6 evaluation workload.
+"""
+
+from .aide import AIDEAgent, PipelineSpec, paper_workload_batches
+
+__all__ = ["AIDEAgent", "PipelineSpec", "paper_workload_batches"]

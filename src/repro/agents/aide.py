@@ -1,0 +1,280 @@
+"""AIDE-style agentic pipeline search, simulated deterministically.
+
+The paper's §6 workload, verbatim:
+
+  iteration 1 — all combinations of two preprocessing strategies
+      (1) manual: imputation + StringEncoder + custom target encoder +
+          StandardScaler,
+      (2) TableVectorizer (automatic cleaning + one-hot for low-cardinality +
+          StringEncoder for high-cardinality),
+    with four models: Ridge, XGBoost, LightGBM, ElasticNet  → 8 pipelines.
+  iteration 2 — hyperparameter grid search on the best (preproc, model) pair.
+
+Beyond the paper workload, :class:`AIDEAgent` also implements the AIDE
+draft→debug→improve tree policy over :class:`PipelineSpec` mutations, so
+larger/broader searches can be generated for scaling experiments.  Each spec
+renders to pseudo-code (``to_code``) for the Fig. 2 diff-size statistics.
+"""
+
+from __future__ import annotations
+
+import difflib
+import random
+from dataclasses import dataclass, field, replace
+from typing import Any, Iterator, Optional, Sequence
+
+from ..core import PipelineBatch, annotate
+from ..core.dag import LazyOp, LazyRef, TRANSFORM
+from ..data.tabular import (CATEGORICAL, DATETIME, NUMERIC,
+                            UK_HOUSING_SCHEMA, feature_target_indices,
+                            schema_dict)
+from .. import tabular as T
+
+MODELS = ("ridge", "elasticnet", "gbt_xgboost", "gbt_lightgbm")
+PREPROCS = ("manual", "table_vectorizer")
+
+_MODEL_SPECS = {
+    "ridge": ("ridge_fit", {"alpha": 1.0}),
+    "elasticnet": ("elasticnet_fit",
+                   {"alpha": 0.001, "l1_ratio": 0.5, "iters": 100}),
+    "gbt_xgboost": ("gbt_fit", {"flavor": "xgboost", "n_trees": 20,
+                                "depth": 3, "learning_rate": 0.1}),
+    "gbt_lightgbm": ("gbt_fit", {"flavor": "lightgbm", "n_trees": 20,
+                                 "depth": 3, "learning_rate": 0.1}),
+}
+
+_GRIDS = {
+    "ridge": [{"alpha": a} for a in
+              (0.01, 0.03, 0.1, 0.3, 1.0, 3.0, 10.0, 30.0)],
+    "elasticnet": [{"alpha": a, "l1_ratio": r, "iters": 100}
+                   for a in (1e-4, 1e-3, 1e-2) for r in (0.2, 0.5, 0.8)],
+    "gbt_xgboost": [{"flavor": "xgboost", "n_trees": t, "depth": d,
+                     "learning_rate": lr}
+                    for t in (20, 40) for d in (2, 3) for lr in (0.05, 0.1)],
+    "gbt_lightgbm": [{"flavor": "lightgbm", "n_trees": t, "depth": d,
+                      "learning_rate": lr}
+                     for t in (20, 40) for d in (2, 3) for lr in (0.05, 0.1)],
+}
+
+
+@dataclass(frozen=True)
+class PipelineSpec:
+    """Declarative pipeline description — what the agent 'writes'."""
+    preproc: str = "manual"
+    model: str = "ridge"
+    params: tuple = ()            # sorted (key, value) hyperparams
+    cv_k: int = 3
+    n_rows: int = 30_000
+    data_seed: int = 0
+    seed: int = 7
+    log_target: bool = True
+    clip_outliers: bool = False
+    stage: str = "exploit"        # "explore" enables low-fidelity selection
+
+    def params_dict(self) -> dict:
+        base = dict(_MODEL_SPECS[self.model][1])
+        base.update(dict(self.params))
+        return base
+
+    def fit_name(self) -> str:
+        return _MODEL_SPECS[self.model][0]
+
+    # -- DAG construction --------------------------------------------------
+    def build(self) -> LazyRef:
+        feats, tgt = feature_target_indices()
+        raw = T.read("uk_housing", self.n_rows, seed=self.data_seed)
+        y = T.project(raw, [tgt])
+        X = T.project(raw, feats)
+        sd = schema_dict()
+        kinds, cards = sd["kinds"], sd["cards"]
+
+        if self.preproc == "table_vectorizer":
+            Xv = T.table_vectorizer(X, sd, feats)
+        else:
+            # manual: impute+scale numerics, target- & hash-encode town,
+            # one-hot the small categoricals, encode the date
+            num = [i for i, c in enumerate(feats) if kinds[c] == NUMERIC]
+            low = [i for i, c in enumerate(feats)
+                   if kinds[c] == CATEGORICAL and cards[c] <= 16]
+            high = [i for i, c in enumerate(feats)
+                    if kinds[c] == CATEGORICAL and cards[c] > 16]
+            dts = [i for i, c in enumerate(feats) if kinds[c] == DATETIME]
+            parts = []
+            xn = T.project(X, num)
+            if self.clip_outliers:
+                xn = LazyOp("clip_outliers", TRANSFORM, spec={"q": 0.01},
+                            inputs=(xn,)).out()
+            parts.append(T.scale(T.impute(xn)))
+            for i in high:
+                col = T.project(X, [i])
+                parts.append(T.target_encode(col, y, cards[feats[i]],
+                                             seed=self.seed))
+                parts.append(T.string_encode(col, dim=16, seed=self.seed))
+            if low:
+                parts.append(T.onehot(T.project(X, low),
+                                      [cards[feats[i]] for i in low]))
+            for i in dts:
+                parts.append(T.datetime_encode(T.project(X, [i])))
+            Xv = T.concat(parts)
+
+        if self.log_target:
+            y = LazyOp("log1p", TRANSFORM, inputs=(y,)).out()
+        est = {"name": self.fit_name(), **self.params_dict()}
+        sink = T.cv_score(Xv, y, est, k=self.cv_k, seed=self.seed)
+        if self.stage == "explore":
+            annotate(sink, stage="explore")
+        return sink
+
+    # -- pseudo-code rendering (Fig. 2 diff statistics) ---------------------
+    def to_code(self) -> list[str]:
+        lines = [
+            "import pandas as pd",
+            "from sklearn.pipeline import make_pipeline",
+            f"df = read_parquet('uk_housing', n_rows={self.n_rows})",
+            "y = df['price']",
+            "X = df.drop(columns=['price'])",
+        ]
+        if self.preproc == "table_vectorizer":
+            lines += [
+                "from skrub import TableVectorizer",
+                "vec = TableVectorizer()",
+                "Xv = vec.fit_transform(X)",
+            ]
+        else:
+            lines += [
+                "num = X.select_dtypes('number')",
+                "num = SimpleImputer().fit_transform(num)",
+                "num = StandardScaler().fit_transform(num)",
+            ]
+            if self.clip_outliers:
+                lines.append("num = clip_outliers(num, q=0.01)")
+            lines += [
+                "town_te = TargetEncoder().fit_transform(X['town'], y)",
+                "town_se = StringEncoder(dim=16).fit_transform(X['town'])",
+                "cats = OneHotEncoder().fit_transform(X[LOW_CARD])",
+                "dt = DatetimeEncoder().fit_transform(X['date'])",
+                "Xv = np.hstack([num, town_te, town_se, cats, dt])",
+            ]
+        if self.log_target:
+            lines.append("y = np.log1p(y)")
+        name, params = self.fit_name(), self.params_dict()
+        args = ", ".join(f"{k}={v}" for k, v in sorted(params.items()))
+        lines += [
+            f"model = {self.model}({args})",
+            f"scores = cross_val_score(model, Xv, y, cv={self.cv_k})",
+            "print(scores.mean())",
+        ]
+        return lines
+
+
+def diff_fraction(a: "PipelineSpec", b: "PipelineSpec") -> float:
+    """Fraction of changed lines between two specs' rendered code (Fig. 2a)."""
+    ca, cb = a.to_code(), b.to_code()
+    sm = difflib.SequenceMatcher(a=ca, b=cb)
+    same = sum(m.size for m in sm.get_matching_blocks())
+    total = max(len(ca), len(cb))
+    return 1.0 - same / total
+
+
+# ---------------------------------------------------------------------------
+# the paper's §6 two-iteration workload
+# ---------------------------------------------------------------------------
+
+def paper_workload_batches(n_rows: int = 30_000, cv_k: int = 3,
+                           seed: int = 7,
+                           best_hint: Optional[tuple] = None
+                           ) -> Iterator[tuple[str, PipelineBatch, dict]]:
+    """Yields (iteration_name, batch, context).  The caller runs iteration 1,
+    selects the best (preproc, model), and passes results back via ``send``
+    — implemented instead as a two-phase generator protocol: iteration 2 is
+    produced by :func:`second_iteration_batch` given iteration-1 scores."""
+    specs = [PipelineSpec(preproc=p, model=m, cv_k=cv_k, n_rows=n_rows,
+                          seed=seed)
+             for p in PREPROCS for m in MODELS]
+    names = [f"{s.preproc}+{s.model}" for s in specs]
+    batch = PipelineBatch([s.build() for s in specs], names)
+    yield "iteration1", batch, {"specs": dict(zip(names, specs))}
+
+
+def second_iteration_batch(best_spec: PipelineSpec,
+                           scores_by_name: Optional[dict] = None
+                           ) -> tuple[PipelineBatch, list[PipelineSpec]]:
+    """Grid search around the winning (preproc, model) pair (paper §6)."""
+    grid = _GRIDS[best_spec.model]
+    specs = [replace(best_spec, params=tuple(sorted(p.items())))
+             for p in grid]
+    names = [f"grid_{i}" for i in range(len(specs))]
+    return PipelineBatch([s.build() for s in specs], names), specs
+
+
+# ---------------------------------------------------------------------------
+# AIDE draft → debug → improve tree policy (generalized search)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class SearchNode:
+    spec: PipelineSpec
+    score: Optional[float] = None
+    parent: Optional[int] = None
+
+
+class AIDEAgent:
+    """Seeded AIDE-like policy: drafts diverse roots, then improves the best
+    leaf by small mutations (hyperparameter tweak ≫ stage swap ≫ model swap —
+    mutation sizes calibrated so ~50% of iterations change ≤16% of lines,
+    matching Fig. 2a)."""
+
+    def __init__(self, n_rows: int = 30_000, cv_k: int = 3, seed: int = 0,
+                 n_drafts: int = 4, explore_first: bool = True):
+        self.rng = random.Random(seed)
+        self.base = PipelineSpec(n_rows=n_rows, cv_k=cv_k, seed=7)
+        self.n_drafts = n_drafts
+        self.explore_first = explore_first
+        self.nodes: list[SearchNode] = []
+
+    def _draft(self) -> PipelineSpec:
+        return replace(
+            self.base,
+            preproc=self.rng.choice(PREPROCS),
+            model=self.rng.choice(MODELS),
+            stage="explore" if self.explore_first else "exploit",
+        )
+
+    def _mutate(self, spec: PipelineSpec) -> PipelineSpec:
+        r = self.rng.random()
+        if r < 0.55:   # small hyperparameter tweak (most common, small diff)
+            params = spec.params_dict()
+            key = self.rng.choice(sorted(params))
+            val = params[key]
+            if isinstance(val, (int, float)) and not isinstance(val, bool):
+                scale = self.rng.choice((0.3, 0.5, 2.0, 3.0))
+                newv = type(val)(val * scale) if val else val
+                params[key] = newv
+            return replace(spec, params=tuple(sorted(params.items())),
+                           stage="exploit")
+        if r < 0.75:   # toggle a preprocessing detail
+            return replace(spec, clip_outliers=not spec.clip_outliers,
+                           stage="exploit")
+        if r < 0.9:    # swap preprocessing strategy
+            other = [p for p in PREPROCS if p != spec.preproc][0]
+            return replace(spec, preproc=other, stage="exploit")
+        # full redraft (large diff)
+        return self._draft()
+
+    def propose(self, batch_size: int = 4) -> list[PipelineSpec]:
+        if not self.nodes:
+            return [self._draft() for _ in range(min(batch_size,
+                                                     self.n_drafts))]
+        scored = [n for n in self.nodes if n.score is not None]
+        scored.sort(key=lambda n: n.score)
+        best = scored[0].spec if scored else self._draft()
+        return [self._mutate(best) for _ in range(batch_size)]
+
+    def observe(self, specs: Sequence[PipelineSpec],
+                scores: Sequence[float]) -> None:
+        for sp, sc in zip(specs, scores):
+            self.nodes.append(SearchNode(spec=sp, score=float(sc)))
+
+    def best(self) -> Optional[SearchNode]:
+        scored = [n for n in self.nodes if n.score is not None]
+        return min(scored, key=lambda n: n.score) if scored else None

@@ -1,0 +1,7 @@
+"""repro.ckpt — sharded, atomic, async checkpointing with resharding."""
+
+from .checkpoint import (CheckpointManager, find_latest, load_checkpoint,
+                         save_checkpoint)
+
+__all__ = ["CheckpointManager", "save_checkpoint", "load_checkpoint",
+           "find_latest"]

@@ -1,0 +1,28 @@
+"""repro.core — stratum: execution infrastructure for agentic pipeline search.
+
+The paper's contribution (§4), as a composable library:
+
+* :mod:`repro.core.dag`         lazy operator DAG + content hashing
+* :mod:`repro.core.fusion`      pipeline-batch fusion, variant grouping
+* :mod:`repro.core.metadata`    metadata collection pass
+* :mod:`repro.core.rewrites`    CSE / read sharing / pushdown / folding
+* :mod:`repro.core.lowering`    composite-operator lowering (CV unrolling...)
+* :mod:`repro.core.selection`   tiered physical operator selection
+* :mod:`repro.core.scheduler`   memory-budgeted parallelization planning
+* :mod:`repro.core.cache`       intermediate reuse (RAM + disk spill)
+* :mod:`repro.core.runtime`     wave executor
+* :mod:`repro.core.api`         the Stratum session
+"""
+
+from .api import ALL_FEATURES, Stratum, StratumReport
+from .dag import (COMPOSITE, CONST, ESTIMATOR, EVAL, FILTER, GENERIC, LazyOp,
+                  LazyRef, PROJECT, SOURCE, TRANSFORM, count_ops, toposort)
+from .fusion import PipelineBatch, group_variants
+from .annotations import annotate
+
+__all__ = [
+    "ALL_FEATURES", "Stratum", "StratumReport", "LazyOp", "LazyRef",
+    "PipelineBatch", "group_variants", "annotate", "count_ops", "toposort",
+    "SOURCE", "TRANSFORM", "PROJECT", "FILTER", "ESTIMATOR", "EVAL",
+    "COMPOSITE", "CONST", "GENERIC",
+]

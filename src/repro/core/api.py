@@ -1,0 +1,149 @@
+"""The stratum session — the user/agent-facing entry point.
+
+Ties the whole §4 pipeline together::
+
+    batch → lowering → metadata → logical rewrites → metadata →
+    cache-candidate marking → operator selection → parallel plan → execute
+
+Every stage can be toggled via ``enable`` for the paper's ablation study
+(Fig. 6b): ``logical`` (CSE & friends), ``lowering``, ``selection`` (native
+backends), ``parallel`` (inter-op), ``cache`` (intermediate reuse).
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+from dataclasses import dataclass, field
+from typing import Any, Optional, Sequence
+
+from .cache import CacheStats, IntermediateCache, mark_cache_candidates
+from .dag import LazyOp, LazyRef, count_ops
+from .fusion import PipelineBatch
+from .lowering import lower
+from .metadata import collect_metadata
+from .rewrites import RewriteStats, optimize_logical
+from .runtime import RunReport, Runtime, execute_reference
+from .scheduler import Plan, SchedulerConfig, plan as make_plan
+from .selection import SelectionConfig, select
+
+ALL_FEATURES = ("logical", "lowering", "selection", "parallel", "cache")
+
+
+@dataclass
+class StratumReport:
+    rewrites: RewriteStats
+    plan: Plan
+    run: RunReport
+    cache: Optional[CacheStats]
+    ops_submitted: int
+    ops_planned: int
+    optimize_time_s: float
+
+    def summary(self) -> str:
+        lines = [
+            f"ops: {self.ops_submitted} submitted -> {self.ops_planned} planned",
+            f"rewrites: cse={self.rewrites.cse_merged} "
+            f"reads_shared={self.rewrites.reads_shared} "
+            f"folded={self.rewrites.constants_folded} "
+            f"pushed={self.rewrites.projections_pushed}",
+            f"waves: {self.run.waves} inter_op={self.plan.inter_op_parallelism}",
+            f"executed: {self.run.ops_executed} "
+            f"cached: {self.run.ops_from_cache} "
+            f"backends: {self.run.per_backend}",
+            f"wall: {self.run.wall_time_s:.4f}s "
+            f"(optimize {self.optimize_time_s:.4f}s)",
+        ]
+        return "\n".join(lines)
+
+
+class Stratum:
+    """A stratum execution session (one per agent / tenant)."""
+
+    def __init__(self,
+                 memory_budget_bytes: int = 8 << 30,
+                 cache_fraction: float = 0.10,   # paper default
+                 spill_dir: Optional[str] = None,
+                 platform: str = "",
+                 enable: Sequence[str] = ALL_FEATURES,
+                 hardware_threads: int = 0,
+                 jit_cache_dir: Optional[str] = None):
+        unknown = set(enable) - set(ALL_FEATURES)
+        if unknown:
+            raise ValueError(f"unknown features {unknown}")
+        if jit_cache_dir:
+            # persistent XLA compilation cache: a long-lived stratum service
+            # compiles each (op, shape) once across sessions/processes —
+            # the analogue of the paper's precompiled Rust kernels
+            import jax
+            jax.config.update("jax_compilation_cache_dir", jit_cache_dir)
+            jax.config.update("jax_persistent_cache_min_compile_time_secs",
+                              0.1)
+        self.enable = tuple(enable)
+        self.memory_budget_bytes = memory_budget_bytes
+        self.platform = platform
+        self.hardware_threads = hardware_threads
+        self.cache: Optional[IntermediateCache] = None
+        if "cache" in enable:
+            self.cache = IntermediateCache(
+                budget_bytes=int(memory_budget_bytes * cache_fraction),
+                spill_dir=spill_dir)
+
+    # ------------------------------------------------------------------
+    def compile_batch(self, batch: PipelineBatch):
+        """Optimization-only path (for tests and plan inspection)."""
+        t0 = time.perf_counter()
+        sinks = batch.fused_sinks()
+        ops_submitted = count_ops(sinks)
+
+        if "lowering" in self.enable:
+            sinks = lower(sinks)
+        collect_metadata(sinks)
+
+        if "logical" in self.enable:
+            sinks, rw = optimize_logical(sinks, execute_reference)
+        else:
+            rw = RewriteStats(ops_before=ops_submitted,
+                              ops_after=count_ops(sinks))
+        collect_metadata(sinks)
+
+        candidates: set = set()
+        if self.cache is not None:
+            candidates = mark_cache_candidates(sinks)
+
+        allowed = (("python", "jax", "pallas") if "selection" in self.enable
+                   else ("python",))
+        sel = select(sinks, SelectionConfig(
+            platform=self.platform,
+            memory_budget_bytes=self.memory_budget_bytes,
+            allowed_backends=allowed))
+
+        p = make_plan(sinks, sel, SchedulerConfig(
+            memory_budget_bytes=self.memory_budget_bytes,
+            hardware_threads=self.hardware_threads,
+            enable_inter_op="parallel" in self.enable))
+
+        opt_time = time.perf_counter() - t0
+        return sinks, sel, p, candidates, rw, ops_submitted, opt_time
+
+    def run_batch(self, batch: PipelineBatch
+                  ) -> tuple[dict[str, Any], StratumReport]:
+        (sinks, sel, p, candidates, rw, ops_submitted,
+         opt_time) = self.compile_batch(batch)
+        rt = Runtime(cache=self.cache, cache_candidates=candidates,
+                     parallel="parallel" in self.enable)
+        results, run = rt.execute(sinks, p, sel)
+        report = StratumReport(
+            rewrites=rw, plan=p, run=run,
+            cache=self.cache.stats if self.cache else None,
+            ops_submitted=ops_submitted, ops_planned=p.n_ops,
+            optimize_time_s=opt_time)
+        # remap results onto the (possibly rewritten) sink order
+        named = dict(zip(batch.names, results))
+        return named, report
+
+    # convenience: single pipeline
+    def run(self, sink: LazyRef, name: str = "pipeline_0"):
+        results, report = self.run_batch(PipelineBatch([sink], [name]))
+        return results[name], report

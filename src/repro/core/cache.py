@@ -1,0 +1,179 @@
+"""Reuse of intermediates (paper §4.3).
+
+A hash map from operator signatures (content hash of input hashes + op spec +
+seed) to materialized outputs, with
+
+* a fixed memory fraction for in-RAM entries (paper default: 10%),
+* LRU eviction to an on-disk spill directory (paper uses Parquet; we use
+  ``.npz`` since outputs are arrays/array-trees),
+* lazy reload on hit across agent iterations (paper: "the hash map is
+  reloaded and intermediates are fetched lazily"),
+* speculative cache-candidate marking by the optimizer (expensive
+  preprocessing ops), so cheap ops don't pollute the budget.
+
+Non-deterministic, unseeded ops are excluded (``LazyOp.cacheable``).
+"""
+
+from __future__ import annotations
+
+import os
+import pickle
+import threading
+import time
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any, Optional, Sequence
+
+import numpy as np
+
+from .dag import LazyOp, LazyRef, toposort
+
+
+def _nbytes(value: Any) -> int:
+    if isinstance(value, (tuple, list)):
+        return sum(_nbytes(v) for v in value)
+    if isinstance(value, dict):
+        return sum(_nbytes(v) for v in value.values())
+    if hasattr(value, "nbytes"):
+        return int(value.nbytes)
+    return 64
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    disk_hits: int = 0
+    evictions: int = 0
+    inserted: int = 0
+    bytes_in_ram: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class IntermediateCache:
+    """Thread-safe signature→outputs cache with RAM budget + disk spill."""
+
+    def __init__(self, budget_bytes: int, spill_dir: Optional[str] = None):
+        self.budget_bytes = int(budget_bytes)
+        self.spill_dir = spill_dir
+        self._ram: OrderedDict[str, tuple] = OrderedDict()
+        self._sizes: dict[str, int] = {}
+        self._on_disk: set[str] = set()
+        self._lock = threading.Lock()
+        self.stats = CacheStats()
+        if spill_dir:
+            os.makedirs(spill_dir, exist_ok=True)
+            self._load_disk_index()
+
+    # -- index persistence across agent iterations / process restarts -------
+    def _disk_path(self, sig: str) -> str:
+        assert self.spill_dir is not None
+        return os.path.join(self.spill_dir, f"{sig}.pkl")
+
+    def _load_disk_index(self) -> None:
+        for name in os.listdir(self.spill_dir):
+            if name.endswith(".pkl"):
+                self._on_disk.add(name[:-4])
+
+    # -- core protocol -------------------------------------------------------
+    def get(self, sig: str) -> Optional[tuple]:
+        with self._lock:
+            if sig in self._ram:
+                self._ram.move_to_end(sig)
+                self.stats.hits += 1
+                return self._ram[sig]
+        if self.spill_dir and sig in self._on_disk:
+            try:
+                with open(self._disk_path(sig), "rb") as f:
+                    value = pickle.load(f)
+            except Exception:
+                with self._lock:
+                    self._on_disk.discard(sig)
+                    self.stats.misses += 1
+                return None
+            with self._lock:
+                self.stats.hits += 1
+                self.stats.disk_hits += 1
+            self._insert_ram(sig, value)
+            return value
+        with self._lock:
+            self.stats.misses += 1
+        return None
+
+    def put(self, sig: str, outputs: tuple, spill: bool = True) -> None:
+        self._insert_ram(sig, outputs)
+        with self._lock:
+            self.stats.inserted += 1
+        if spill and self.spill_dir:
+            self._spill(sig, outputs)
+
+    def _insert_ram(self, sig: str, outputs: tuple) -> None:
+        size = _nbytes(outputs)
+        if size > self.budget_bytes:
+            return  # larger than the whole budget: disk-only
+        with self._lock:
+            self._ram[sig] = outputs
+            self._ram.move_to_end(sig)
+            self._sizes[sig] = size
+            self.stats.bytes_in_ram = sum(self._sizes[s] for s in self._ram)
+            while self.stats.bytes_in_ram > self.budget_bytes and len(self._ram) > 1:
+                old_sig, old_val = self._ram.popitem(last=False)
+                self.stats.bytes_in_ram -= self._sizes.pop(old_sig)
+                self.stats.evictions += 1
+                if self.spill_dir and old_sig not in self._on_disk:
+                    self._spill(old_sig, old_val)
+
+    def _spill(self, sig: str, outputs: tuple) -> None:
+        tmp = self._disk_path(sig) + f".tmp{os.getpid()}"
+        try:
+            host = tuple(np.asarray(o) if hasattr(o, "shape") else o
+                         for o in outputs)
+            with open(tmp, "wb") as f:
+                pickle.dump(host, f, protocol=pickle.HIGHEST_PROTOCOL)
+            os.replace(tmp, self._disk_path(sig))  # atomic
+            with self._lock:
+                self._on_disk.add(sig)
+        except Exception:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+
+    def clear_ram(self) -> None:
+        """Simulate an agent-iteration boundary / process restart."""
+        with self._lock:
+            self._ram.clear()
+            self._sizes.clear()
+            self.stats.bytes_in_ram = 0
+
+    def __contains__(self, sig: str) -> bool:
+        with self._lock:
+            if sig in self._ram:
+                return True
+        return bool(self.spill_dir) and sig in self._on_disk
+
+
+# ---------------------------------------------------------------------------
+# speculative cache-candidate marking (paper: "the optimizer speculatively
+# marks selected operators (e.g. expensive preprocessing) as cache candidates")
+# ---------------------------------------------------------------------------
+
+def mark_cache_candidates(sinks: Sequence[LazyRef],
+                          min_cost_s: float = 1e-4,
+                          min_consumers: int = 1) -> set[str]:
+    """Signatures worth materializing: deterministic-or-seeded ops whose
+    estimated recompute cost exceeds ``min_cost_s`` (based on collected
+    metadata), preferring ops with fanout (shared across pipelines)."""
+    from .dag import consumers as _consumers
+    order = toposort(sinks)
+    fanout = _consumers(order)
+    marked: set[str] = set()
+    for op in order:
+        if not op.cacheable or op.meta is None:
+            continue
+        est = op.meta.flops / 2e9 + op.meta.out_bytes / 2e9
+        if est >= min_cost_s and len(fanout.get(op.uid, ())) >= min_consumers:
+            marked.add(op.signature)
+    return marked

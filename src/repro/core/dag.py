@@ -1,0 +1,230 @@
+"""Lazy operator DAG — stratum's declarative abstraction (paper §4.1).
+
+Every computation in a pipeline is a :class:`LazyOp` node; edges are data
+dependencies.  The DAG is control-flow free and lazily evaluated, mirroring
+skrub's DataOps.  Nodes carry
+
+* ``op_name``    — logical operator identity ("read", "standard_scaler", ...)
+* ``op_class``   — broad category used by the optimizer (SOURCE/TRANSFORM/...)
+* ``spec``       — hashable operator specification (hyperparameters)
+* ``inputs``     — upstream :class:`LazyRef` handles
+* ``seed``       — explicit randomness; ops without a seed that declare
+                   themselves non-deterministic are excluded from caching
+* ``signature``  — content hash H(input signatures, op_name, spec, seed),
+                   cached on the node for O(1) equality (paper §4.3 Reuse).
+
+The signature doubles as the cache key and the CSE equivalence class.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterable, Mapping, Optional, Sequence
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# operator categories (paper §4.2 "operator type" metadata)
+# ---------------------------------------------------------------------------
+
+SOURCE = "source"          # data ingestion (read sharing applies)
+TRANSFORM = "transform"    # stateless or fitted row/col transforms
+PROJECT = "project"        # column selection (pushdown applies)
+FILTER = "filter"          # row predicate (pushdown applies)
+ESTIMATOR = "estimator"    # fit/predict model ops
+EVAL = "eval"              # metrics / scoring
+COMPOSITE = "composite"    # lowered by lowering.py (cv, table_vectorizer, ...)
+CONST = "const"            # literal payloads (constant folding applies)
+GENERIC = "generic"        # black-box UDF — optimizer must preserve as-is
+
+OP_CLASSES = (SOURCE, TRANSFORM, PROJECT, FILTER, ESTIMATOR, EVAL, COMPOSITE,
+              CONST, GENERIC)
+
+_uid = itertools.count()
+
+
+def _hash_payload(value: Any) -> str:
+    """Stable content hash for spec payloads and constant data."""
+    h = hashlib.blake2b(digest_size=16)
+
+    def feed(v: Any) -> None:
+        if isinstance(v, np.ndarray):
+            h.update(b"nd")
+            h.update(str(v.dtype).encode())
+            h.update(str(v.shape).encode())
+            h.update(np.ascontiguousarray(v).tobytes())
+        elif isinstance(v, (list, tuple)):
+            h.update(b"seq")
+            for item in v:
+                feed(item)
+        elif isinstance(v, Mapping):
+            h.update(b"map")
+            for k in sorted(v):
+                h.update(str(k).encode())
+                feed(v[k])
+        elif isinstance(v, (str, bytes)):
+            h.update(b"s")
+            h.update(v.encode() if isinstance(v, str) else v)
+        elif isinstance(v, (int, float, bool, complex)) or v is None:
+            h.update(repr(v).encode())
+        elif hasattr(v, "tobytes"):  # jax arrays and friends
+            h.update(b"arr")
+            h.update(np.asarray(v).tobytes())
+        else:
+            # Fall back to repr; GENERIC ops should pass identifying specs.
+            h.update(repr(v).encode())
+
+    feed(value)
+    return h.hexdigest()
+
+
+@dataclass(frozen=True)
+class LazyRef:
+    """A handle to output ``index`` of ``op`` — the DAG's edge type."""
+
+    op: "LazyOp"
+    index: int = 0
+
+    @property
+    def signature(self) -> str:
+        return f"{self.op.signature}:{self.index}"
+
+
+@dataclass(eq=False)
+class LazyOp:
+    op_name: str
+    op_class: str
+    spec: Mapping[str, Any] = field(default_factory=dict)
+    inputs: tuple = ()  # tuple[LazyRef, ...]
+    seed: Optional[int] = None
+    n_outputs: int = 1
+    deterministic: bool = True
+    annotations: Mapping[str, Any] = field(default_factory=dict)  # §3 co-design
+    uid: int = field(default_factory=lambda: next(_uid))
+    # filled by the metadata pass (metadata.py)
+    meta: Optional[Any] = None
+    _signature: Optional[str] = field(default=None, repr=False)
+
+    def __post_init__(self) -> None:
+        if self.op_class not in OP_CLASSES:
+            raise ValueError(f"unknown op_class {self.op_class!r}")
+        for ref in self.inputs:
+            if not isinstance(ref, LazyRef):
+                raise TypeError(f"inputs must be LazyRef, got {type(ref)!r}")
+
+    # -- content hashing (paper §4.3: hash from input hashes + spec + seed) --
+    @property
+    def signature(self) -> str:
+        if self._signature is None:
+            h = hashlib.blake2b(digest_size=16)
+            h.update(self.op_name.encode())
+            h.update(self.op_class.encode())
+            h.update(_hash_payload(self.spec).encode())
+            h.update(repr(self.seed).encode())
+            if not self.deterministic and self.seed is None:
+                # unseeded non-determinism: unique signature → never CSE'd/cached
+                h.update(str(self.uid).encode())
+            for ref in self.inputs:
+                h.update(ref.signature.encode())
+            object.__setattr__(self, "_signature", h.hexdigest())
+        return self._signature
+
+    @property
+    def cacheable(self) -> bool:
+        return self.deterministic or self.seed is not None
+
+    def out(self, index: int = 0) -> LazyRef:
+        if not (0 <= index < self.n_outputs):
+            raise IndexError(f"{self.op_name} has {self.n_outputs} outputs")
+        return LazyRef(self, index)
+
+    def with_inputs(self, inputs: Sequence[LazyRef]) -> "LazyOp":
+        """Copy this op with new inputs (used by rewrites)."""
+        return LazyOp(
+            op_name=self.op_name, op_class=self.op_class, spec=dict(self.spec),
+            inputs=tuple(inputs), seed=self.seed, n_outputs=self.n_outputs,
+            deterministic=self.deterministic, annotations=dict(self.annotations),
+        )
+
+    def __repr__(self) -> str:  # compact for DAG dumps
+        ins = ",".join(str(r.op.uid) for r in self.inputs)
+        return f"<{self.op_name}#{self.uid}({ins})>"
+
+
+# ---------------------------------------------------------------------------
+# graph utilities
+# ---------------------------------------------------------------------------
+
+def toposort(sinks: Iterable[LazyRef]) -> list[LazyOp]:
+    """Deterministic topological order of all ops reachable from ``sinks``."""
+    order: list[LazyOp] = []
+    state: dict[int, int] = {}  # uid -> 0 visiting / 1 done
+    stack: list[tuple[LazyOp, bool]] = [(r.op, False) for r in sinks]
+    while stack:
+        op, processed = stack.pop()
+        if processed:
+            state[op.uid] = 1
+            order.append(op)
+            continue
+        if op.uid in state:
+            if state[op.uid] == 0:
+                raise ValueError("cycle detected in pipeline DAG")
+            continue
+        state[op.uid] = 0
+        stack.append((op, True))
+        for ref in reversed(op.inputs):
+            if ref.op.uid not in state:
+                stack.append((ref.op, False))
+            elif state[ref.op.uid] == 0:
+                raise ValueError("cycle detected in pipeline DAG")
+    return order
+
+
+def consumers(ops: Sequence[LazyOp]) -> dict[int, list[LazyOp]]:
+    out: dict[int, list[LazyOp]] = {op.uid: [] for op in ops}
+    for op in ops:
+        for ref in op.inputs:
+            out.setdefault(ref.op.uid, []).append(op)
+    return out
+
+
+def rebuild(sinks: Sequence[LazyRef],
+            replace: Callable[[LazyOp, tuple], Optional[LazyOp]]) -> list[LazyRef]:
+    """Bottom-up DAG reconstruction.
+
+    ``replace(op, new_inputs)`` returns a replacement op (or None to keep a
+    copy with ``new_inputs``).  Node identity is memoized per uid so shared
+    subgraphs stay shared.  Returns sinks pointing into the new DAG.
+    """
+    memo: dict[int, LazyOp] = {}
+
+    for op in toposort(sinks):
+        new_inputs = tuple(LazyRef(memo[r.op.uid], r.index) for r in op.inputs)
+        new_op = replace(op, new_inputs)
+        if new_op is None:
+            if (all(a.op is b.op and a.index == b.index
+                    for a, b in zip(new_inputs, op.inputs))
+                    and len(new_inputs) == len(op.inputs)):
+                new_op = op  # untouched — keep identity (and signature cache)
+            else:
+                new_op = op.with_inputs(new_inputs)
+        memo[op.uid] = new_op
+    return [LazyRef(memo[r.op.uid], r.index) for r in sinks]
+
+
+def count_ops(sinks: Sequence[LazyRef]) -> int:
+    return len(toposort(sinks))
+
+
+def graphviz(sinks: Sequence[LazyRef]) -> str:
+    """Debug dump (dot format)."""
+    lines = ["digraph stratum {"]
+    for op in toposort(sinks):
+        label = f"{op.op_name}\\n{op.op_class}"
+        lines.append(f'  n{op.uid} [label="{label}"];')
+        for ref in op.inputs:
+            lines.append(f"  n{ref.op.uid} -> n{op.uid};")
+    lines.append("}")
+    return "\n".join(lines)

@@ -1,0 +1,190 @@
+"""Execution runtime (paper §4.2–4.3).
+
+Executes a scheduler :class:`Plan` wave by wave:
+
+* cache probe before execution, insert-after for marked candidates (§4.3),
+* physical impl resolved from the selection table (late binding, §4.2),
+* inter-operator parallelism via a bounded thread pool — the CPU analogue of
+  the paper's GIL-releasing concurrent kernels; jax-tier impls are jitted and
+  dispatch asynchronously, so overlapping waves also overlaps XLA execution,
+* liveness-driven freeing of intermediates (memory management).
+
+``Base`` / ``Base_par`` executors for the paper's baselines live in
+benchmarks (they bypass the optimizer entirely).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Sequence
+
+from .cache import IntermediateCache
+from .dag import CONST, LazyOp, LazyRef
+from .scheduler import Plan
+from .selection import PhysicalImpl, reference_impl, vmap_group_for
+
+
+@dataclass
+class RunReport:
+    wall_time_s: float = 0.0
+    ops_executed: int = 0
+    ops_from_cache: int = 0
+    waves: int = 0
+    per_backend: dict = field(default_factory=dict)
+
+
+class ExecutionError(RuntimeError):
+    def __init__(self, op: LazyOp, cause: Exception):
+        super().__init__(f"executing {op.op_name}#{op.uid}: {cause!r}")
+        self.op = op
+        self.cause = cause
+
+
+def execute_reference(op: LazyOp, inputs: Sequence[Any]) -> tuple:
+    """Reference evaluator (used by constant folding and as fallback)."""
+    if op.op_class == CONST:
+        return (op.spec["value"],)
+    impl = reference_impl(op.op_name)
+    if impl is None:
+        fn = op.spec.get("fn")
+        if callable(fn):
+            out = fn(*inputs, **dict(op.spec.get("kwargs", {})))
+            return out if isinstance(out, tuple) else (out,)
+        raise KeyError(f"no implementation registered for {op.op_name!r}")
+    return impl.fn(op, inputs)
+
+
+class Runtime:
+    def __init__(self,
+                 cache: Optional[IntermediateCache] = None,
+                 cache_candidates: Optional[set] = None,
+                 parallel: bool = True):
+        self.cache = cache
+        self.cache_candidates = cache_candidates or set()
+        self.parallel = parallel
+        self._values: dict[str, Any] = {}      # "sig:index" -> value
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------------
+    def _resolve_impl(self, op: LazyOp,
+                      selection: dict[str, PhysicalImpl]
+                      ) -> Callable[[LazyOp, Sequence[Any]], tuple]:
+        impl = selection.get(op.signature)
+        if impl is not None:
+            return impl.fn
+        return lambda o, ins: execute_reference(o, ins)
+
+    def _gather_inputs(self, op: LazyOp) -> list:
+        with self._lock:
+            return [self._values[r.signature] for r in op.inputs]
+
+    def _store(self, op: LazyOp, outputs: tuple) -> None:
+        with self._lock:
+            for i, v in enumerate(outputs):
+                self._values[f"{op.signature}:{i}"] = v
+
+    def _run_op(self, op: LazyOp, selection: dict, report: RunReport) -> None:
+        sig = op.signature
+        if self.cache is not None and op.cacheable:
+            hit = self.cache.get(sig)
+            if hit is not None:
+                self._store(op, hit)
+                with self._lock:
+                    report.ops_from_cache += 1
+                return
+        inputs = self._gather_inputs(op)
+        fn = self._resolve_impl(op, selection)
+        try:
+            outputs = fn(op, inputs)
+        except Exception as e:  # noqa: BLE001 — surfaced with op context
+            raise ExecutionError(op, e) from e
+        if not isinstance(outputs, tuple):
+            outputs = (outputs,)
+        if len(outputs) != op.n_outputs:
+            raise ExecutionError(
+                op, ValueError(f"impl returned {len(outputs)} outputs, "
+                               f"declared {op.n_outputs}"))
+        self._store(op, outputs)
+        impl = selection.get(sig)
+        backend = impl.backend if impl else "ref"
+        with self._lock:
+            report.ops_executed += 1
+            report.per_backend[backend] = report.per_backend.get(backend, 0) + 1
+        if (self.cache is not None and op.cacheable
+                and sig in self.cache_candidates):
+            self.cache.put(sig, outputs)
+
+    # -- variant batching (§Perf H3.4) ---------------------------------
+    def _batch_variants(self, wave_ops: list, selection: dict,
+                        report: RunReport) -> list:
+        """Execute homogeneous hyperparameter-variant groups as one vmapped
+        call; returns the ops still needing individual execution."""
+        groups: dict[tuple, list] = {}
+        rest = []
+        for op in wave_ops:
+            reg = vmap_group_for(op.op_name)
+            impl = selection.get(op.signature)
+            cached = (self.cache is not None and op.cacheable
+                      and op.signature in self.cache)
+            if reg is None or impl is None or impl.backend != "jax" \
+                    or not impl.vmappable or cached:
+                rest.append(op)
+                continue
+            key_fn, _ = reg
+            groups.setdefault((op.op_name, key_fn(op)), []).append(op)
+        for (op_name, _), ops_ in groups.items():
+            if len(ops_) < 2:
+                rest.extend(ops_)
+                continue
+            _, batch_fn = vmap_group_for(op_name)
+            inputs = self._gather_inputs(ops_[0])
+            outs = batch_fn(ops_, inputs)
+            for op, out in zip(ops_, outs):
+                self._store(op, out)
+                if (self.cache is not None and op.cacheable
+                        and op.signature in self.cache_candidates):
+                    self.cache.put(op.signature, out)
+            with self._lock:
+                report.ops_executed += len(ops_)
+                report.per_backend["jax-vmap"] = \
+                    report.per_backend.get("jax-vmap", 0) + len(ops_)
+        return rest
+
+    # ------------------------------------------------------------------
+    def execute(self, sinks: Sequence[LazyRef], plan: Plan,
+                selection: dict[str, PhysicalImpl]) -> tuple[list, RunReport]:
+        report = RunReport()
+        t0 = time.perf_counter()
+        pool: Optional[ThreadPoolExecutor] = None
+        if self.parallel and plan.inter_op_parallelism > 1:
+            pool = ThreadPoolExecutor(max_workers=plan.inter_op_parallelism)
+        try:
+            for wave in plan.waves:
+                report.waves += 1
+                todo = self._batch_variants(list(wave.ops), selection,
+                                            report)
+                if pool is not None and len(todo) > 1:
+                    futures = [pool.submit(self._run_op, op, selection, report)
+                               for op in todo]
+                    for f in futures:
+                        f.result()
+                else:
+                    for op in todo:
+                        self._run_op(op, selection, report)
+                # free dead intermediates
+                with self._lock:
+                    for sig in wave.free_after:
+                        for key in [k for k in self._values
+                                    if k.startswith(sig + ":")
+                                    or k == sig]:
+                            del self._values[key]
+        finally:
+            if pool is not None:
+                pool.shutdown(wait=False)
+        with self._lock:
+            results = [self._values[r.signature] for r in sinks]
+        report.wall_time_s = time.perf_counter() - t0
+        return results, report

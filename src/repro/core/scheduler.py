@@ -1,0 +1,167 @@
+"""Parallelization planning (paper §4.3).
+
+The planner traverses the DAG and groups ready operators into *waves*:
+sets of mutually independent ops that execute concurrently.  A wave is
+admitted greedily under a worst-case memory budget (sum of each op's
+backend-inflated working set + live intermediates), which is the paper's
+"evaluates plans under worst-case memory budgets, selects a plan that
+minimizes execution time subject to memory constraints".
+
+Degree-of-parallelism planning (paper: avoid oversubscription from nested
+parallelism): each op's *intra*-op parallelism is its backend's internal
+parallelism (XLA/Rayon analogue), so the planner caps the number of
+concurrently executing ops such that
+``inter_op_parallelism × intra_op_threads ≤ hardware_threads`` — on the TPU
+path inter-op parallelism instead maps to fusing a wave into one XLA program
+and letting the XLA scheduler overlap it.
+
+Liveness-based freeing: the planner emits, per wave, the set of intermediate
+signatures whose last consumer has now run, so the runtime can drop them
+(memory management, paper §3).
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+from .dag import LazyOp, LazyRef, consumers, toposort
+from .selection import PhysicalImpl
+
+
+@dataclass
+class Wave:
+    ops: list            # list[LazyOp], mutually independent
+    est_mem: int = 0
+    est_time: float = 0.0
+    free_after: list = field(default_factory=list)  # signatures now dead
+
+
+@dataclass
+class Plan:
+    waves: list          # list[Wave]
+    order: list          # full topo order (for sequential modes)
+    inter_op_parallelism: int = 1
+    intra_op_threads: int = 1
+    est_peak_mem: int = 0
+
+    @property
+    def n_ops(self) -> int:
+        return sum(len(w.ops) for w in self.waves)
+
+
+@dataclass
+class SchedulerConfig:
+    memory_budget_bytes: int = 8 << 30
+    hardware_threads: int = 0           # 0 → os.cpu_count()
+    max_wave_ops: int = 64
+    enable_inter_op: bool = True
+
+
+def plan(sinks: Sequence[LazyRef],
+         selection: dict[str, PhysicalImpl],
+         config: SchedulerConfig) -> Plan:
+    order = toposort(sinks)
+    fanout = consumers(order)
+    sink_sigs = {r.signature for r in sinks}
+
+    threads = config.hardware_threads or (os.cpu_count() or 1)
+
+    # remaining-consumer counts for liveness — aggregated per SIGNATURE:
+    # without CSE the same signature may appear as several distinct ops
+    # (the runtime stores values by signature), so a value is dead only
+    # when *every* op sharing the signature has been fully consumed
+    remaining: dict[str, int] = {}
+    for op in order:
+        remaining[op.signature] = (remaining.get(op.signature, 0)
+                                   + len(fanout.get(op.uid, ())))
+
+    indeg: dict[int, int] = {}
+    dependents: dict[int, list[LazyOp]] = {}
+    for op in order:
+        uniq_parents = {r.op.uid for r in op.inputs}
+        indeg[op.uid] = len(uniq_parents)
+        for pu in uniq_parents:
+            dependents.setdefault(pu, []).append(op)
+
+    by_sig = {op.signature: op for op in order}
+    ready = [op for op in order if indeg[op.uid] == 0]
+
+    def op_mem(op: LazyOp) -> int:
+        impl = selection.get(op.signature)
+        if impl is not None:
+            return impl.est_mem(op)
+        return op.meta.peak_bytes if op.meta else 0
+
+    def op_time(op: LazyOp) -> float:
+        impl = selection.get(op.signature)
+        if impl is not None:
+            return impl.est_time(op)
+        return 1e-6
+
+    waves: list[Wave] = []
+    live_bytes = 0
+    peak = 0
+    scheduled: set[int] = set()
+
+    while ready:
+        # longest-estimated-time first within a wave → better packing
+        ready.sort(key=op_time, reverse=True)
+        wave_ops: list[LazyOp] = []
+        wave_mem = 0
+        deferred: list[LazyOp] = []
+        limit = config.max_wave_ops if config.enable_inter_op else 1
+        for op in ready:
+            m = op_mem(op)
+            if wave_ops and (len(wave_ops) >= limit
+                             or live_bytes + wave_mem + m
+                             > config.memory_budget_bytes):
+                deferred.append(op)
+                continue
+            wave_ops.append(op)
+            wave_mem += m
+        peak = max(peak, live_bytes + wave_mem)
+
+        wave = Wave(ops=wave_ops, est_mem=wave_mem,
+                    est_time=max((op_time(o) for o in wave_ops), default=0.0))
+
+        # retire consumed intermediates
+        freed: list[str] = []
+        for op in wave_ops:
+            scheduled.add(op.uid)
+            for ref in op.inputs:
+                sig = ref.op.signature
+                remaining[sig] -= 1
+                if remaining[sig] == 0 and not any(
+                        s.startswith(sig) for s in sink_sigs):
+                    freed.append(sig)
+        wave.free_after = freed
+
+        live_bytes += sum(op.meta.out_bytes if op.meta else 0
+                          for op in wave_ops)
+        for sig in freed:
+            freed_op = by_sig[sig]
+            live_bytes -= freed_op.meta.out_bytes if freed_op.meta else 0
+        live_bytes = max(live_bytes, 0)
+
+        waves.append(wave)
+
+        next_ready = list(deferred)
+        for op in wave_ops:
+            for dep in dependents.get(op.uid, ()):
+                indeg[dep.uid] -= 1
+                if indeg[dep.uid] == 0:
+                    next_ready.append(dep)
+        ready = next_ready
+
+    if len(scheduled) != len(order):
+        raise RuntimeError("scheduler failed to plan all ops (cycle?)")
+
+    # degree-of-parallelism: keep inter × intra ≤ hardware threads
+    widest = max((len(w.ops) for w in waves), default=1)
+    inter = min(widest, threads) if config.enable_inter_op else 1
+    intra = max(1, threads // max(inter, 1))
+
+    return Plan(waves=waves, order=order, inter_op_parallelism=inter,
+                intra_op_threads=intra, est_peak_mem=peak)

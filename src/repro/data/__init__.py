@@ -1,0 +1,1 @@
+"""repro.data — data substrates: synthetic tabular lake + LM token pipeline."""

@@ -1,0 +1,5 @@
+"""repro.distributed — mesh policy, sharding rules, collective helpers."""
+
+from .context import ShardingContext, current_context, set_context, shard
+
+__all__ = ["ShardingContext", "current_context", "set_context", "shard"]

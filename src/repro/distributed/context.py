@@ -1,0 +1,66 @@
+"""Activation-sharding context.
+
+Model code is written once, sharding-agnostic; layers annotate activations
+with *logical* names (``"act_btd"``, ``"kv_cache"``, ...).  When a
+:class:`ShardingContext` is active (set by the launcher / dry-run), the
+annotation becomes ``jax.lax.with_sharding_constraint`` with the policy's
+PartitionSpec; with no context it is a no-op (CPU tests).
+
+This is the standard logical-axis-rules pattern (MaxText/T5X) reduced to
+its essentials.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+@dataclass
+class ShardingContext:
+    mesh: Mesh
+    rules: dict                    # logical name -> PartitionSpec
+    ep_axis: Optional[str] = None  # expert-parallel mesh axis (MoE shard_map)
+    sp_axis: Optional[str] = None  # sequence-parallel axis (decode KV shards)
+    dp_axes: tuple = ()            # batch axes (MoE local-dispatch shard_map
+                                   # when EP is off — see models/moe.py)
+
+    def spec(self, name: str) -> Optional[P]:
+        return self.rules.get(name)
+
+
+def set_context(ctx: Optional[ShardingContext]) -> None:
+    _state.ctx = ctx
+
+
+def current_context() -> Optional[ShardingContext]:
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_context(ctx: ShardingContext):
+    prev = current_context()
+    set_context(ctx)
+    try:
+        yield ctx
+    finally:
+        set_context(prev)
+
+
+def shard(x, name: str):
+    """Annotate activation ``x`` with the logical sharding ``name``."""
+    ctx = current_context()
+    if ctx is None:
+        return x
+    spec = ctx.spec(name)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec))

@@ -1,0 +1,266 @@
+"""Sharding policy: maps (ModelConfig, ShapeConfig, Mesh) → parameter
+PartitionSpecs, activation rules, and runtime knobs (DESIGN.md §5).
+
+Decisions (all derived, all overridable for §Perf experiments):
+
+* TP: matmul dims sharded over ``model`` when d_model ≥ TP_MIN_DMODEL
+  (small models replicate weights — TP latency isn't worth it at 1–3B);
+* FSDP: parameters *additionally* sharded over ``data`` when the model
+  exceeds FSDP_MIN_PARAMS (param+optimizer state must fit 16 GB/chip);
+* EP: MoE experts always sharded over ``model`` (the MoE layer's shard_map
+  requires it);
+* SP: the residual stream's sequence dim sharded over ``model`` for large
+  models in training (bounds the per-layer remat checkpoints — a 126-layer
+  16384-wide model saves 16.9 GB/chip of layer inputs without SP);
+* KV cache: batch over ``data``, sequence over ``model`` (flash-decode
+  sharding — a 405B/32k/128-batch cache is 2.2 TB);
+* microbatching: gradient accumulation count chosen so one microbatch's
+  activations fit alongside params+optimizer.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig, ShapeConfig
+from .context import ShardingContext
+
+TP_MIN_DMODEL = 3584
+FSDP_MIN_PARAMS = 10e9
+SP_MIN_DMODEL = 6144
+
+
+@dataclass
+class Policy:
+    mesh: Mesh
+    dp_axes: tuple                 # batch axes, e.g. ("data",) or ("pod","data")
+    tp: bool
+    fsdp: bool
+    sp: bool
+    ep_axis: Optional[str]
+    microbatches: int
+    rules: dict = field(default_factory=dict)
+    # dp spec for THIS shape's batch dim (None when batch < dp, e.g. B=1)
+    batch_dp: object = None
+
+    @property
+    def dp(self):
+        return self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0]
+
+    def context(self) -> ShardingContext:
+        return ShardingContext(mesh=self.mesh, rules=self.rules,
+                               ep_axis=self.ep_axis, dp_axes=self.dp_axes)
+
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+
+def make_policy(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                *, tp: Optional[bool] = None, fsdp: Optional[bool] = None,
+                sp: Optional[bool] = None,
+                microbatches: Optional[int] = None,
+                dp_over_model: bool = False) -> Policy:
+    n_params = cfg.params_count()
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    if dp_over_model:
+        # small-model remesh (§Perf H2): the model axis contributes nothing
+        # to a ≤few-B-param model except replicated compute — fold it into
+        # the batch axes (pure DP over all chips, ZeRO over all chips)
+        dp_axes = dp_axes + ("model",)
+        tp = False
+        sp = False if sp is None else sp
+    dp_size = 1
+    for a in dp_axes:
+        dp_size *= mesh.shape[a]
+
+    tp = tp if tp is not None else cfg.d_model >= TP_MIN_DMODEL
+    fsdp = fsdp if fsdp is not None else n_params >= FSDP_MIN_PARAMS
+    # SP always on in training: per-layer remat checkpoints of the residual
+    # stream are the dominant live buffer; sharding S over `model` cuts them
+    # 16× (found via buffer-assignment analysis, see EXPERIMENTS.md §Dry-run)
+    sp = sp if sp is not None else shape.kind == "train"
+    ep_axis = ("model" if cfg.family == "moe" and not dp_over_model
+               else None)
+
+    if microbatches is None:
+        if shape.kind == "train":
+            # bound live activations: ≤ 1 sequence/shard/microbatch for
+            # ≥30B models, ≤ 2 below
+            per_shard = max(1, shape.global_batch // dp_size)
+            microbatches = per_shard if n_params >= 30e9 else \
+                max(1, per_shard // 2)
+        else:
+            microbatches = 1
+
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    batch_dp = dp
+    if shape.kind == "decode" and shape.global_batch < dp_size:
+        batch_dp = None              # long_500k batch=1: nothing to shard
+
+    model_if_tp = "model" if tp else None
+    seq_model = "model" if sp else None
+    # prefill emits per-layer K/V destined for a seq-sharded cache; keep the
+    # collected tensors seq-sharded from the start (DESIGN.md §5)
+    kv_seq = "model" if shape.kind in ("prefill", "decode") else None
+
+    rules = {
+        # residual stream (B, S, D)
+        "act_btd": P(batch_dp, seq_model, None),
+        # q / kv projections (B, S, H, dh)
+        "act_bshd": P(batch_dp, None, model_if_tp, None),
+        "act_bskd": P(batch_dp, kv_seq, None, None),
+        "act_bshd_flat": P(batch_dp, None, model_if_tp),
+        # mlp hidden (B, S, F)
+        "act_btf": P(batch_dp, None, model_if_tp),
+        # mamba inner stream (B, S, d_inner)
+        "act_btd_inner": P(batch_dp, None, model_if_tp),
+        # decode KV cache (B, S, Hkv, dh): batch over data, seq over model
+        "kv_cache": P(batch_dp, "model", None, None),
+        "kv_cache_stacked": P(None, batch_dp, "model", None, None),
+    }
+
+    return Policy(mesh=mesh, dp_axes=dp_axes, tp=tp, fsdp=fsdp, sp=sp,
+                  ep_axis=ep_axis, microbatches=microbatches, rules=rules,
+                  batch_dp=batch_dp)
+
+
+# ---------------------------------------------------------------------------
+# parameter PartitionSpecs by tree path
+# ---------------------------------------------------------------------------
+
+def _param_spec(path: str, leaf, pol: Policy, cfg: ModelConfig) -> P:
+    """path: '/'-joined dict keys, e.g. 'layers/attn/wq'."""
+    ndim = len(leaf.shape)
+    lead = ndim - 2                 # stacked layer/group dims
+    if pol.fsdp:
+        # ZeRO/FSDP shard axis: "data", or all dp axes when the model axis
+        # was folded into the batch (dp_over_model)
+        fsdp = (pol.dp if "model" in pol.dp_axes else pol.dp_axes[-1])
+    else:
+        fsdp = None
+    tp = "model" if pol.tp else None
+    name = path.split("/")[-1]
+
+    def spec(*dims):
+        return P(*([None] * lead + list(dims)))
+
+    # vocab-parallel embedding/head, unless `model` is already a dp axis
+    vocab_tp = None if (isinstance(fsdp, tuple) and "model" in fsdp) \
+        else "model"
+    if name in ("w",) or "norm" in path:                 # norm scales
+        return P(*([None] * ndim))
+    if name == "tok":
+        return P(vocab_tp, fsdp)
+    if name == "lm_head":
+        return P(fsdp, vocab_tp)
+    if name == "router":
+        return spec(None, None)
+    if ("/moe/" in path or path.startswith("moe/")) and "dense" not in path:
+        # expert-stacked weights (arctic's dense residual branch falls
+        # through to the plain-MLP rules below); EP axis only when expert
+        # parallelism is active (dp_over_model disables it)
+        ep = pol.ep_axis
+        if name in ("w_gate", "w_up"):                   # (E, D, Fe)
+            return P(*([None] * (ndim - 3) + [ep, None, fsdp]))
+        if name == "w_down":                             # (E, Fe, D)
+            return P(*([None] * (ndim - 3) + [ep, fsdp, None]))
+    if name in ("wq", "wk", "wv"):                       # (D, H·dh)
+        return spec(fsdp, tp)
+    if name == "wo":                                     # (H·dh, D)
+        return spec(tp, fsdp)
+    if name in ("bq", "bk", "bv"):
+        return P(*([None] * (ndim - 1) + [tp]))
+    if name in ("w_gate", "w_up"):                       # mlp (D, F)
+        return spec(fsdp, tp)
+    if name == "w_down":                                 # (F, D)
+        return spec(tp, fsdp)
+    # mamba / xlstm projections
+    if name == "w_in":                                   # (D, 2di+2N+H)
+        return spec(fsdp, tp)
+    if name == "w_out":                                  # (di, D) / (D, D)
+        return spec(tp, fsdp)
+    if name in ("w_q", "w_k", "w_v"):                    # (di, di)
+        return spec(fsdp, tp)
+    if name == "w_x":                                    # (D, 4D)
+        return spec(fsdp, tp)
+    if name == "w_gates":
+        return spec(None, None)
+    if name == "r":                                      # (H, dh, 4dh)
+        return P(*([None] * ndim))
+    if name == "w_conv":                                 # (k, di)
+        return P(*([None] * (ndim - 1) + [tp]))
+    # small vectors (dt_bias, a_log, d_skip, b, b_gates, ...)
+    return P(*([None] * ndim))
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_pspecs(params_tree, pol: Policy, cfg: ModelConfig):
+    """PartitionSpec tree matching ``params_tree`` (arrays or structs)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _param_spec(_path_str(path), leaf, pol, cfg),
+        params_tree)
+
+
+def param_shardings(params_tree, pol: Policy, cfg: ModelConfig):
+    return jax.tree.map(pol.named, param_pspecs(params_tree, pol, cfg))
+
+
+# ---------------------------------------------------------------------------
+# input / decode-state specs
+# ---------------------------------------------------------------------------
+
+def input_pspecs(input_tree, pol: Policy, kind: str):
+    """Batch dims over DP axes.  train leaves: (M, mb, S[, D]);
+    prefill: (B, S[, D]); decode token: (B, 1[, D])."""
+    bdp = pol.dp if kind == "train" else pol.batch_dp
+    if kind == "train":
+        rule = lambda leaf: P(*([None, bdp] + [None] * (len(leaf.shape) - 2)))
+    else:
+        rule = lambda leaf: P(*([bdp] + [None] * (len(leaf.shape) - 1)))
+    return jax.tree.map(rule, input_tree)
+
+
+def decode_state_pspecs(state_tree, pol: Policy, batch: int):
+    """Decode-state sharding: KV caches (n, B, S, Hkv, dh) batch→data,
+    seq→model (flash-decode); recurrent states batch→data; scalars repl."""
+    dp_size = 1
+    for a in pol.dp_axes:
+        dp_size *= pol.mesh.shape[a]
+    bdp = pol.dp if batch >= dp_size else None
+
+    def rule(path, leaf):
+        ps = _path_str(path)
+        nd = len(leaf.shape)
+        if "/kv/" in ps or ps.startswith("kv/"):
+            return P(None, bdp, "model", None, None)
+        if ps == "len":
+            return P(bdp)
+        if ps.startswith("conv") or ps.startswith("ssd"):
+            return P(*([None, bdp] + [None] * (nd - 2)))
+        if ps.startswith("mlstm"):
+            return P(*([None, None, bdp] + [None] * (nd - 3)))
+        if ps.startswith("slstm"):
+            return P(*([None, bdp] + [None] * (nd - 2)))
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(rule, state_tree)
+
+
+def tree_shardings(pspec_tree, pol: Policy):
+    return jax.tree.map(pol.named, pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

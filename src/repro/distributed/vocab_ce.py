@@ -1,0 +1,73 @@
+"""Vocab-parallel cross-entropy (Megatron-style) via shard_map.
+
+With the unembedding sharded over ``model``, each rank computes logits for
+its V/tp vocab slice and exchanges only per-token scalars (max, sumexp,
+label-logit) — three psums of O(T) instead of gathering O(T·V) logits.
+
+Used by the distributed train step when a policy with TP is active; on a
+single device (tests) it degenerates to the fused kernel path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..distributed import current_context
+
+
+def _local_ce_stats(x, w_local, labels, v_lo, v_hi, n_valid):
+    """Per-shard stats over the local vocab slice [v_lo, v_hi)."""
+    logits = x.astype(jnp.float32) @ w_local.astype(jnp.float32)  # (T, Vl)
+    cols = v_lo + jnp.arange(w_local.shape[1])[None, :]
+    logits = jnp.where(cols < n_valid, logits, -jnp.inf)
+    m = logits.max(axis=1)
+    sumexp = jnp.exp(logits - m[:, None]).sum(axis=1)
+    hit = cols == labels[:, None]
+    ll = jnp.where(hit, logits, -jnp.inf).max(axis=1)
+    return m, sumexp, ll
+
+
+def vocab_parallel_ce(x, w, labels, valid, n_valid: int, axis: str = "model"):
+    """x: (T, D) (replicated over `axis`); w: (D, V) sharded over `axis`
+    on V; labels/valid: (T,).  Returns mean NLL over valid tokens."""
+    ctx = current_context()
+    if ctx is None or axis not in ctx.mesh.shape:
+        from ..kernels import fused_cross_entropy
+        return fused_cross_entropy(x, w, labels, valid=valid,
+                                   n_valid=n_valid)
+
+    tp = ctx.mesh.shape[axis]
+    v_shard = w.shape[1] // tp
+    # f32 at the shard_map boundary: XLA-CPU's AllReducePromotion pass
+    # aborts on the bf16 cotangent all-reduce this would otherwise produce
+    # (the math below is f32 regardless)
+    x = x.astype(jnp.float32)
+
+    def local(xl, wl, lab, val):
+        idx = jax.lax.axis_index(axis)
+        v_lo = idx * v_shard
+        m, sumexp, ll = _local_ce_stats(xl, wl, lab, v_lo,
+                                        v_lo + v_shard, n_valid)
+        # stabilizer only — lse is analytically invariant to it (pmax has no
+        # differentiation rule, so stop the gradient at its input)
+        m_glob = jax.lax.pmax(jax.lax.stop_gradient(m), axis)
+        sumexp_glob = jax.lax.psum(sumexp * jnp.exp(m - m_glob), axis)
+        # exactly one shard holds the label column (finite ll) → psum is
+        # both exact and cleanly differentiable
+        ll_glob = jax.lax.psum(jnp.where(jnp.isfinite(ll), ll, 0.0), axis)
+        lse = m_glob + jnp.log(jnp.maximum(sumexp_glob, 1e-30))
+        nll = lse - ll_glob
+        vf = val.astype(jnp.float32)
+        return (nll * vf).sum() / jnp.maximum(vf.sum(), 1.0)
+
+    smapped = jax.shard_map(
+        local, mesh=ctx.mesh,
+        in_specs=(P(), P(None, axis), P(), P()),
+        out_specs=P(), axis_names={axis}, check_vma=False,
+    )
+    # jit the region: eager shard_map with partial-manual axes mis-infers
+    # out_specs from committed input shardings (tests call this eagerly;
+    # the train step always runs it under jit anyway)
+    return jax.jit(smapped)(x, w, labels, valid)

@@ -1,0 +1,24 @@
+"""repro.kernels — Pallas TPU kernels for the compute hot-spots.
+
+Each kernel lives in its own subpackage with the mandated trio:
+
+* ``kernel.py`` — ``pl.pallas_call`` + explicit BlockSpec VMEM tiling (TPU
+  target; executable on CPU via ``interpret=True``),
+* ``ops.py``    — the jit'd public wrapper with backend dispatch
+                  (pallas on TPU / reference elsewhere — this *is* stratum's
+                  operator-selection tier applied to LM internals),
+* ``ref.py``    — the pure-jnp oracle used by sweep tests.
+
+Public surface re-exported here: ``flash_attention``, ``decode_attention``,
+``rmsnorm``, ``ssd_scan``, ``moe_gmm``, ``fused_cross_entropy``.
+"""
+
+from .flash_attention.ops import flash_attention
+from .decode_attention.ops import decode_attention
+from .rmsnorm.ops import rmsnorm
+from .ssd.ops import ssd_scan
+from .moe_gmm.ops import moe_gmm
+from .cross_entropy.ops import fused_cross_entropy
+
+__all__ = ["flash_attention", "decode_attention", "rmsnorm", "ssd_scan",
+           "moe_gmm", "fused_cross_entropy"]

@@ -1,0 +1,38 @@
+"""Kernel backend dispatch — stratum operator selection at the kernel tier.
+
+``backend()`` resolves, per call site, which implementation runs:
+
+* ``"pallas"``            on TPU platforms (compiled pallas_call),
+* ``"pallas-interpret"``  when forced (tests; CPU correctness runs),
+* ``"reference"``         otherwise (pure jnp — what the CPU dry-run lowers,
+                          so HLO cost analysis reflects the math, not a
+                          python callback).
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+_FORCE: Optional[str] = None  # test hook
+
+
+def force_backend(name: Optional[str]) -> None:
+    global _FORCE
+    assert name in (None, "pallas", "pallas-interpret", "reference")
+    _FORCE = name
+
+
+def backend() -> str:
+    if _FORCE is not None:
+        return _FORCE
+    env = os.environ.get("REPRO_KERNEL_BACKEND")
+    if env:
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "reference"
+
+
+def interpret_mode() -> bool:
+    return backend() == "pallas-interpret"

@@ -1,0 +1,3 @@
+from .ops import fused_cross_entropy
+
+__all__ = ["fused_cross_entropy"]

@@ -1,0 +1,124 @@
+"""Fused cross-entropy public wrapper: custom-VJP, vocab-chunked both ways.
+
+Forward dispatch: Pallas kernel on TPU / chunked ``lax.scan`` jnp elsewhere
+(identical math and O(T) residuals either way).  Backward is always the
+chunked-scan recompute — dlogits = softmax − onehot is rebuilt per vocab
+block, never materialized whole.
+
+``n_valid`` supports MXU-padded unembedding matrices (V_pad multiple of 128,
+DESIGN.md §5): columns ≥ n_valid are excluded from the softmax exactly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..common import backend
+from .kernel import ce_forward_pallas
+from .ref import cross_entropy_ref  # noqa: F401  (re-exported for tests)
+
+_CHUNK_V = 8192
+
+
+def _forward_chunked(x, w, labels, n_valid: int):
+    """(lse, label_logit) via lax.scan over vocab chunks — no (T,V) tensor."""
+    T, D = x.shape
+    V = w.shape[1]
+    pad = (-V) % _CHUNK_V
+    wp = jnp.pad(w, ((0, 0), (0, pad)), constant_values=0.0)
+    n_chunks = (V + pad) // _CHUNK_V
+    wc = wp.reshape(D, n_chunks, _CHUNK_V).transpose(1, 0, 2)  # (C, D, cv)
+    xf = x.astype(jnp.float32)
+
+    def step(carry, inp):
+        m, l, ll = carry
+        w_blk, ci = inp
+        logits = xf @ w_blk.astype(jnp.float32)           # (T, cv)
+        cols = ci * _CHUNK_V + jnp.arange(_CHUNK_V)[None, :]
+        logits = jnp.where(cols < n_valid, logits, -jnp.inf)
+        m_new = jnp.maximum(m, logits.max(axis=1))
+        l = l * jnp.exp(m - m_new) + jnp.exp(
+            logits - m_new[:, None]).sum(axis=1)
+        hit = cols == labels[:, None]
+        ll = jnp.maximum(ll, jnp.where(hit, logits, -jnp.inf).max(axis=1))
+        return (m_new, l, ll), None
+
+    init = (jnp.full((T,), -jnp.inf, jnp.float32),
+            jnp.zeros((T,), jnp.float32),
+            jnp.full((T,), -jnp.inf, jnp.float32))
+    (m, l, ll), _ = jax.lax.scan(step, init,
+                                 (wc, jnp.arange(n_chunks)))
+    return m + jnp.log(jnp.maximum(l, 1e-30)), ll
+
+
+def _forward_dispatch(x, w, labels, n_valid: int):
+    be = backend()
+    if be in ("pallas", "pallas-interpret") and n_valid == w.shape[1]:
+        # (the kernel masks columns ≥ w.shape[1]; for padded heads with
+        # n_valid < V the chunked path below applies the exact mask)
+        return ce_forward_pallas(x, w, labels,
+                                 interpret=(be == "pallas-interpret"))
+    return _forward_chunked(x, w, labels, n_valid)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _ce_core(x, w, labels, valid, n_valid: int):
+    lse, ll = _forward_dispatch(x, w, labels, n_valid)
+    nll = lse - ll
+    vf = valid.astype(jnp.float32)
+    return (nll * vf).sum() / jnp.maximum(vf.sum(), 1.0)
+
+
+def _ce_fwd(x, w, labels, valid, n_valid: int):
+    lse, ll = _forward_dispatch(x, w, labels, n_valid)
+    nll = lse - ll
+    vf = valid.astype(jnp.float32)
+    loss = (nll * vf).sum() / jnp.maximum(vf.sum(), 1.0)
+    return loss, (x, w, labels, valid, lse)
+
+
+def _ce_bwd(n_valid: int, res, g):
+    x, w, labels, valid, lse = res
+    T, D = x.shape
+    V = w.shape[1]
+    vf = valid.astype(jnp.float32)
+    denom = jnp.maximum(vf.sum(), 1.0)
+    coef = (g * vf / denom)                                 # (T,)
+    pad = (-V) % _CHUNK_V
+    wp = jnp.pad(w, ((0, 0), (0, pad)))
+    n_chunks = (V + pad) // _CHUNK_V
+    wc = wp.reshape(D, n_chunks, _CHUNK_V).transpose(1, 0, 2)
+    xf = x.astype(jnp.float32)
+
+    def step(dx, inp):
+        w_blk, ci = inp
+        logits = xf @ w_blk.astype(jnp.float32)
+        cols = ci * _CHUNK_V + jnp.arange(_CHUNK_V)[None, :]
+        p = jnp.where(cols < n_valid, jnp.exp(logits - lse[:, None]), 0.0)
+        dlog = (p - (cols == labels[:, None])) * coef[:, None]  # (T, cv)
+        dx = dx + dlog @ w_blk.astype(jnp.float32).T
+        dw_blk = xf.T @ dlog                                 # (D, cv)
+        return dx, dw_blk
+
+    dx, dw_chunks = jax.lax.scan(step, jnp.zeros((T, D), jnp.float32),
+                                 (wc, jnp.arange(n_chunks)))
+    dw = dw_chunks.transpose(1, 0, 2).reshape(D, V + pad)[:, :V]
+    return dx.astype(x.dtype), dw.astype(w.dtype), None, None
+
+
+_ce_core.defvjp(_ce_fwd, _ce_bwd)
+
+
+def fused_cross_entropy(x, w, labels, valid=None, n_valid: int | None = None):
+    """Mean NLL of labels under softmax(x @ w[:, :n_valid]) without
+    materializing logits.
+    x: (..., D); w: (D, V); labels: (...) int32; valid: optional bool mask."""
+    x2 = x.reshape(-1, x.shape[-1])
+    lab = labels.reshape(-1)
+    val = (jnp.ones(lab.shape, bool) if valid is None
+           else valid.reshape(-1))
+    nv = w.shape[1] if n_valid is None else int(n_valid)
+    return _ce_core(x2, w, lab, val, nv)

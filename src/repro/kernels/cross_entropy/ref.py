@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the fused LM-head + cross-entropy.
+
+Materializes the full (T, V) logits — the thing the kernel exists to avoid
+(V up to 256k in the assigned architectures → 0.5 GB per 1k tokens in fp32).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy_ref(x, w, labels, valid=None):
+    """x: (T, D) final hidden states; w: (D, V) unembedding; labels: (T,).
+    valid: optional (T,) bool mask.  Returns mean NLL over valid tokens."""
+    logits = (x.astype(jnp.float32) @ w.astype(jnp.float32))
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    nll = lse - ll
+    if valid is None:
+        return nll.mean()
+    vf = valid.astype(jnp.float32)
+    return (nll * vf).sum() / jnp.maximum(vf.sum(), 1.0)

@@ -1,0 +1,133 @@
+"""Decode (single-query) attention Pallas TPU kernel — flash-decode style.
+
+Decode attention is HBM-bandwidth-bound: each step reads the whole KV cache
+once.  The kernel streams the cache through VMEM and keeps everything else
+resident:
+
+* grid = (B, Hkv, S/BLOCK_S) with the S axis innermost/sequential,
+* each program handles one kv head *group* (all Hq/Hkv query heads that
+  share the kv head) — the query tile is (GROUP, D), so GQA amortizes each
+  K/V byte over the whole group (the roofline reason GQA exists),
+* K/V tiles are (BLOCK_S, D) VMEM blocks; online-softmax scratch is
+  (GROUP, 1) m/l and (GROUP, D) acc in fp32,
+* ``lengths`` masks the tail (ragged batches in serving).
+
+The same kernel serves long-context decode: the wrapper's caller shards the
+S axis of the cache across the mesh and LSE-merges per-shard partial results
+(distributed flash-decode, see repro/distributed/ring_decode.py).  The
+kernel emits (out, m, l) to make that merge possible.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_S = 512
+NEG_INF = -1e30
+
+
+def _dec_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_out, l_out,
+                m_scr, l_scr, acc_scr, *, scale: float, s_total: int,
+                block_s: int):
+    si = pl.program_id(2)
+    n_s = pl.num_programs(2)
+
+    @pl.when(si == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    b = pl.program_id(0)
+    valid_len = len_ref[0]
+    s_start = si * block_s
+
+    @pl.when(s_start < valid_len)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale      # (G, D)
+        k = k_ref[0, :, 0].astype(jnp.float32)           # (bs, D)
+        v = v_ref[0, :, 0].astype(jnp.float32)           # (bs, D)
+        # tail blocks beyond S are garbage-padded — zero them so 0-weight
+        # rows cannot contaminate the accumulator (0 × NaN = NaN)
+        row = s_start + jax.lax.broadcasted_iota(jnp.int32, v.shape, 0)
+        v = jnp.where(row < s_total, v, 0.0)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (G,bs)
+        pos = s_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < valid_len, s, NEG_INF)
+
+        m_prev, l_prev, acc_prev = m_scr[...], l_scr[...], acc_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        m_scr[...] = m_new
+        l_scr[...] = l_prev * alpha + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_prev * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+
+    @pl.when(si == n_s - 1)
+    def _emit():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+        m_out[0, 0] = m_scr[...]
+        l_out[0, 0] = l_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret", "block_s",
+                                             "return_lse"))
+def decode_attention_pallas(q, k, v, lengths, *, scale: float | None = None,
+                            interpret: bool = False,
+                            block_s: int = BLOCK_S,
+                            return_lse: bool = False):
+    """q: (B, Hq, D); k, v: (B, S, Hkv, D); lengths: (B,) int32."""
+    B, Hq, D = q.shape
+    _, S, Hkv, _ = k.shape
+    assert Hq % Hkv == 0
+    G = Hq // Hkv
+    scale_v = float(scale if scale is not None else D ** -0.5)
+    bs = min(block_s, S)
+
+    # regroup q to (B, Hkv, G, D): one program per kv head group
+    qg = q.reshape(B, Hkv, G, D)
+
+    grid = (B, Hkv, pl.cdiv(S, bs))
+    kernel = functools.partial(_dec_kernel, scale=scale_v, s_total=S,
+                               block_s=bs)
+    out, m, l = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, D), lambda b, h, s: (b, s, h, 0)),
+            pl.BlockSpec((1, bs, 1, D), lambda b, h, s: (b, s, h, 0)),
+            pl.BlockSpec((1,), lambda b, h, s: (b,),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, G, 1), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, G, 1), lambda b, h, s: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+            jax.ShapeDtypeStruct((B, Hkv, G, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, G, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k, v, lengths.astype(jnp.int32))
+    out = out.reshape(B, Hq, D)
+    if return_lse:
+        m = m.reshape(B, Hq)
+        l = l.reshape(B, Hq)
+        return out, m, l
+    return out

@@ -1,0 +1,20 @@
+"""Public decode-attention wrapper with backend dispatch."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..common import backend
+from .kernel import decode_attention_pallas
+from .ref import decode_attention_ref
+
+
+def decode_attention(q, k, v, lengths=None, *, scale: float | None = None):
+    """One-token attention over a (B, S, Hkv, D) KV cache; q: (B, Hq, D)."""
+    be = backend()
+    if be in ("pallas", "pallas-interpret"):
+        if lengths is None:
+            lengths = jnp.full((q.shape[0],), k.shape[1], dtype=jnp.int32)
+        return decode_attention_pallas(q, k, v, lengths, scale=scale,
+                                       interpret=(be == "pallas-interpret"))
+    return decode_attention_ref(q, k, v, lengths, scale=scale)

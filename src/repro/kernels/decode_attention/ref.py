@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for single-token decode attention over a KV cache."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, lengths=None, scale: float | None = None):
+    """q: (B, Hq, D) — one new token per sequence.
+    k, v: (B, S, Hkv, D) — cache (time-major, the serving layout).
+    lengths: (B,) valid cache lengths (positions ≥ length are masked).
+    Returns (B, Hq, D)."""
+    B, Hq, D = q.shape
+    _, S, Hkv, _ = k.shape
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+
+    kq = jnp.repeat(k, group, axis=2)           # (B, S, Hq, D)
+    vq = jnp.repeat(v, group, axis=2)
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                   kq.astype(jnp.float32)) * scale
+    if lengths is not None:
+        mask = jnp.arange(S)[None, None, :] < lengths[:, None, None]
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhs,bshd->bhd", p, vq.astype(jnp.float32))
+    return out.astype(q.dtype)

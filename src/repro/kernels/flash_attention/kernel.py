@@ -1,0 +1,142 @@
+"""Flash attention Pallas TPU kernel (forward).
+
+TPU adaptation of the FlashAttention online-softmax algorithm:
+
+* grid = (B·Hq, Sq/BLOCK_Q, Sk/BLOCK_K); the K dimension is the innermost,
+  sequential grid axis, so K/V stream through VMEM in (BLOCK_K, D) tiles
+  while the (BLOCK_Q, D) query tile stays resident,
+* online-softmax state (m, l, acc) lives in fp32 VMEM scratch and is carried
+  across the sequential K iterations (initialized at k==0, emitted at the
+  last K block),
+* BLOCK_Q = BLOCK_K = 128, D padded to a multiple of 128 by the wrapper →
+  every matmul is MXU-aligned (128×128 systolic tiles),
+* GQA: the kv-head grid coordinate is derived from the q head
+  (``h // (Hq//Hkv)``) in the K/V index maps — no K/V repeat is ever
+  materialized (the repeat in the jnp reference costs Hq/Hkv × K bytes),
+* causal: fully-masked K blocks are skipped with a ``lax.cond`` (Mosaic
+  lowers this to a real branch, so skipped tiles cost no MXU work).
+
+Backward runs through XLA autodiff over the remat'd reference in this repo;
+a dedicated dq/dkv kernel with the same tiling is the natural extension and
+is documented in DESIGN.md §6.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_Q = 128
+BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+               scale: float, causal: bool, window: int, sq: int, sk: int,
+               block_q: int, block_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    n_k = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    def compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)               # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)               # (bk, D)
+        # zero garbage-padded tail rows of V (0-weight NaN still poisons p@V)
+        vrow = k_start + jax.lax.broadcasted_iota(jnp.int32, v.shape, 0)
+        v = jnp.where(vrow < sk, v, 0.0)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+        q_pos = q_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        mask = (k_pos < sk) & (q_pos < sq)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window > 0:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev, l_prev, acc_prev = m_scr[...], l_scr[...], acc_scr[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        m_scr[...] = m_new
+        l_scr[...] = l_prev * alpha + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_prev * alpha + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+
+    if causal:
+        # skip K blocks entirely above the causal diagonal
+        q_end = q_start + block_q - 1
+        relevant = k_start <= q_end
+        if window > 0:
+            relevant &= k_start + block_k > q_start - window
+        jax.lax.cond(relevant, compute, lambda: None)
+    else:
+        compute()
+
+    @pl.when(ki == n_k - 1)
+    def _emit():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
+                                             "interpret", "block_q",
+                                             "block_k"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
+                           scale: float | None = None,
+                           interpret: bool = False,
+                           block_q: int = BLOCK_Q, block_k: int = BLOCK_K):
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D), self-attention (Sq == Sk)."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    assert Hq % Hkv == 0, "GQA requires Hq % Hkv == 0"
+    groups = Hq // Hkv
+    scale_v = float(scale if scale is not None else D ** -0.5)
+
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    grid = (B * Hq, pl.cdiv(Sq, bq), pl.cdiv(Sk, bk))
+
+    kernel = functools.partial(
+        _fa_kernel, scale=scale_v, causal=causal, window=window,
+        sq=Sq, sk=Sk, block_q=bq, block_k=bk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D),
+                         lambda h, i, j: (h // Hq, h % Hq, i, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda h, i, j: (h // Hq, (h % Hq) // groups, j, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda h, i, j: (h // Hq, (h % Hq) // groups, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D),
+                               lambda h, i, j: (h // Hq, h % Hq, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,34 @@
+"""Public flash-attention wrapper with backend dispatch."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..common import backend
+from .kernel import flash_attention_pallas
+from .ref import attention_chunked, attention_ref
+
+# below this sequence length the O(S²) einsum is cheaper than the scan
+CHUNKED_MIN_SEQ = 2048
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale: float | None = None):
+    """Multi-head / grouped-query attention.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D).  Dispatch:
+    pallas on TPU, pallas-interpret when forced (tests); elsewhere the jnp
+    reference — *chunked* online-softmax for long sequences so the CPU
+    dry-run HLO carries flash-style memory traffic (DESIGN.md §6).
+    """
+    be = backend()
+    if be == "pallas":
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      scale=scale)
+    if be == "pallas-interpret":
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      scale=scale, interpret=True)
+    if k.shape[2] >= CHUNKED_MIN_SEQ:
+        return attention_chunked(q, k, v, causal=causal, window=window,
+                                 scale=scale)
+    return attention_ref(q, k, v, causal=causal, window=window, scale=scale)

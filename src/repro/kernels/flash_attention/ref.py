@@ -1,0 +1,100 @@
+"""Pure-jnp oracles for flash attention (GQA, causal, optional local window).
+
+* :func:`attention_ref` — materializes the full (S, S) score matrix; O(S²)
+  memory; the numerical oracle for kernel sweep tests.
+* :func:`attention_chunked` — online-softmax over K/V blocks via a
+  checkpointed ``lax.scan``: O(S·block) live memory forward AND backward
+  (the scan body is remat'd, so residuals are just the (m, l, acc) carry).
+  This is the memory-faithful jnp twin of the Pallas kernel and what the
+  CPU dry-run lowers — HLO bytes then reflect the flash algorithm, not a
+  quadratic strawman (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  scale: float | None = None):
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D); GQA via Hq % Hkv == 0.
+    window > 0 → local attention of that width (positions within window).
+    Returns (B, Hq, Sq, D) in q.dtype."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+
+    kq = jnp.repeat(k, group, axis=1)  # (B, Hq, Sk, D)
+    vq = jnp.repeat(v, group, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, kq,
+                        preferred_element_type=jnp.float32) * scale
+    # positions: queries occupy the last Sq slots of the Sk context
+    q_pos = jnp.arange(Sq)[:, None] + (Sk - Sq)
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p.astype(q.dtype), vq)
+    return out.astype(q.dtype)
+
+
+def attention_chunked(q, k, v, *, causal: bool = True, window: int = 0,
+                      scale: float | None = None, block_k: int = 1024):
+    """Flash-style online softmax over K blocks (shapes as attention_ref)."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    bk = min(block_k, Sk)
+    n_blocks = -(-Sk // bk)
+    pad = n_blocks * bk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    # (n, B, Hkv, bk, D)
+    kb = jnp.moveaxis(k.reshape(B, Hkv, n_blocks, bk, D), 2, 0)
+    vb = jnp.moveaxis(v.reshape(B, Hkv, n_blocks, bk, D), 2, 0)
+
+    qf = q.astype(jnp.float32) * scale
+    q_pos = jnp.arange(Sq) + (Sk - Sq)          # queries end-aligned
+
+    @jax.checkpoint
+    def body(carry, blk):
+        m, l, acc = carry
+        kt, vt, bi = blk
+        kt = jnp.repeat(kt, group, axis=1).astype(jnp.float32)
+        vt = jnp.repeat(vt, group, axis=1).astype(jnp.float32)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kt)
+        k_pos = bi * bk + jnp.arange(bk)
+        mask = (k_pos[None, :] < Sk)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window > 0:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask[None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("bhqk,bhkd->bhqd",
+                                                      p, vt)
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((B, Hq, Sq), -1e30, jnp.float32),
+            jnp.zeros((B, Hq, Sq), jnp.float32),
+            jnp.zeros((B, Hq, Sq, D), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(body, init,
+                                  (kb, vb, jnp.arange(n_blocks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)

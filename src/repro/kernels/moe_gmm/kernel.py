@@ -1,0 +1,84 @@
+"""Grouped expert matmul (MegaBlocks-style) Pallas TPU kernel.
+
+Tokens arrive sorted by expert; dense per-expert padding is never
+materialized.  Layout:
+
+* grid = (T/BLOCK_T, F/BLOCK_F, E) with the expert axis innermost and
+  sequential; the (BLOCK_T, BLOCK_F) output tile is revisited across experts
+  and accumulated in place (zeroed at e == 0),
+* expert boundary offsets (E+1,) live in SMEM; a token block that does not
+  intersect expert e's row range skips the matmul entirely via ``pl.when``
+  (Mosaic emits a real branch — skipped tiles cost no MXU work).  Because
+  tokens are sorted, each token block intersects ≤ 1 + ⌈BLOCK_T/min_group⌉
+  experts, so the effective FLOPs match a ragged matmul,
+* per-expert weight tile (D, BLOCK_F) and token tile (BLOCK_T, D) are VMEM
+  resident; rows outside the expert's range are masked to zero before the
+  matmul so revisited accumulation stays exact.
+
+GPU analogue: MegaBlocks' block-sparse grouped GEMM; TPU rethink: grid-level
+skip + in-place revisited accumulation instead of CSR block indexing.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_T = 128
+BLOCK_F = 512
+
+
+def _gmm_kernel(off_ref, x_ref, w_ref, o_ref, *, block_t: int):
+    ti = pl.program_id(0)
+    e = pl.program_id(2)
+
+    @pl.when(e == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    row_lo = ti * block_t
+    e_lo = off_ref[e]
+    e_hi = off_ref[e + 1]
+
+    @pl.when((e_hi > row_lo) & (e_lo < row_lo + block_t))
+    def _compute():
+        x = x_ref[...].astype(jnp.float32)            # (BT, D)
+        w = w_ref[0].astype(jnp.float32)              # (D, BF)
+        rows = row_lo + jax.lax.broadcasted_iota(
+            jnp.int32, (block_t, 1), 0)
+        in_expert = (rows >= e_lo) & (rows < e_hi)
+        xm = jnp.where(in_expert, x, 0.0)
+        o_ref[...] += jax.lax.dot(
+            xm, w, preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_t",
+                                             "block_f"))
+def moe_gmm_pallas(x, w, group_sizes, *, interpret: bool = False,
+                   block_t: int = BLOCK_T, block_f: int = BLOCK_F):
+    """x: (T, D) sorted by expert; w: (E, D, F); group_sizes: (E,)."""
+    T, D = x.shape
+    E, _, F = w.shape
+    bt = min(block_t, T)
+    bf = min(block_f, F)
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(group_sizes).astype(jnp.int32)])
+
+    kernel = functools.partial(_gmm_kernel, block_t=bt)
+    out = pl.pallas_call(
+        kernel,
+        grid=(pl.cdiv(T, bt), pl.cdiv(F, bf), E),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),     # offsets (E+1,)
+            pl.BlockSpec((bt, D), lambda t, f, e: (t, 0)),
+            pl.BlockSpec((1, D, bf), lambda t, f, e: (e, 0, f)),
+        ],
+        out_specs=pl.BlockSpec((bt, bf), lambda t, f, e: (t, f)),
+        out_shape=jax.ShapeDtypeStruct((T, F), jnp.float32),
+        interpret=interpret,
+    )(offsets, x, w)
+    return out.astype(x.dtype)

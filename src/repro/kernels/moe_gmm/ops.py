@@ -1,0 +1,31 @@
+"""Public grouped-matmul wrapper with backend dispatch."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..common import backend
+from .kernel import moe_gmm_pallas
+from .ref import moe_gmm_ref
+
+
+def moe_gmm(x, w, group_sizes, equal_groups: int | None = None):
+    """Per-expert matmul over expert-sorted tokens.
+    x: (T, D); w: (E, D, F); group_sizes: (E,) → (T, F).
+
+    ``equal_groups=C``: statically promise every group has exactly C rows
+    (our capacity-based dispatch always does) — the reference path then
+    runs a batched (E,C,D)@(E,D,F) einsum instead of the oracle's per-row
+    weight gather, whose (T,D,F) materialization is test-only."""
+    be = backend()
+    if be == "pallas":
+        return moe_gmm_pallas(x, w, group_sizes)
+    if be == "pallas-interpret":
+        return moe_gmm_pallas(x, w, group_sizes, interpret=True)
+    if equal_groups is not None:
+        E = w.shape[0]
+        xe = x.reshape(E, equal_groups, x.shape[-1])
+        out = jnp.einsum("ecd,edf->ecf", xe, w,
+                         preferred_element_type=jnp.float32)
+        return out.reshape(E * equal_groups, w.shape[-1]).astype(x.dtype)
+    return moe_gmm_ref(x, w, group_sizes)

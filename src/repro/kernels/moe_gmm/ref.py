@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the grouped (per-expert) matmul."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def moe_gmm_ref(x, w, group_sizes):
+    """x: (T, D) tokens sorted by expert; w: (E, D, F);
+    group_sizes: (E,) int32 with sum == T.
+    out[i] = x[i] @ w[e_i], where e_i is the expert owning row i."""
+    T = x.shape[0]
+    E = w.shape[0]
+    offsets = jnp.cumsum(group_sizes)
+    expert_of_row = jnp.searchsorted(offsets, jnp.arange(T), side="right")
+    expert_of_row = jnp.clip(expert_of_row, 0, E - 1)
+    w_rows = w[expert_of_row]                      # (T, D, F) — oracle only
+    out = jnp.einsum("td,tdf->tf", x.astype(jnp.float32),
+                     w_rows.astype(jnp.float32))
+    return out.astype(x.dtype)

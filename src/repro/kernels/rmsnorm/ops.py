@@ -1,0 +1,16 @@
+"""Public RMSNorm wrapper with backend dispatch."""
+
+from __future__ import annotations
+
+from ..common import backend
+from .kernel import rmsnorm_pallas
+from .ref import rmsnorm_ref
+
+
+def rmsnorm(x, weight, eps: float = 1e-6):
+    be = backend()
+    if be == "pallas":
+        return rmsnorm_pallas(x, weight, eps=eps)
+    if be == "pallas-interpret":
+        return rmsnorm_pallas(x, weight, eps=eps, interpret=True)
+    return rmsnorm_ref(x, weight, eps=eps)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for fused RMSNorm."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x, weight, eps: float = 1e-6):
+    """x: (..., D); weight: (D,).  fp32 statistics, output in x.dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)).astype(x.dtype)

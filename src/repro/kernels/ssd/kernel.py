@@ -1,0 +1,131 @@
+"""Chunked SSD scan Pallas TPU kernel (Mamba2 / mLSTM core).
+
+The sequential recurrence is reformulated chunk-wise (the Mamba2 "state-space
+duality" algorithm) so nearly all work becomes MXU matmuls:
+
+with chunk length L, per-position cumulative log-decay ℓ_i (inclusive) and
+chunk-total decay A_L:
+
+* intra-chunk:  y_intra = M @ X, where
+                M[i,j] = (c_i·b_j) · exp(ℓ_i − ℓ_j) · g_j · [j ≤ i]
+                — an (L×L)(L×P) matmul pair on the MXU,
+* inter-chunk:  y_inter[i] = exp(ℓ_i) · (c_i @ S_prev),
+* state update: S_new = A_L·S_prev + Σ_j exp(ℓ_L − ℓ_j)·g_j·b_j x_jᵀ
+                — a (N×L)(L×P) matmul.
+
+Kernel shape:
+
+* grid = (B·H, S/CHUNK); the chunk axis is sequential and the fp32 state
+  (N, P) is carried in VMEM scratch across chunks,
+* per-program blocks: c/b (CHUNK, N), x (CHUNK, P), ℓ/g (CHUNK, 1) —
+  everything VMEM-resident; CHUNK=128 keeps the (L×L) intra matrix one MXU
+  tile,
+* decay ratios are computed in log space (exp of differences) for stability.
+
+This is the TPU-native rethink of the CUDA Mamba2 scan: instead of a
+warp-level associative scan, the recurrence is batched into systolic-array
+matmuls with a tiny sequential carry — the layout TPUs are built for.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+CHUNK = 128
+
+
+def _ssd_kernel(c_ref, b_ref, x_ref, la_ref, g_ref, y_ref, sfin_ref, s_scr,
+                *, chunk: int, n_chunks: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    c = c_ref[0].astype(jnp.float32)          # (L, N)
+    b = b_ref[0].astype(jnp.float32)          # (L, N)
+    x = x_ref[0].astype(jnp.float32)          # (L, P)
+    la = la_ref[0].astype(jnp.float32)        # (L, 1)
+    g = g_ref[0].astype(jnp.float32)          # (L, 1)
+
+    L = chunk
+    lcum = jnp.cumsum(la, axis=0)             # inclusive cumulative log-decay
+    ltot = lcum[L - 1]                        # (1,)
+
+    # -- intra-chunk: attention-like masked matmul ------------------------
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (L, L)
+    # decay[i,j] = ∏_{k=j+1..i} a_k = exp(ℓ_i − ℓ_j), ℓ inclusive cumsum
+    decay = jnp.exp(lcum - lcum.T)             # (L, L)
+    iota_i = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    iota_j = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    mask = iota_j <= iota_i
+    M = jnp.where(mask, cb * decay, 0.0) * g.T
+    y = jax.lax.dot(M, x, preferred_element_type=jnp.float32)
+
+    # -- inter-chunk: contribution of carried state -----------------------
+    s_prev = s_scr[...]                        # (N, P)
+    y += jnp.exp(lcum) * jax.lax.dot(c, s_prev,
+                                     preferred_element_type=jnp.float32)
+
+    # -- state update ------------------------------------------------------
+    wj = jnp.exp(ltot[None, :] - lcum) * g     # (L,1): decay from j to L
+    bw = b * wj                                # (L, N)
+    s_new = (jnp.exp(ltot)[0] * s_prev
+             + jax.lax.dot_general(bw, x, (((0,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32))
+    s_scr[...] = s_new
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit_state():
+        sfin_ref[0] = s_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "chunk"))
+def ssd_scan_pallas(c, b, x, log_a, gate, *, interpret: bool = False,
+                    chunk: int = CHUNK):
+    """c, b: (B, H, S, N); x: (B, H, S, P); log_a, gate: (B, H, S).
+    S must be a multiple of ``chunk`` (wrapper pads).
+    Returns (y, s_final): (B, H, S, P), (B, H, N, P) fp32."""
+    B, H, S, N = c.shape
+    P = x.shape[-1]
+    assert S % chunk == 0, "pad S to a multiple of the chunk length"
+    n_chunks = S // chunk
+    BH = B * H
+
+    cf = c.reshape(BH, S, N)
+    bf = b.reshape(BH, S, N)
+    xf = x.reshape(BH, S, P)
+    laf = log_a.reshape(BH, S, 1)
+    gf = gate.reshape(BH, S, 1)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, n_chunks=n_chunks)
+    y, s_fin = pl.pallas_call(
+        kernel,
+        grid=(BH, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, N), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, chunk, N), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, chunk, P), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda h, i: (h, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, P), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, N, P), lambda h, i: (h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, P), x.dtype),
+            jax.ShapeDtypeStruct((BH, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(cf, bf, xf, laf, gf)
+    return y.reshape(B, H, S, P), s_fin.reshape(B, H, N, P)

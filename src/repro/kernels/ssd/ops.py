@@ -1,0 +1,43 @@
+"""Public SSD-scan wrapper with backend dispatch + single-step decode."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..common import backend
+from .kernel import CHUNK, ssd_scan_pallas
+from .ref import ssd_ref
+
+
+def ssd_scan(c, b, x, log_a, gate):
+    """Chunked linear-recurrence scan.  Shapes as in ref.py.
+    Returns (y, s_final)."""
+    be = backend()
+    if be in ("pallas", "pallas-interpret"):
+        S = c.shape[2]
+        pad = (-S) % CHUNK
+        if pad:
+            zc = lambda t: jnp.pad(t, [(0, 0), (0, 0), (0, pad)]
+                                   + [(0, 0)] * (t.ndim - 3))
+            c, b, x = (jnp.pad(t, [(0, 0), (0, 0), (0, pad), (0, 0)])
+                       for t in (c, b, x))
+            log_a, gate = zc(log_a), zc(gate)
+        y, s = ssd_scan_pallas(c, b, x, log_a, gate,
+                               interpret=(be == "pallas-interpret"))
+        if pad:
+            y = y[:, :, :S]
+        return y, s
+    return ssd_ref(c, b, x, log_a, gate)
+
+
+def ssd_step(s, c_t, b_t, x_t, log_a_t, gate_t):
+    """One decode step of the recurrence (O(1) in sequence length).
+    s: (B, H, N, P) fp32 state; *_t: per-token slices (B, H, N) / (B, H, P)
+    / (B, H).  Returns (y_t, s_new)."""
+    a = jnp.exp(log_a_t.astype(jnp.float32))[..., None, None]
+    g = gate_t.astype(jnp.float32)[..., None, None]
+    outer = (b_t.astype(jnp.float32)[..., :, None]
+             * x_t.astype(jnp.float32)[..., None, :])
+    s_new = a * s + g * outer
+    y = jnp.einsum("bhn,bhnp->bhp", c_t.astype(jnp.float32), s_new)
+    return y.astype(x_t.dtype), s_new

@@ -1,0 +1,48 @@
+"""Pure-jnp oracle for the SSD linear recurrence (Mamba2 / mLSTM core).
+
+Per head, with state S ∈ R^{N×P}:
+
+    S_t = a_t · S_{t-1} + g_t · b_t x_tᵀ          (a_t, g_t scalars)
+    y_t = c_tᵀ S_t
+
+Mamba2: a = exp(Δ·A), g = Δ, b = B_t, c = C_t, x = inputs.
+mLSTM:  a = σ(f), g = input gate, b = k, c = q, x = v — the wrapper appends
+a ones-column to x so the normalizer n_t rides along as an extra state
+column (see ops.py).
+
+The oracle runs the recurrence step-by-step with lax.scan in fp32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(c, b, x, log_a, gate, s0=None):
+    """c, b: (B, H, S, N); x: (B, H, S, P); log_a, gate: (B, H, S).
+    s0: optional (B, H, N, P) initial state.
+    Returns (y, s_final): (B, H, S, P), (B, H, N, P)."""
+    B, H, S, N = c.shape
+    P = x.shape[-1]
+    cf = c.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    af = jnp.exp(log_a.astype(jnp.float32))
+    gf = gate.astype(jnp.float32)
+    if s0 is None:
+        s0 = jnp.zeros((B, H, N, P), jnp.float32)
+
+    def step(s, inp):
+        ct, bt, xt, at, gt = inp
+        s = at[..., None, None] * s + gt[..., None, None] * (
+            bt[..., :, None] * xt[..., None, :])
+        y = jnp.einsum("bhn,bhnp->bhp", ct, s)
+        return s, y
+
+    xs = (jnp.moveaxis(cf, 2, 0), jnp.moveaxis(bf, 2, 0),
+          jnp.moveaxis(xf, 2, 0), jnp.moveaxis(af, 2, 0),
+          jnp.moveaxis(gf, 2, 0))
+    s_fin, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    y = jnp.moveaxis(ys, 0, 2).astype(x.dtype)
+    return y, s_fin

@@ -1,0 +1,205 @@
+"""Multi-pod dry-run: lower + compile every (architecture × shape × mesh)
+cell and record memory/cost/collective analysis (EXPERIMENTS.md §Dry-run).
+
+MUST be run as a module entry point (``python -m repro.launch.dryrun``) —
+the XLA_FLAGS lines below only take effect before jax initializes devices.
+"""
+
+# The VERY FIRST two lines — before ANY other import (jax locks the device
+# count on first init):
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+
+from ..configs import ARCH_NAMES, get_config, SHAPES, shape_applicable  # noqa: E402
+from ..distributed.context import use_context  # noqa: E402
+from ..distributed.policy import (decode_state_pspecs, input_pspecs,  # noqa: E402
+                                  make_policy, param_pspecs, tree_shardings)
+from ..models.model import decode_step as model_decode_step  # noqa: E402
+from ..models.model import init_decode_state, param_specs  # noqa: E402
+from ..optim import pick_optimizer  # noqa: E402
+from ..serve.step import make_prefill_step  # noqa: E402
+from ..train.step import make_train_step  # noqa: E402
+from .analysis import analytic_memory_bytes, roofline_from_compiled  # noqa: E402
+from .mesh import make_production_mesh  # noqa: E402
+from .specs import (decode_input_specs, prefill_input_specs,  # noqa: E402
+                    train_input_specs)
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               policy_overrides: dict | None = None,
+               cfg_overrides: dict | None = None):
+    """Lower one (arch × shape × mesh) cell.  Returns (lowered, meta)."""
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    pol = make_policy(cfg, shape, mesh, **(policy_overrides or {}))
+
+    with use_context(pol.context()):
+        pstruct = param_specs(cfg)
+        pshard = tree_shardings(param_pspecs(pstruct, pol, cfg), pol)
+
+        if shape.kind == "train":
+            opt = pick_optimizer(cfg.params_count())
+            # ZeRO-1/2: optimizer state and gradient accumulators are ALWAYS
+            # dp-sharded, even when params are not FSDP (fp32 state is 4–6×
+            # bf16 params)
+            pol_opt = dataclasses.replace(pol, fsdp=True)
+            step = make_train_step(cfg, opt, policy=pol,
+                                   grad_pspecs=param_pspecs(pstruct,
+                                                            pol_opt, cfg))
+            ostruct = jax.eval_shape(opt.init, pstruct)
+            oshard = tree_shardings(param_pspecs(ostruct, pol_opt, cfg),
+                                    pol)
+            batch = train_input_specs(cfg, shape, pol.microbatches)
+            bshard = tree_shardings(
+                input_pspecs(batch, pol, "train"), pol)
+            fn = jax.jit(step,
+                         in_shardings=(pshard, oshard, bshard),
+                         out_shardings=(pshard, oshard, None),
+                         donate_argnums=(0, 1))
+            lowered = fn.lower(pstruct, ostruct, batch)
+        elif shape.kind == "prefill":
+            pf = make_prefill_step(cfg, max_len=shape.seq_len)
+            inputs = prefill_input_specs(cfg, shape)
+            ishard = tree_shardings(input_pspecs(inputs, pol, "prefill"),
+                                    pol)
+            sstruct = jax.eval_shape(
+                lambda: init_decode_state(cfg, shape.global_batch,
+                                          shape.seq_len))
+            sshard = tree_shardings(
+                decode_state_pspecs(sstruct, pol, shape.global_batch), pol)
+            fn = jax.jit(pf, in_shardings=(pshard, ishard),
+                         out_shardings=(None, sshard))
+            lowered = fn.lower(pstruct, inputs)
+        else:  # decode
+            tok, sstruct = decode_input_specs(cfg, shape)
+            sshard = tree_shardings(
+                decode_state_pspecs(sstruct, pol, shape.global_batch), pol)
+            tshard = tree_shardings(input_pspecs(tok, pol, "decode"), pol)
+
+            def dec(params, state, token):
+                return model_decode_step(params, state, token, cfg)
+
+            fn = jax.jit(dec, in_shardings=(pshard, sshard, tshard),
+                         out_shardings=(None, sshard),
+                         donate_argnums=(1,))
+            lowered = fn.lower(pstruct, sstruct, tok)
+
+    meta = {"arch": arch, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "n_chips": 512 if multi_pod else 256,
+            "kind": shape.kind, "policy": {
+                "tp": pol.tp, "fsdp": pol.fsdp, "sp": pol.sp,
+                "ep": pol.ep_axis, "microbatches": pol.microbatches}}
+    return lowered, meta
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             policy_overrides: dict | None = None,
+             cfg_overrides: dict | None = None) -> dict:
+    t0 = time.time()
+    record = {"arch": arch, "shape": shape_name,
+              "mesh": "2x16x16" if multi_pod else "16x16"}
+    ok, why = shape_applicable(get_config(arch), shape_name)
+    if not ok:
+        record.update(status="skip", reason=why)
+        return record
+    try:
+        lowered, meta = lower_cell(arch, shape_name, multi_pod=multi_pod,
+                                   policy_overrides=policy_overrides,
+                                   cfg_overrides=cfg_overrides)
+        compiled = lowered.compile()
+        roof, colls, mem = roofline_from_compiled(compiled, meta["n_chips"])
+        cfg = get_config(arch)
+        # memory term: analytic fused-backend traffic (the CPU HLO cannot
+        # express Pallas VMEM locality — see analysis.py); HLO-derived bytes
+        # are recorded alongside as a bracket
+        from .mesh import make_production_mesh as _mpm
+        from ..distributed.policy import make_policy as _mp
+        pol2 = _mp(cfg, SHAPES[shape_name], _mpm(multi_pod=multi_pod),
+                   **(policy_overrides or {}))
+        bytes_hlo = roof.bytes_accessed
+        roof.bytes_accessed = analytic_memory_bytes(cfg, SHAPES[shape_name],
+                                                    pol2)
+        record.update(
+            status="ok", policy=meta["policy"], kind=meta["kind"],
+            flops=roof.flops, bytes_accessed=roof.bytes_accessed,
+            bytes_hlo_dot_model=bytes_hlo,
+            collective_bytes=roof.collective_bytes,
+            collectives={"bytes": colls.bytes_by_kind,
+                         "count": colls.count_by_kind},
+            compute_s=roof.compute_s, memory_s=roof.memory_s,
+            collective_s=roof.collective_s, dominant=roof.dominant,
+            step_time_s=roof.step_time_s,
+            per_device_mem_bytes={
+                "argument": mem.argument_size_in_bytes,
+                "output": mem.output_size_in_bytes,
+                "temp": mem.temp_size_in_bytes,
+                "alias": mem.alias_size_in_bytes,
+                "generated_code": mem.generated_code_size_in_bytes,
+            },
+            params=cfg.params_count(),
+            active_params=cfg.active_params_count(),
+            compile_s=round(time.time() - t0, 1),
+        )
+        print(compiled.memory_analysis())
+        print({k: v for k, v in compiled.cost_analysis().items()
+               if k in ("flops", "bytes accessed")})
+    except Exception as e:  # noqa: BLE001 — recorded, run continues
+        record.update(status="error", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-2000:],
+                      compile_s=round(time.time() - t0, 1))
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="architecture id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    args = ap.parse_args()
+
+    archs = list(ARCH_NAMES) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    n_ok = n_skip = n_err = 0
+    with open(args.out, "a") as f:
+        for arch in archs:
+            for shape in shapes:
+                for mp in meshes:
+                    rec = run_cell(arch, shape, multi_pod=mp)
+                    f.write(json.dumps(rec) + "\n")
+                    f.flush()
+                    tag = rec["status"].upper()
+                    n_ok += tag == "OK"
+                    n_skip += tag == "SKIP"
+                    n_err += tag == "ERROR"
+                    print(f"[{tag}] {arch} × {shape} × {rec['mesh']}"
+                          + (f" dominant={rec.get('dominant')}"
+                             f" step={rec.get('step_time_s', 0):.3f}s"
+                             if tag == "OK" else
+                             f" {rec.get('reason', rec.get('error', ''))}"),
+                          flush=True)
+    print(f"dry-run complete: {n_ok} ok / {n_skip} skip / {n_err} error")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Serving entry point: continuous-batched generation.
+
+Container-scale demo (reduced config, synthetic requests); the identical
+code path drives the production mesh with policy shardings.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config, reduced as reduce_cfg
+from ..models.model import init_decode_state, init_params, prefill
+from ..serve.batcher import Batcher, Request
+from ..serve.step import make_decode_step
+
+
+def serve_demo(arch: str, *, n_requests: int = 8, n_lanes: int = 4,
+               prompt_len: int = 16, max_new: int = 16, max_len: int = 64,
+               use_reduced: bool = True, seed: int = 0):
+    cfg = get_config(arch)
+    if use_reduced:
+        cfg = reduce_cfg(cfg)
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    decode = jax.jit(make_decode_step(cfg))
+
+    rng = np.random.default_rng(seed)
+    batcher = Batcher(n_lanes=n_lanes, max_len=max_len)
+    for rid in range(n_requests):
+        batcher.submit(Request(
+            rid=rid,
+            prompt=rng.integers(0, cfg.vocab, prompt_len).astype(np.int32),
+            max_new_tokens=max_new))
+
+    prefill_fn = jax.jit(lambda p, i: prefill(p, i, cfg, max_len=max_len))
+
+    steps = 0
+    produced = 0
+    t0 = time.time()
+    # wave-batched admission: lanes are prefilled together as one batch,
+    # decode proceeds until the wave drains.  (The Batcher also supports
+    # per-lane admission; ragged per-lane prefill interleave is exercised by
+    # the per-lane cache scatter in layers.attention_decode.)
+    while not batcher.idle:
+        wave = batcher.admit()
+        if not wave:
+            break
+        prompts = np.zeros((n_lanes, prompt_len), np.int32)
+        for lane, req in wave:
+            prompts[lane] = req.prompt
+        logits, state = prefill_fn(params, {"tokens": jnp.asarray(prompts)})
+        nxt = np.asarray(jnp.argmax(logits, -1))[:, None].astype(np.int32)
+        while batcher.active_lanes():
+            active = batcher.active_lanes()
+            batcher.record_tokens(nxt[:, 0])
+            produced += len(active)
+            nxt_j, _, state = decode(params, state, jnp.asarray(nxt))
+            nxt = np.asarray(nxt_j)
+            steps += 1
+    dt = time.time() - t0
+    return {"requests": len(batcher.finished), "decode_steps": steps,
+            "tokens": produced, "tok_per_s": produced / max(dt, 1e-9),
+            "wall_s": dt}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--lanes", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+    out = serve_demo(args.arch, n_requests=args.requests,
+                     n_lanes=args.lanes, prompt_len=args.prompt_len,
+                     max_new=args.max_new)
+    print(out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run's inputs.
+
+No device allocation ever happens here; shardings are attached by dryrun.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config
+from ..models import init_decode_state, param_specs
+from ..models.config import ModelConfig, SHAPES, ShapeConfig
+
+I32 = jnp.int32
+BF16 = jnp.bfloat16
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                      microbatches: int) -> dict:
+    """Microbatched layout (M, B/M, S): the data pipeline emits microbatches
+    directly so gradient accumulation never reshapes a sharded batch dim."""
+    M = microbatches
+    B = shape.global_batch
+    assert B % M == 0, (B, M)
+    mb = B // M
+    S = shape.seq_len
+    specs = {"labels": _sds((M, mb, S), I32)}
+    if cfg.frontend == "none":
+        specs["tokens"] = _sds((M, mb, S), I32)
+    else:
+        specs["embeds"] = _sds((M, mb, S, cfg.d_model), BF16)
+    return specs
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.frontend == "none":
+        return {"tokens": _sds((B, S), I32)}
+    return {"embeds": _sds((B, S, cfg.d_model), BF16)}
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """(token_or_embed spec, decode-state spec tree) for one decode step
+    with a cache of length shape.seq_len."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.frontend == "none":
+        tok = _sds((B, 1), I32)
+    else:
+        tok = _sds((B, 1, cfg.d_model), BF16)
+    state = jax.eval_shape(
+        lambda: init_decode_state(cfg, B, S))
+    return tok, state
+
+
+def model_param_specs(cfg: ModelConfig):
+    return param_specs(cfg)
+
+
+def input_specs(arch: str, shape_name: str, microbatches: int = 1):
+    """Assignment-mandated entry point: ShapeDtypeStruct stand-ins for every
+    model input of (arch × shape)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return train_input_specs(cfg, shape, microbatches)
+    if shape.kind == "prefill":
+        return prefill_input_specs(cfg, shape)
+    tok, state = decode_input_specs(cfg, shape)
+    return {"token": tok, "state": state}

@@ -1,0 +1,139 @@
+"""Training entry point.
+
+Scales from this container (1 CPU device, reduced config) to the production
+mesh (same code path — the policy/mesh args change).  Examples::
+
+    # laptop-scale end-to-end driver (examples/train_lm.py wraps this):
+    python -m repro.launch.train --arch qwen2-7b --reduced --steps 200
+
+    # production shape (on a real pod):
+    python -m repro.launch.train --arch llama3-405b --mesh prod
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import time
+
+import jax
+import numpy as np
+
+from ..configs import get_config, reduced as reduce_cfg
+from ..data.lm import DataConfig, global_batch_at
+from ..distributed.context import use_context
+from ..distributed.policy import (input_pspecs, make_policy, param_pspecs,
+                                  tree_shardings)
+from ..models.config import ShapeConfig
+from ..models.model import init_params
+from ..optim import cosine_schedule, pick_optimizer
+from ..train.loop import LoopConfig, TrainLoop
+from ..train.step import make_train_step
+from .mesh import make_debug_mesh, make_production_mesh
+
+
+def build_trainer(arch: str, *, use_reduced: bool = True, seq_len: int = 128,
+                  global_batch: int = 8, microbatches: int = 2,
+                  mesh=None, ckpt_dir: str = "/tmp/repro_ckpt",
+                  total_steps: int = 100, ckpt_every: int = 25,
+                  lr: float = 3e-4, grad_compress: bool = False,
+                  inject_preemption_at=None, seed: int = 0):
+    cfg = get_config(arch)
+    if use_reduced:
+        cfg = reduce_cfg(cfg)
+    shape = ShapeConfig("train_cli", seq_len, global_batch, "train")
+
+    if mesh is None:
+        # single-device: trivial mesh, no sharding context
+        policy = None
+        ctx = None
+    else:
+        policy = make_policy(cfg, shape, mesh, microbatches=microbatches)
+        microbatches = policy.microbatches
+        ctx = policy.context()
+
+    data_cfg = DataConfig(vocab=cfg.vocab, seq_len=seq_len,
+                          global_batch=global_batch,
+                          microbatches=microbatches, seed=seed)
+
+    opt = pick_optimizer(cfg.params_count(),
+                         lr=cosine_schedule(lr, 10, total_steps))
+    step_fn = make_train_step(cfg, opt, policy=policy,
+                              grad_compress=grad_compress)
+
+    def build(params_key=0):
+        params = init_params(cfg, jax.random.PRNGKey(params_key))
+        opt_state = step_fn.init_opt_state(params)
+        pshard = oshard = None
+        if policy is not None:
+            pshard = tree_shardings(param_pspecs(params, policy, cfg), policy)
+            pol_opt = dataclasses.replace(policy, fsdp=True)
+            oshard = tree_shardings(param_pspecs(opt_state, pol_opt, cfg),
+                                    policy)
+            params = jax.device_put(params, pshard)
+            opt_state = jax.device_put(opt_state, oshard)
+            jitted = jax.jit(step_fn, in_shardings=(pshard, oshard, None),
+                             out_shardings=(pshard, oshard, None),
+                             donate_argnums=(0, 1))
+        else:
+            jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+
+        def batch_fn(step):
+            host = global_batch_at(data_cfg, step)
+            return jax.tree.map(jax.numpy.asarray, host)
+
+        loop = TrainLoop(jitted, params, opt_state, batch_fn, ckpt_dir,
+                         LoopConfig(total_steps=total_steps,
+                                    ckpt_every=ckpt_every),
+                         shardings=(pshard, oshard) if pshard else None,
+                         inject_preemption_at=inject_preemption_at)
+        return loop
+
+    if ctx is not None:
+        with use_context(ctx):
+            return build()
+    return build()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--mesh", default="none", choices=["none", "debug",
+                                                       "prod", "prod-multi"])
+    ap.add_argument("--grad-compress", action="store_true")
+    args = ap.parse_args()
+
+    mesh = None
+    if args.mesh == "debug":
+        mesh = make_debug_mesh()
+    elif args.mesh == "prod":
+        mesh = make_production_mesh()
+    elif args.mesh == "prod-multi":
+        mesh = make_production_mesh(multi_pod=True)
+
+    loop = build_trainer(args.arch, use_reduced=args.reduced,
+                         seq_len=args.seq, global_batch=args.batch,
+                         mesh=mesh, ckpt_dir=args.ckpt_dir,
+                         total_steps=args.steps, ckpt_every=args.ckpt_every,
+                         lr=args.lr, grad_compress=args.grad_compress)
+    t0 = time.time()
+    state = loop.run()
+    dt = time.time() - t0
+    print(f"trained {state.step} steps in {dt:.1f}s "
+          f"(resumed_from={state.resumed_from})")
+    print(f"loss: first={state.losses[0]:.4f} last={state.losses[-1]:.4f}")
+    if state.stragglers:
+        print(f"stragglers: {state.stragglers}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""repro.models — the LM model zoo (10 assigned architectures).
+
+Composable decoder stacks over shared layer primitives; every architecture
+is a :class:`ModelConfig` + the generic :mod:`repro.models.model` machinery.
+"""
+
+from .config import ModelConfig
+from .model import (decode_step, init_params, init_decode_state, loss_fn,
+                    forward, prefill, param_specs)
+
+__all__ = ["ModelConfig", "init_params", "param_specs", "forward", "loss_fn",
+           "prefill", "decode_step", "init_decode_state"]

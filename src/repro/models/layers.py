@@ -1,0 +1,157 @@
+"""Shared layer primitives for the model zoo.
+
+Pure functions over param dicts.  Kernel hot-spots route through
+``repro.kernels`` (backend-dispatched); activations carry logical sharding
+annotations via ``repro.distributed.shard``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed import shard
+from ..kernels import decode_attention, flash_attention, rmsnorm
+from .config import ModelConfig
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm(params, x, eps: float):
+    return rmsnorm(x, params["w"], eps=eps)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float):
+    """x: (B, S, H, Dh); positions: (B, S) int32."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin,
+                           xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA) — train/prefill path and cached-decode path
+# ---------------------------------------------------------------------------
+
+def attention_qkv(params, x, cfg: ModelConfig, positions):
+    """Project + rope.  x: (B, S, D) → q (B,S,H,dh), k/v (B,S,Hkv,dh)."""
+    B, S, D = x.shape
+    dh = cfg.d_head
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(B, S, cfg.n_heads, dh)
+    k = k.reshape(B, S, cfg.n_kv_heads, dh)
+    v = v.reshape(B, S, cfg.n_kv_heads, dh)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_block(params, x, cfg: ModelConfig, positions):
+    """Full self-attention over x (train / prefill). Returns (out, k, v) —
+    k/v handed back so prefill can populate the cache."""
+    B, S, D = x.shape
+    q, k, v = attention_qkv(params, x, cfg, positions)
+    q = shard(q, "act_bshd")
+    k = shard(k, "act_bskd")
+    v = shard(v, "act_bskd")
+    # kernels expect (B, H, S, dh)
+    o = flash_attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                        v.transpose(0, 2, 1, 3), causal=True)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, cfg.n_heads * cfg.d_head)
+    o = shard(o, "act_bshd_flat")
+    out = o @ params["wo"]
+    return shard(out, "act_btd"), k, v
+
+
+def attention_decode(params, x, cfg: ModelConfig, k_cache, v_cache,
+                     cache_len):
+    """One-token decode.  x: (B, 1, D); caches: (B, S_max, Hkv, dh).
+    Returns (out (B,1,D), k_cache, v_cache).
+
+    With a sharding context whose kv_cache rule shards S over `model`, the
+    distributed flash-decode path runs (shard-local partial attention +
+    LSE merge — §Perf H4) instead of letting GSPMD gather the cache."""
+    from ..distributed import current_context
+    B = x.shape[0]
+    dh = cfg.d_head
+    positions = cache_len[:, None]                     # (B, 1)
+    q, k, v = attention_qkv(params, x, cfg, positions)
+
+    ctx = current_context()
+    kv_rule = ctx.spec("kv_cache") if ctx is not None else None
+    seq_sharded = (kv_rule is not None and len(kv_rule) > 1
+                   and kv_rule[1] == "model"
+                   and k_cache.shape[1] % ctx.mesh.shape["model"] == 0)
+    if seq_sharded:
+        from ..distributed.ring_decode import seq_sharded_decode
+        o, k_cache, v_cache = seq_sharded_decode(
+            q[:, 0], k_cache, v_cache, cache_len, k[:, 0], v[:, 0],
+            scale=dh ** -0.5)
+    else:
+        # per-lane scatter write (continuous batching: ragged lengths)
+        lane = jnp.arange(B)
+        k_cache = k_cache.at[lane, cache_len].set(
+            k[:, 0].astype(k_cache.dtype), mode="drop")
+        v_cache = v_cache.at[lane, cache_len].set(
+            v[:, 0].astype(v_cache.dtype), mode="drop")
+        k_cache = shard(k_cache, "kv_cache")
+        v_cache = shard(v_cache, "kv_cache")
+        lengths = jnp.minimum(cache_len + 1, k_cache.shape[1])
+        o = decode_attention(q[:, 0], k_cache, v_cache, lengths)
+    out = o.reshape(B, 1, cfg.n_heads * dh) @ params["wo"]
+    return shard(out, "act_btd"), k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_block(params, x, cfg: ModelConfig, act: Optional[str] = None):
+    act = act or cfg.act
+    if act == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    elif act == "gelu":
+        h = jax.nn.gelu(x @ params["w_up"])
+    elif act == "relu2":                      # nemotron squared-ReLU
+        h = jnp.square(jax.nn.relu(x @ params["w_up"]))
+    else:
+        raise ValueError(act)
+    h = shard(h, "act_btf")
+    out = h @ params["w_down"]
+    return shard(out, "act_btd")
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+def embed(params, tokens, cfg: ModelConfig):
+    emb = params["tok"]                        # (V_pad, D)
+    out = jnp.take(emb, tokens, axis=0)
+    return shard(out.astype(dtype_of(cfg)), "act_btd")

@@ -1,0 +1,513 @@
+"""Model assembly: params, forward/loss, prefill and decode for all families.
+
+Layer stacks are *scanned* over stacked parameter pytrees (leading axis =
+layer count) — essential to keep HLO size and compile time sane at 126
+layers.  Non-uniform families use nested scans over uniform segments:
+
+* dense/moe/vlm/audio: scan over L identical blocks,
+* hybrid (zamba2):     scan over groups of ``attn_every`` mamba layers with
+                       the *shared* attention block applied between groups
+                       (same weights each time — zamba2's defining trick),
+                       plus a stacked tail,
+* ssm (xlstm):         scan over segments of (period−1) mLSTM + 1 sLSTM.
+
+``init_params`` builds real arrays (smoke tests / examples);
+``param_specs`` = ``jax.eval_shape`` over it (dry-run: no allocation).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed import shard
+from ..kernels import fused_cross_entropy
+from .config import ModelConfig
+from .layers import (attention_block, attention_decode, dtype_of, embed,
+                     mlp_block, norm)
+from .moe import moe_ffn
+from .ssm import mamba_block, mamba_decode_step
+from .xlstm import (mlstm_block, mlstm_decode_step, slstm_block,
+                    slstm_decode_step)
+
+# ---------------------------------------------------------------------------
+# initialization
+# ---------------------------------------------------------------------------
+
+
+def _dense(key, shape, dtype, scale=None):
+    scale = scale if scale is not None else shape[0] ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def _attn_params(key, cfg: ModelConfig, dt):
+    D, dh = cfg.d_model, cfg.d_head
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": _dense(ks[0], (D, cfg.n_heads * dh), dt),
+        "wk": _dense(ks[1], (D, cfg.n_kv_heads * dh), dt),
+        "wv": _dense(ks[2], (D, cfg.n_kv_heads * dh), dt),
+        "wo": _dense(ks[3], (cfg.n_heads * dh, D), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * dh,), dt)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * dh,), dt)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * dh,), dt)
+    return p
+
+
+def _mlp_params(key, cfg: ModelConfig, dt, d_ff=None):
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w_up": _dense(ks[0], (D, F), dt),
+         "w_down": _dense(ks[1], (F, D), dt)}
+    if cfg.act == "swiglu":
+        p["w_gate"] = _dense(ks[2], (D, F), dt)
+    return p
+
+
+def _moe_params(key, cfg: ModelConfig, dt):
+    D, E, Fe = cfg.d_model, cfg.n_experts_padded, cfg.d_ff_expert
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _dense(ks[0], (D, E), jnp.float32),
+        "w_gate": _dense(ks[1], (E, D, Fe), dt, scale=D ** -0.5),
+        "w_up": _dense(ks[2], (E, D, Fe), dt, scale=D ** -0.5),
+        "w_down": _dense(ks[3], (E, Fe, D), dt, scale=Fe ** -0.5),
+    }
+    if cfg.moe_dense_residual:
+        p["dense"] = _mlp_params(ks[4], cfg, dt)
+    return p
+
+
+def _attn_layer_params(key, cfg: ModelConfig, dt):
+    ks = jax.random.split(key, 4)
+    p = {
+        "attn_norm": {"w": jnp.ones((cfg.d_model,), jnp.float32)},
+        "attn": _attn_params(ks[0], cfg, dt),
+        "mlp_norm": {"w": jnp.ones((cfg.d_model,), jnp.float32)},
+    }
+    if cfg.family == "moe":
+        p["moe"] = _moe_params(ks[1], cfg, dt)
+    else:
+        p["mlp"] = _mlp_params(ks[1], cfg, dt)
+    return p
+
+
+def _mamba_params(key, cfg: ModelConfig, dt):
+    D, di, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "norm": {"w": jnp.ones((D,), jnp.float32)},
+        "w_in": _dense(ks[0], (D, 2 * di + 2 * N + H), dt),
+        "w_conv": _dense(ks[1], (cfg.conv_kernel, di), jnp.float32,
+                         scale=cfg.conv_kernel ** -0.5),
+        "w_out": _dense(ks[2], (di, D), dt),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "a_log": jnp.zeros((H,), jnp.float32),
+        "d_skip": jnp.ones((H,), jnp.float32),
+    }
+
+
+def _mlstm_params(key, cfg: ModelConfig, dt):
+    D = cfg.d_model
+    H = cfg.n_heads
+    ks = jax.random.split(key, 6)
+    return {
+        "norm": {"w": jnp.ones((D,), jnp.float32)},
+        "w_up": _dense(ks[0], (D, 2 * D), dt),     # (main | output gate)
+        "w_q": _dense(ks[1], (D, D), dt),
+        "w_k": _dense(ks[2], (D, D), dt),
+        "w_v": _dense(ks[3], (D, D), dt),
+        "w_gates": _dense(ks[4], (D, 2 * H), jnp.float32),
+        "b_gates": jnp.concatenate([jnp.zeros((H,)), jnp.ones((H,)) * 3.0]
+                                   ).astype(jnp.float32),
+        "w_down": _dense(ks[5], (D, D), dt),
+    }
+
+
+def _slstm_params(key, cfg: ModelConfig, dt):
+    D = cfg.d_model
+    H = cfg.n_heads
+    dh = D // H
+    ks = jax.random.split(key, 3)
+    return {
+        "norm": {"w": jnp.ones((D,), jnp.float32)},
+        "w_x": _dense(ks[0], (D, 4 * D), dt),
+        "r": _dense(ks[1], (H, dh, 4 * dh), jnp.float32, scale=dh ** -0.5),
+        "b": jnp.zeros((4 * D,), jnp.float32),
+        "w_out": _dense(ks[2], (D, D), dt),
+    }
+
+
+def _stack(key, n, fn):
+    keys = jax.random.split(key, n)
+    return jax.vmap(fn)(keys)
+
+
+def init_params(cfg: ModelConfig, key=None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    dt = dtype_of(cfg)
+    k_emb, k_layers, k_head, k_extra = jax.random.split(key, 4)
+    params: dict[str, Any] = {}
+
+    if cfg.frontend == "none":
+        params["embed"] = {"tok": _dense(k_emb, (cfg.vocab_padded,
+                                                 cfg.d_model), dt, scale=0.02)}
+    # (vlm/audio: embeddings arrive precomputed — STUB frontend)
+
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        params["layers"] = _stack(
+            k_layers, cfg.n_layers, lambda k: _attn_layer_params(k, cfg, dt))
+    elif cfg.family == "hybrid":
+        per = cfg.attn_every
+        n_groups = cfg.n_layers // per
+        tail = cfg.n_layers - n_groups * per
+        kg, kt, ka = jax.random.split(k_layers, 3)
+        params["groups"] = _stack(
+            kg, n_groups * per, lambda k: _mamba_params(k, cfg, dt))
+        params["groups"] = jax.tree.map(
+            lambda x: x.reshape((n_groups, per) + x.shape[1:]),
+            params["groups"])
+        if tail:
+            params["tail"] = _stack(
+                kt, tail, lambda k: _mamba_params(k, cfg, dt))
+        params["shared_attn"] = _attn_layer_params(ka, cfg, dt)
+    elif cfg.family == "ssm":
+        period = cfg.slstm_period
+        n_seg = cfg.n_layers // period
+        km, ks_ = jax.random.split(k_layers)
+        params["mlstm"] = _stack(
+            km, n_seg * (period - 1), lambda k: _mlstm_params(k, cfg, dt))
+        params["mlstm"] = jax.tree.map(
+            lambda x: x.reshape((n_seg, period - 1) + x.shape[1:]),
+            params["mlstm"])
+        params["slstm"] = _stack(
+            ks_, n_seg, lambda k: _slstm_params(k, cfg, dt))
+    else:
+        raise ValueError(cfg.family)
+
+    params["final_norm"] = {"w": jnp.ones((cfg.d_model,), jnp.float32)}
+    params["lm_head"] = _dense(k_head, (cfg.d_model, cfg.vocab_padded), dt,
+                               scale=cfg.d_model ** -0.5)
+    return params
+
+
+def param_specs(cfg: ModelConfig):
+    """Shape/dtype tree without allocation (dry-run)."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill trunk)
+# ---------------------------------------------------------------------------
+
+
+def _attn_mlp_block(lp, x, cfg: ModelConfig, positions):
+    h, k, v = attention_block(lp["attn"], norm(lp["attn_norm"], x,
+                                               cfg.norm_eps), cfg, positions)
+    x = x + h
+    hidden = norm(lp["mlp_norm"], x, cfg.norm_eps)
+    if cfg.family == "moe":
+        x = x + moe_ffn(lp["moe"], hidden, cfg)
+    else:
+        x = x + mlp_block(lp["mlp"], hidden, cfg)
+    return x, (k, v)
+
+
+def _remat(cfg: ModelConfig, fn):
+    """Layer-granularity remat with a selectable residual policy:
+    'full' recomputes everything (min memory, +2·N·D flops);
+    'dots' saves matmul outputs (recompute only elementwise — trades memory
+    for ~25% backward flops; §Perf H1.4)."""
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)
+
+
+def _trunk(params, x, cfg: ModelConfig, positions, collect: bool = False):
+    """Embedded input (B,S,D) → final hidden (B,S,D).
+    collect → also return stacked per-layer states for prefill
+    (dense: (k, v); hybrid: (conv, ssd, shared-attn kv); ssm: lstm states)."""
+
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        def body(h, lp):
+            h, kv = _attn_mlp_block(lp, h, cfg, positions)
+            return h, (kv if collect else None)
+        body_fn = _remat(cfg, body) if (cfg.remat and not collect) \
+            else body
+        x, kvs = jax.lax.scan(body_fn, x, params["layers"])
+        return x, kvs
+
+    if cfg.family == "hybrid":
+        def mamba_body(h, lp):
+            hn = norm(lp["norm"], h, cfg.norm_eps)
+            if collect:
+                y, st = mamba_block(lp, hn, cfg, return_state=True)
+                return h + y, st
+            return h + mamba_block(lp, hn, cfg), None
+        mb = jax.checkpoint(mamba_body) if (cfg.remat and not collect) \
+            else mamba_body
+
+        def group_body(h, glp):
+            h, sts = jax.lax.scan(mb, h, glp)
+            h, kv = _attn_mlp_block(params["shared_attn"], h, cfg, positions)
+            return h, ((sts, kv) if collect else None)
+        gb = jax.checkpoint(group_body) if (cfg.remat and not collect) \
+            else group_body
+        x, g_states = jax.lax.scan(gb, x, params["groups"])
+        t_states = None
+        if "tail" in params:
+            x, t_states = jax.lax.scan(mb, x, params["tail"])
+        return x, ((g_states, t_states) if collect else None)
+
+    if cfg.family == "ssm":
+        def ml_body(h, lp):
+            hn = norm(lp["norm"], h, cfg.norm_eps)
+            if collect:
+                y, st = mlstm_block(lp, hn, cfg, return_state=True)
+                return h + y, st
+            return h + mlstm_block(lp, hn, cfg), None
+        mlb = jax.checkpoint(ml_body) if (cfg.remat and not collect) \
+            else ml_body
+
+        def seg_body(h, seg):
+            mlp_, slp = seg
+            h, m_sts = jax.lax.scan(mlb, h, mlp_)
+            hn = norm(slp["norm"], h, cfg.norm_eps)
+            if collect:
+                y, s_st = slstm_block(slp, hn, cfg, return_state=True)
+                return h + y, (m_sts, s_st)
+            return h + slstm_block(slp, hn, cfg), None
+        sb = jax.checkpoint(seg_body) if (cfg.remat and not collect) \
+            else seg_body
+        x, states = jax.lax.scan(sb, x, (params["mlstm"], params["slstm"]))
+        return x, states
+
+    raise ValueError(cfg.family)
+
+
+def forward(params, inputs: dict, cfg: ModelConfig, collect: bool = False):
+    """inputs: {"tokens": (B,S)} or {"embeds": (B,S,D)} (vlm/audio stubs).
+    Returns (hidden (B,S,D), states-or-None)."""
+    if cfg.frontend == "none":
+        x = embed(params["embed"], inputs["tokens"], cfg)
+        B, S = inputs["tokens"].shape
+    else:
+        x = shard(inputs["embeds"].astype(dtype_of(cfg)), "act_btd")
+        B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x, states = _trunk(params, x, cfg, positions, collect=collect)
+    x = norm(params["final_norm"], x, cfg.norm_eps)
+    return x, states
+
+
+def loss_fn(params, inputs: dict, cfg: ModelConfig):
+    """Causal-LM loss (labels = inputs shifted by the data pipeline)."""
+    hidden, _ = forward(params, inputs, cfg)
+    labels = inputs["labels"]
+    valid = labels >= 0
+    labels = jnp.maximum(labels, 0)
+    return fused_cross_entropy(hidden, params["lm_head"], labels,
+                               valid=valid, n_valid=cfg.vocab)
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=None):
+    """Per-family decode state tree (allocated by the serving runtime)."""
+    dt = dtype or dtype_of(cfg)
+    dh = cfg.d_head
+
+    def kv(n):
+        return {
+            "k": jnp.zeros((n, batch, max_len, cfg.n_kv_heads, dh), dt),
+            "v": jnp.zeros((n, batch, max_len, cfg.n_kv_heads, dh), dt),
+        }
+
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        return {"kv": kv(cfg.n_layers),
+                "len": jnp.zeros((batch,), jnp.int32)}
+    if cfg.family == "hybrid":
+        n_groups = cfg.n_layers // cfg.attn_every
+        tail = cfg.n_layers - n_groups * cfg.attn_every
+        di, N, H, P_ = (cfg.d_inner, cfg.ssm_state, cfg.ssm_heads,
+                        cfg.ssm_head_dim)
+        return {
+            "kv": kv(n_groups),          # shared-attn caches (per call site)
+            "conv": jnp.zeros((cfg.n_layers, batch, cfg.conv_kernel - 1, di),
+                              jnp.float32),
+            "ssd": jnp.zeros((cfg.n_layers, batch, H, N, P_), jnp.float32),
+            "len": jnp.zeros((batch,), jnp.int32),
+        }
+    if cfg.family == "ssm":
+        period = cfg.slstm_period
+        n_seg = cfg.n_layers // period
+        D = cfg.d_model
+        H = cfg.n_heads
+        dh_m = D // H
+        dh_s = D // H
+        z = jnp.zeros((n_seg, batch, H, dh_s), jnp.float32)
+        return {
+            "mlstm": jnp.zeros((n_seg, period - 1, batch, H, dh_m, dh_m + 1),
+                               jnp.float32),
+            "slstm": (z, z, z, jnp.full_like(z, -1e30)),
+            "len": jnp.zeros((batch,), jnp.int32),
+        }
+    raise ValueError(cfg.family)
+
+
+def decode_step(params, state: dict, token_or_embed, cfg: ModelConfig):
+    """One decode step.  token_or_embed: (B,1) int32 or (B,1,D).
+    Returns (logits (B, vocab_padded), new_state)."""
+    if cfg.frontend == "none":
+        x = embed(params["embed"], token_or_embed, cfg)
+    else:
+        x = token_or_embed.astype(dtype_of(cfg))
+    B = x.shape[0]
+    cache_len = state["len"]
+
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        def body(h, per_layer):
+            lp, kc, vc = per_layer
+            a, kc, vc = attention_decode(
+                lp["attn"], norm(lp["attn_norm"], h, cfg.norm_eps), cfg,
+                kc, vc, cache_len)
+            h = h + a
+            hidden = norm(lp["mlp_norm"], h, cfg.norm_eps)
+            if cfg.family == "moe":
+                h = h + moe_ffn(lp["moe"], hidden, cfg)
+            else:
+                h = h + mlp_block(lp["mlp"], hidden, cfg)
+            return h, (kc, vc)
+
+        x, (knew, vnew) = jax.lax.scan(
+            body, x, (params["layers"], state["kv"]["k"], state["kv"]["v"]))
+        new_state = {"kv": {"k": knew, "v": vnew}, "len": cache_len + 1}
+
+    elif cfg.family == "hybrid":
+        per = cfg.attn_every
+        n_groups = cfg.n_layers // per
+        tail = cfg.n_layers - n_groups * per
+        conv_all, ssd_all = state["conv"], state["ssd"]
+
+        def mamba_body(h, per_layer):
+            lp, cs, ss = per_layer
+            y, cs, ss = mamba_decode_step(
+                lp, norm(lp["norm"], h, cfg.norm_eps), cfg, cs, ss)
+            return h + y, (cs, ss)
+
+        def group_body(h, per_group):
+            glp, cs_g, ss_g, kc, vc = per_group
+            h, (cs_g, ss_g) = jax.lax.scan(mamba_body, h, (glp, cs_g, ss_g))
+            a, kc, vc = attention_decode(
+                params["shared_attn"]["attn"],
+                norm(params["shared_attn"]["attn_norm"], h, cfg.norm_eps),
+                cfg, kc, vc, cache_len)
+            h = h + a
+            h = h + mlp_block(params["shared_attn"]["mlp"],
+                              norm(params["shared_attn"]["mlp_norm"], h,
+                                   cfg.norm_eps), cfg)
+            return h, (cs_g, ss_g, kc, vc)
+
+        grp = cfg.attn_every * n_groups
+        conv_g = conv_all[:grp].reshape((n_groups, per) + conv_all.shape[1:])
+        ssd_g = ssd_all[:grp].reshape((n_groups, per) + ssd_all.shape[1:])
+        x, (conv_g, ssd_g, knew, vnew) = jax.lax.scan(
+            group_body, x,
+            (params["groups"], conv_g, ssd_g,
+             state["kv"]["k"], state["kv"]["v"]))
+        conv_new = conv_g.reshape((grp,) + conv_all.shape[1:])
+        ssd_new = ssd_g.reshape((grp,) + ssd_all.shape[1:])
+        if tail:
+            x, (ct, st) = jax.lax.scan(
+                mamba_body, x,
+                (params["tail"], conv_all[grp:], ssd_all[grp:]))
+            conv_new = jnp.concatenate([conv_new, ct])
+            ssd_new = jnp.concatenate([ssd_new, st])
+        new_state = {"kv": {"k": knew, "v": vnew}, "conv": conv_new,
+                     "ssd": ssd_new, "len": cache_len + 1}
+
+    elif cfg.family == "ssm":
+        period = cfg.slstm_period
+
+        def ml_body(h, per_layer):
+            lp, st = per_layer
+            y, st = mlstm_decode_step(
+                lp, norm(lp["norm"], h, cfg.norm_eps), cfg, st)
+            return h + y, st
+
+        def seg_body(carry, per_seg):
+            h = carry
+            mlp_, m_st, slp, s_st = per_seg
+            h, m_st = jax.lax.scan(ml_body, h, (mlp_, m_st))
+            y, s_st = slstm_decode_step(
+                slp, norm(slp["norm"], h, cfg.norm_eps), cfg, s_st)
+            return h + y, (m_st, s_st)
+
+        x, (m_new, s_new) = jax.lax.scan(
+            seg_body, x,
+            (params["mlstm"], state["mlstm"], params["slstm"],
+             state["slstm"]))
+        new_state = {"mlstm": m_new, "slstm": s_new, "len": cache_len + 1}
+    else:
+        raise ValueError(cfg.family)
+
+    x = norm(params["final_norm"], x, cfg.norm_eps)
+    logits = (x[:, 0] @ params["lm_head"]).astype(jnp.float32)
+    return logits, new_state
+
+
+def prefill(params, inputs: dict, cfg: ModelConfig, max_len: int):
+    """Run the full prompt, returning (last_logits, decode state).
+
+    For attention families the per-layer K/V come back from the trunk and are
+    written into a ``max_len`` cache (sharded along S per DESIGN.md §5);
+    recurrent families carry their O(1) states straight across."""
+    hidden, states = forward(params, inputs, cfg, collect=True)
+    B, S = hidden.shape[:2]
+    state = init_decode_state(cfg, B, max_len)
+
+    def write_kv(kv_state, k, v):
+        kv_state["k"] = jax.lax.dynamic_update_slice(
+            kv_state["k"], k.astype(kv_state["k"].dtype), (0, 0, 0, 0, 0))
+        kv_state["v"] = jax.lax.dynamic_update_slice(
+            kv_state["v"], v.astype(kv_state["v"].dtype), (0, 0, 0, 0, 0))
+        kv_state["k"] = shard(kv_state["k"], "kv_cache_stacked")
+        kv_state["v"] = shard(kv_state["v"], "kv_cache_stacked")
+        return kv_state
+
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        k, v = states                            # (L, B, S, Hkv, dh)
+        state["kv"] = write_kv(state["kv"], k, v)
+    elif cfg.family == "hybrid":
+        (g_states, t_states) = states
+        (conv_g, ssd_g), (k, v) = g_states       # (G, per, B, ...), (G, B, S,...)
+        per = cfg.attn_every
+        n_groups = cfg.n_layers // per
+        grp = n_groups * per
+        conv = conv_g.reshape((grp,) + conv_g.shape[2:])
+        ssd = ssd_g.reshape((grp,) + ssd_g.shape[2:])
+        if t_states is not None:
+            conv_t, ssd_t = t_states
+            conv = jnp.concatenate([conv, conv_t])
+            ssd = jnp.concatenate([ssd, ssd_t])
+        state["conv"] = conv
+        state["ssd"] = ssd
+        state["kv"] = write_kv(state["kv"], k, v)
+    elif cfg.family == "ssm":
+        m_sts, s_sts = states                    # (G, per-1, ...), tuple (G, ...)
+        state["mlstm"] = m_sts
+        state["slstm"] = s_sts
+    state["len"] = jnp.full((B,), S, jnp.int32)
+    logits = (hidden[:, -1] @ params["lm_head"]).astype(jnp.float32)
+    return logits, state

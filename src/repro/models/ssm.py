@@ -1,0 +1,109 @@
+"""Mamba2 block (zamba2 backbone) on the chunked SSD kernel.
+
+Faithful to the Mamba2 computation graph with one documented simplification
+(DESIGN.md §8): the short causal conv is applied to the x-branch only (the
+reference applies it to x, B and C; the difference is a 4-tap smoothing of
+the routing tensors, irrelevant to systems behaviour).
+
+Train/prefill: chunked ``ssd_scan`` (MXU matmuls + O(S/chunk) carry).
+Decode: O(1) recurrent step via ``ssd_step`` with (conv_state, ssd_state).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed import shard
+from ..kernels import ssd_scan
+from ..kernels.ssd.ops import ssd_step
+from .config import ModelConfig
+
+
+def _split_proj(params, x, cfg: ModelConfig):
+    """in_proj → (x_in (B,S,di), z (B,S,di), B (B,S,N), C (B,S,N), dt (B,S,H))."""
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    proj = x @ params["w_in"]                      # (B,S, 2di + 2N + H)
+    xs, z, b, c, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    return xs, z, b, c, dt
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv, kernel k.  x: (B, S, C); w: (k, C).
+    state: (B, k-1, C) carried for decode.  Returns (y, new_state)."""
+    k = w.shape[0]
+    w = w.astype(x.dtype)          # conv taps stored fp32; keep the stream
+    if state is None:              # in model dtype (no silent promotion)
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)         # (B, S+k-1, C)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :]
+              for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else None
+    return out, new_state
+
+
+def _gates(params, dt, cfg: ModelConfig):
+    dtb = jax.nn.softplus(dt.astype(jnp.float32)
+                          + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))   # (H,) negative
+    log_a = dtb * a[None, None, :]                       # (B,S,H)
+    return log_a, dtb
+
+
+def mamba_block(params, x, cfg: ModelConfig, return_state: bool = False):
+    """x: (B, S, D) → (B, S, D) (train/prefill path).
+    return_state → also (conv_state (B,k-1,di), ssd_state (B,H,N,P))."""
+    B, S, D = x.shape
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    P_ = cfg.ssm_head_dim
+
+    xs_raw, z, b, c, dt = _split_proj(params, x, cfg)
+    xs, _ = _causal_conv(xs_raw, params["w_conv"])
+    xs = jax.nn.silu(xs)
+    xs = shard(xs, "act_btd_inner")
+
+    log_a, gate = _gates(params, dt, cfg)                 # (B,S,H)
+    xh = xs.reshape(B, S, H, P_).transpose(0, 2, 1, 3)    # (B,H,S,P)
+    bh = jnp.broadcast_to(b[:, :, None, :], (B, S, H, N)).transpose(0, 2, 1, 3)
+    ch = jnp.broadcast_to(c[:, :, None, :], (B, S, H, N)).transpose(0, 2, 1, 3)
+    la = log_a.transpose(0, 2, 1)                          # (B,H,S)
+    g = gate.transpose(0, 2, 1)
+
+    y, s_fin = ssd_scan(ch, bh, xh, la, g)                 # (B,H,S,P)
+    y = y.transpose(0, 2, 1, 3).reshape(B, S, di)
+    y = y + xs * params["d_skip"].astype(x.dtype).repeat(P_)[None, None, :]
+    y = y * jax.nn.silu(z)
+    out = shard(y @ params["w_out"], "act_btd")
+    if return_state:
+        k = cfg.conv_kernel
+        conv_state = xs_raw[:, -(k - 1):].astype(jnp.float32)
+        return out, (conv_state, s_fin)
+    return out
+
+
+def mamba_decode_step(params, x, cfg: ModelConfig, conv_state, ssd_state):
+    """x: (B, 1, D); conv_state: (B, k-1, di); ssd_state: (B, H, N, P) fp32.
+    Returns (out (B,1,D), conv_state, ssd_state)."""
+    B = x.shape[0]
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    P_ = cfg.ssm_head_dim
+
+    xs, z, b, c, dt = _split_proj(params, x, cfg)
+    xs, conv_state = _causal_conv(xs, params["w_conv"], conv_state)
+    xs = jax.nn.silu(xs)
+
+    log_a, gate = _gates(params, dt, cfg)                  # (B,1,H)
+    xh = xs.reshape(B, H, P_)
+    bh = jnp.broadcast_to(b[:, 0, None, :], (B, H, N))
+    ch = jnp.broadcast_to(c[:, 0, None, :], (B, H, N))
+
+    y, ssd_state = ssd_step(ssd_state, ch, bh, xh,
+                            log_a[:, 0], gate[:, 0])       # (B,H,P)
+    y = y.reshape(B, 1, di)
+    y = y + xs.reshape(B, 1, di) * \
+        params["d_skip"].astype(x.dtype).repeat(P_)[None, None, :]
+    y = y * jax.nn.silu(z)
+    return y @ params["w_out"], conv_state, ssd_state

@@ -1,0 +1,149 @@
+"""xLSTM blocks: mLSTM (matrix memory — rides the SSD kernel) and sLSTM
+(scalar memory with recurrent gating — inherently sequential lax.scan).
+
+Deviations from the xLSTM reference, documented per DESIGN.md §8:
+* mLSTM input gate is σ(i) instead of exp(i)+max-stabilizer (the stabilizer
+  is a third recurrence that breaks the chunked form; σ keeps the linear
+  recurrence bounded with equivalent systems behaviour),
+* the mLSTM normalizer n_t = f·n_{t-1} + i·k_t rides along as an extra
+  value column in the SSD state (ones-augmentation), so y = (q·S)/max(|q·n|,1)
+  comes out of the same kernel call,
+* no causal-conv front on the q/k path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed import shard
+from ..kernels import ssd_scan
+from ..kernels.ssd.ops import ssd_step
+from .config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def _mlstm_qkvg(params, x, cfg: ModelConfig):
+    """Block width: up-projection to 2D = (main m | output gate z); q/k/v
+    are D→D over the main branch (keeps the 48-block model at ~1.3B)."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dh = D // H
+    up = x @ params["w_up"]                     # (B,S,2D)
+    m, z = jnp.split(up, 2, axis=-1)
+    q = m @ params["w_q"]
+    k = m @ params["w_k"]
+    v = m @ params["w_v"]
+    gates = x @ params["w_gates"] + params["b_gates"]   # (B,S,2H): i,f
+    i_raw, f_raw = jnp.split(gates, 2, axis=-1)
+    return (q.reshape(B, S, H, dh), k.reshape(B, S, H, dh),
+            v.reshape(B, S, H, dh), i_raw, f_raw, z)
+
+
+def mlstm_block(params, x, cfg: ModelConfig, return_state: bool = False):
+    """x: (B, S, D) → (B, S, D).
+    return_state → also the final (B, H, dh, dh+1) matrix memory."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dh = D // H
+    q, k, v, i_raw, f_raw, z = _mlstm_qkvg(params, x, cfg)
+
+    la = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))      # (B,S,H)
+    gi = jax.nn.sigmoid(i_raw.astype(jnp.float32))
+
+    # ones-augmented values → normalizer rides in the last state column
+    v_aug = jnp.concatenate(
+        [v, jnp.ones((B, S, H, 1), v.dtype)], axis=-1)      # (B,S,H,dh+1)
+
+    perm = lambda t: t.transpose(0, 2, 1, 3)
+    y_aug, s_fin = ssd_scan(perm(q) * dh ** -0.5, perm(k), perm(v_aug),
+                            la.transpose(0, 2, 1), gi.transpose(0, 2, 1))
+    y, n = y_aug[..., :dh], y_aug[..., dh:]
+    y = y / jnp.maximum(jnp.abs(n), 1.0)
+    y = perm(y).reshape(B, S, D)
+    y = y * jax.nn.silu(z)                                   # gated output
+    out = shard(y @ params["w_down"], "act_btd")
+    if return_state:
+        return out, s_fin
+    return out
+
+
+def mlstm_decode_step(params, x, cfg: ModelConfig, state):
+    """x: (B, 1, D); state: (B, H, dh, dh+1) fp32 (incl. normalizer column)."""
+    B = x.shape[0]
+    H = cfg.n_heads
+    D = x.shape[-1]
+    dh = D // H
+    q, k, v, i_raw, f_raw, z = _mlstm_qkvg(params, x, cfg)
+    la = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))[:, 0]   # (B,H)
+    gi = jax.nn.sigmoid(i_raw.astype(jnp.float32))[:, 0]
+    v_aug = jnp.concatenate([v, jnp.ones((B, 1, H, 1), v.dtype)], axis=-1)
+    y_aug, state = ssd_step(state, q[:, 0] * dh ** -0.5, k[:, 0],
+                            v_aug[:, 0], la, gi)
+    y, n = y_aug[..., :dh], y_aug[..., dh:]
+    y = (y / jnp.maximum(jnp.abs(n), 1.0)).reshape(B, 1, D)
+    y = y * jax.nn.silu(z)
+    return y @ params["w_down"], state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM — sequential scan over time (no parallel form exists)
+# ---------------------------------------------------------------------------
+
+def _slstm_cell(params, h_prev, c_prev, n_prev, m_prev, x_t, cfg):
+    """One sLSTM step with exponential gating + stabilizer state m.
+    Shapes: h/c/n/m: (B, H, dh); x_t: (B, D)."""
+    B = x_t.shape[0]
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    zx = x_t @ params["w_x"] + params["b"]                # (B, 4D)
+    # block-diagonal recurrent weights per head: (H, dh, 4dh)
+    zh = jnp.einsum("bhd,hdk->bhk", h_prev, params["r"])  # (B,H,4dh)
+    z = zx.reshape(B, H, 4 * dh) + zh
+    i_raw, f_raw, g_raw, o_raw = jnp.split(z, 4, axis=-1)
+    i_raw = i_raw.astype(jnp.float32)
+    f_raw = f_raw.astype(jnp.float32)
+
+    log_f = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(log_f + m_prev, i_raw)            # stabilizer
+    i = jnp.exp(i_raw - m_new)
+    f = jnp.exp(log_f + m_prev - m_new)
+    g = jnp.tanh(g_raw.astype(jnp.float32))
+    o = jax.nn.sigmoid(o_raw.astype(jnp.float32))
+    c_new = f * c_prev + i * g
+    n_new = f * n_prev + i
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return h_new, c_new, n_new, m_new
+
+
+def slstm_block(params, x, cfg: ModelConfig, return_state: bool = False):
+    """x: (B, S, D) → (B, S, D), lax.scan over time."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dh = D // H
+
+    def step(carry, x_t):
+        h, c, n, m = carry
+        h, c, n, m = _slstm_cell(params, h, c, n, m, x_t, cfg)
+        return (h, c, n, m), h
+
+    zeros = jnp.zeros((B, H, dh), jnp.float32)
+    init = (zeros, zeros, zeros, jnp.full((B, H, dh), -1e30, jnp.float32))
+    fin, hs = jax.lax.scan(step, init, jnp.moveaxis(x, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(B, S, D).astype(x.dtype)
+    out = shard(y @ params["w_out"], "act_btd")
+    if return_state:
+        return out, fin
+    return out
+
+
+def slstm_decode_step(params, x, cfg: ModelConfig, state):
+    """x: (B, 1, D); state: tuple(h, c, n, m) each (B, H, dh) fp32."""
+    h, c, n, m = state
+    h, c, n, m = _slstm_cell(params, h, c, n, m, x[:, 0], cfg)
+    B = x.shape[0]
+    y = h.reshape(B, 1, -1).astype(x.dtype)
+    return y @ params["w_out"], (h, c, n, m)

@@ -1,0 +1,10 @@
+"""repro.optim — optimizers, schedules and gradient transforms (from
+scratch; no optax in this container)."""
+
+from .optimizers import Optimizer, adafactor, adamw, pick_optimizer
+from .schedules import cosine_schedule, linear_warmup
+from .compress import int8_compress_decompress, make_error_feedback
+
+__all__ = ["Optimizer", "adamw", "adafactor", "pick_optimizer",
+           "cosine_schedule", "linear_warmup", "int8_compress_decompress",
+           "make_error_feedback"]

@@ -1,0 +1,148 @@
+"""AdamW and Adafactor.
+
+State trees mirror the parameter tree, so parameter shardings apply to
+optimizer state verbatim (the launcher shards both with the same specs).
+
+Adafactor is the default at ≥100B parameters (DESIGN.md §5): its factored
+second moment keeps optimizer state ≈ O(rows+cols) instead of 2× params —
+the difference between fitting and not fitting a 405B model in 16 GB/chip
+HBM × 256.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple]     # (grads, state, params, step) -> (new_params, new_state)
+    name: str = "opt"
+
+
+def _global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(lr: float | Callable[[jax.Array], jax.Array] = 3e-4,
+          b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, grad_clip: float = 1.0) -> Optimizer:
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, step=None):
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        count = state["count"] + 1
+        lr_t = lr(count) if callable(lr) else lr
+        bc1 = 1 - b1 ** count.astype(jnp.float32)
+        bc2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            gf = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * gf
+            v = b2 * v + (1 - b2) * gf * gf
+            mh = m / bc1
+            vh = v / bc2
+            step_ = lr_t * (mh / (jnp.sqrt(vh) + eps)
+                            + weight_decay * p.astype(jnp.float32))
+            return (p.astype(jnp.float32) - step_).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"m": new_m, "v": new_v, "count": count}, gnorm
+
+    return Optimizer(init=init, update=update, name="adamw")
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment, no first moment by default)
+# ---------------------------------------------------------------------------
+
+def adafactor(lr: float | Callable = 1e-3, decay: float = 0.8,
+              eps: float = 1e-30, clip_threshold: float = 1.0,
+              weight_decay: float = 0.0, grad_clip: float = 1.0) -> Optimizer:
+
+    def _factored(shape) -> bool:
+        return len(shape) >= 2
+
+    def init(params):
+        def st(p):
+            if _factored(p.shape):
+                row = jnp.zeros(p.shape[:-1], jnp.float32)
+                col = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                return {"vr": row, "vc": col}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"s": jax.tree.map(st, params,
+                                  is_leaf=lambda x: hasattr(x, "shape")),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, step=None):
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        count = state["count"] + 1
+        lr_t = lr(count) if callable(lr) else lr
+        beta = 1.0 - count.astype(jnp.float32) ** -decay
+
+        def upd(p, g, s):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if _factored(p.shape):
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = (vr / jnp.maximum(
+                    vr.mean(axis=-1, keepdims=True), eps))[..., None] \
+                    * vc[..., None, :]
+                u = gf * jax.lax.rsqrt(jnp.maximum(denom, eps))
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = gf * jax.lax.rsqrt(jnp.maximum(v, eps))
+                new_s = {"v": v}
+            # update clipping (RMS ≤ clip_threshold)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            step_ = lr_t * u + weight_decay * lr_t * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - step_).astype(p.dtype), new_s
+
+        out = jax.tree.map(upd, params, grads, state["s"],
+                           is_leaf=lambda x: isinstance(x, dict)
+                           and ("v" in x or "vr" in x))
+        is_pair = lambda t: isinstance(t, tuple)
+        new_params = jax.tree.map(lambda t: t[0], out, is_leaf=is_pair)
+        new_s = jax.tree.map(lambda t: t[1], out, is_leaf=is_pair)
+        return new_params, {"s": new_s, "count": count}, gnorm
+
+    return Optimizer(init=init, update=update, name="adafactor")
+
+
+def pick_optimizer(n_params: int, lr=None) -> Optimizer:
+    """Policy: Adafactor ≥ 100B params (HBM), AdamW below."""
+    if n_params >= 100e9:
+        return adafactor(lr=lr or 1e-3)
+    return adamw(lr=lr or 3e-4)

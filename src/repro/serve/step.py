@@ -1,0 +1,28 @@
+"""Serving steps: prefill (prompt → cache) and decode (one token/step)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+from ..models.model import decode_step as _decode_step
+from ..models.model import prefill as _prefill
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int):
+    def prefill_step(params, inputs):
+        return _prefill(params, inputs, cfg, max_len=max_len)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, sample: str = "greedy"):
+    def decode(params, state, token_or_embed):
+        logits, state = _decode_step(params, state, token_or_embed, cfg)
+        # mask padded vocab columns before sampling
+        if cfg.vocab_padded > cfg.vocab:
+            mask = jnp.arange(cfg.vocab_padded) >= cfg.vocab
+            logits = jnp.where(mask[None, :], -jnp.inf, logits)
+        next_token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_token[:, None], logits, state
+    return decode

@@ -1,0 +1,25 @@
+"""repro.tabular — the ML-pipeline operator library used by agentic search.
+
+Pipeline stages as stratum logical operators, each with a "python" tier
+(naive NumPy: the Pandas/scikit-learn stand-in, copies + per-op dispatch) and
+a "jax" tier (jitted jnp: the paper's Rust-kernel analogue), plus metadata
+rules and composite lowerings (cv_score, table_vectorizer, grid_search).
+
+Importing this package registers all implementations with repro.core.
+"""
+
+from . import impls  # noqa: F401  (registration side effects)
+from . import lowerings  # noqa: F401
+from .ops import (concat, cv_score, elasticnet_fit, gbt_fit, grid_search,
+                  join, kfold_split, mean_of, metric, onehot, predict, project,
+                  read, ridge_fit, scale, string_encode, table_vectorizer,
+                  target_encode, datetime_encode, impute, svd_reduce,
+                  train_test_split)
+
+__all__ = [
+    "read", "project", "concat", "join", "impute", "scale", "onehot",
+    "string_encode", "target_encode", "datetime_encode", "table_vectorizer",
+    "svd_reduce", "ridge_fit", "elasticnet_fit", "gbt_fit", "predict",
+    "metric", "kfold_split", "train_test_split", "cv_score", "grid_search",
+    "mean_of",
+]

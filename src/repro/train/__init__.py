@@ -1,0 +1,5 @@
+"""repro.train — distributed training step, fault tolerance, elasticity."""
+
+from .step import make_train_step
+
+__all__ = ["make_train_step"]

@@ -1,0 +1,109 @@
+"""Microbatched, policy-aware training step.
+
+* gradient accumulation via ``lax.scan`` over the leading microbatch dim —
+  one microbatch's activations live at a time (with per-layer remat inside
+  the model trunk),
+* fp32 gradient accumulators regardless of param dtype,
+* vocab-parallel CE when TP is active (three O(T) psums instead of an
+  O(T·V) gather — see distributed/vocab_ce.py),
+* optional int8+error-feedback gradient compression before the optimizer
+  (policy.grad_compress; DP reductions inside autodiff are GSPMD-implicit,
+  so compression here models the wire format of an explicit-DP deployment).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed import current_context
+from ..distributed.policy import Policy
+from ..distributed.vocab_ce import vocab_parallel_ce
+from ..kernels import fused_cross_entropy
+from ..models.config import ModelConfig
+from ..models.model import forward
+from ..optim import Optimizer, make_error_feedback
+
+
+def _loss(params, mb_inputs: dict, cfg: ModelConfig, policy: Optional[Policy]):
+    hidden, _ = forward(params, mb_inputs, cfg)
+    labels = mb_inputs["labels"]
+    valid = labels >= 0
+    labels = jnp.maximum(labels, 0)
+    D = hidden.shape[-1]
+    if policy is not None and policy.tp:
+        return vocab_parallel_ce(hidden.reshape(-1, D), params["lm_head"],
+                                 labels.reshape(-1), valid.reshape(-1),
+                                 n_valid=cfg.vocab)
+    return fused_cross_entropy(hidden, params["lm_head"], labels,
+                               valid=valid, n_valid=cfg.vocab)
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer,
+                    policy: Optional[Policy] = None,
+                    grad_compress: bool = False,
+                    grad_pspecs=None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  ``batch`` leaves have leading dim M (microbatches).
+
+    ``grad_pspecs``: optional PartitionSpec tree for the fp32 gradient
+    accumulators (ZeRO-2: grads reduce-scattered into dp-sharded buffers —
+    without it, non-FSDP models would carry a replicated fp32 param-sized
+    accumulator through the microbatch scan)."""
+
+    if grad_compress:
+        ef_init, ef_apply = make_error_feedback()
+
+    def _constrain(tree):
+        if grad_pspecs is None or policy is None:
+            return tree
+        from jax.sharding import NamedSharding
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(
+                x, NamedSharding(policy.mesh, s)), tree, grad_pspecs)
+
+    def train_step(params, opt_state, batch):
+        zeros = _constrain(jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+        def accum(carry, mb):
+            g_acc, loss_acc = carry
+            loss, grads = jax.value_and_grad(_loss)(params, mb, cfg, policy)
+            # constrain the raw grads, not just the sum: GSPMD then emits a
+            # reduce-scatter into the ZeRO shard instead of a full
+            # all-reduce + slice (≈2× collective bytes per microbatch —
+            # see EXPERIMENTS.md §Perf H1.2)
+            grads = _constrain(grads)
+            g_acc = _constrain(jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), g_acc, grads))
+            return (g_acc, loss_acc + loss), None
+
+        (grads, loss_sum), _ = jax.lax.scan(
+            accum, (zeros, jnp.zeros((), jnp.float32)), batch)
+        M = jax.tree_util.tree_leaves(batch)[0].shape[0]
+        grads = jax.tree.map(lambda g: g / M, grads)
+        loss = loss_sum / M
+
+        if grad_compress:
+            grads, ef = ef_apply(grads, opt_state["ef"])
+            inner = opt_state["opt"]
+        else:
+            inner = opt_state
+
+        new_params, new_inner, gnorm = optimizer.update(grads, inner, params)
+        new_opt = ({"opt": new_inner, "ef": ef} if grad_compress
+                   else new_inner)
+        metrics = {"loss": loss, "grad_norm": gnorm}
+        return new_params, new_opt, metrics
+
+    def init_opt_state(params):
+        inner = optimizer.init(params)
+        if grad_compress:
+            return {"opt": inner, "ef": ef_init(params)}
+        return inner
+
+    train_step.init_opt_state = init_opt_state
+    return train_step

@@ -1,0 +1,19 @@
+import os
+
+# Tests must see exactly ONE device (the dry-run sets its own flags in a
+# separate process; see src/repro/launch/dryrun.py).
+assert "xla_force_host_platform_device_count" not in \
+    os.environ.get("XLA_FLAGS", ""), \
+    "test process must not force a device count"
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running test")

@@ -1,0 +1,254 @@
+"""Pallas kernel sweeps: shapes × dtypes, assert_allclose vs ref.py oracles
+(interpret mode on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.common import force_backend
+from repro.kernels.cross_entropy.kernel import ce_forward_pallas
+from repro.kernels.cross_entropy.ops import (_forward_chunked,
+                                             fused_cross_entropy)
+from repro.kernels.cross_entropy.ref import cross_entropy_ref
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import (attention_chunked,
+                                               attention_ref)
+from repro.kernels.moe_gmm.kernel import moe_gmm_pallas
+from repro.kernels.moe_gmm.ref import moe_gmm_ref
+from repro.kernels.rmsnorm.kernel import rmsnorm_pallas
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.ssd.kernel import ssd_scan_pallas
+from repro.kernels.ssd.ops import ssd_step
+from repro.kernels.ssd.ref import ssd_ref
+
+RNG = np.random.default_rng(0)
+
+
+def _arr(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape) * scale, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,D", [
+    (1, 4, 2, 256, 64), (2, 2, 2, 128, 128), (1, 8, 2, 384, 64),
+    (1, 4, 1, 300, 64),                      # non-divisible seq, MQA
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0),
+                                           (True, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, Hq, Hkv, S, D, causal, window, dtype):
+    q = _arr((B, Hq, S, D), dtype)
+    k = _arr((B, Hkv, S, D), dtype)
+    v = _arr((B, Hkv, S, D), dtype)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    out = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 interpret=True)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+def test_chunked_reference_matches_exact():
+    q = _arr((1, 4, 333, 64))
+    k = _arr((1, 2, 333, 64))
+    v = _arr((1, 2, 333, 64))
+    ref = attention_ref(q, k, v, causal=True)
+    chk = attention_chunked(q, k, v, causal=True, block_k=128)
+    np.testing.assert_allclose(np.asarray(chk), np.asarray(ref), atol=2e-5)
+
+
+def test_chunked_reference_grads_match():
+    q = _arr((1, 2, 96, 32))
+    k = _arr((1, 2, 96, 32))
+    v = _arr((1, 2, 96, 32))
+
+    def loss_exact(q, k, v):
+        return attention_ref(q, k, v, causal=True).sum()
+
+    def loss_chunk(q, k, v):
+        return attention_chunked(q, k, v, causal=True, block_k=32).sum()
+
+    g1 = jax.grad(loss_exact, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_chunk, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,D", [
+    (2, 8, 2, 1024, 64), (1, 4, 4, 700, 128), (2, 16, 8, 300, 64),
+])
+def test_decode_attention_sweep(B, Hq, Hkv, S, D):
+    q = _arr((B, Hq, D))
+    k = _arr((B, S, Hkv, D))
+    v = _arr((B, S, Hkv, D))
+    lens = jnp.asarray(RNG.integers(S // 2, S, B), jnp.int32)
+    ref = decode_attention_ref(q, k, v, lens)
+    out = decode_attention_pallas(q, k, v, lens, interpret=True,
+                                  block_s=256)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_decode_attention_lse_merge():
+    """Sharded-cache LSE merge (flash-decode): splitting the cache and
+    merging partial (out, m, l) must equal the unsharded result."""
+    B, Hq, Hkv, S, D = 1, 4, 2, 512, 64
+    q = _arr((B, Hq, D))
+    k = _arr((B, S, Hkv, D))
+    v = _arr((B, S, Hkv, D))
+    lens = jnp.asarray([S], jnp.int32)
+    ref = decode_attention_ref(q, k, v, lens)
+
+    halves = []
+    for piece in (slice(0, S // 2), slice(S // 2, S)):
+        out, m, l = decode_attention_pallas(
+            q, k[:, piece], v[:, piece],
+            jnp.asarray([S // 2], jnp.int32), interpret=True,
+            block_s=128, return_lse=True)
+        halves.append((out.astype(jnp.float32), m, l))
+    (o1, m1, l1), (o2, m2, l2) = halves
+    m = jnp.maximum(m1, m2)
+    w1 = jnp.exp(m1 - m) * l1
+    w2 = jnp.exp(m2 - m) * l2
+    merged = (o1 * w1[..., None] + o2 * w2[..., None]) / (w1 + w2)[..., None]
+    np.testing.assert_allclose(np.asarray(merged), np.asarray(ref),
+                               atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(4, 37, 256), (1, 128), (3, 5, 7, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(shape, dtype):
+    x = _arr(shape, dtype)
+    w = _arr((shape[-1],))
+    ref = rmsnorm_ref(x, w)
+    out = rmsnorm_pallas(x, w, interpret=True)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# ssd
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,S,N,P,chunk", [
+    (1, 2, 256, 16, 32, 64), (2, 1, 128, 8, 16, 32), (1, 3, 192, 64, 64, 64),
+])
+def test_ssd_sweep(B, H, S, N, P, chunk):
+    c = _arr((B, H, S, N))
+    b = _arr((B, H, S, N), scale=0.3)
+    x = _arr((B, H, S, P))
+    la = -jnp.abs(_arr((B, H, S), scale=0.1))
+    g = jnp.abs(_arr((B, H, S), scale=0.5))
+    yr, sr = ssd_ref(c, b, x, la, g)
+    yp, sp = ssd_scan_pallas(c, b, x, la, g, interpret=True, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(yp), np.asarray(yr), atol=5e-4)
+    np.testing.assert_allclose(np.asarray(sp), np.asarray(sr), atol=5e-4)
+
+
+def test_ssd_step_matches_scan():
+    """Decode step recurrence == scan, position by position."""
+    B, H, S, N, P = 1, 2, 16, 8, 8
+    c = _arr((B, H, S, N))
+    b = _arr((B, H, S, N), scale=0.3)
+    x = _arr((B, H, S, P))
+    la = -jnp.abs(_arr((B, H, S), scale=0.1))
+    g = jnp.abs(_arr((B, H, S), scale=0.5))
+    y_ref, s_ref = ssd_ref(c, b, x, la, g)
+    s = jnp.zeros((B, H, N, P), jnp.float32)
+    ys = []
+    for t in range(S):
+        y, s = ssd_step(s, c[:, :, t], b[:, :, t], x[:, :, t],
+                        la[:, :, t], g[:, :, t])
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.stack(ys, 2)),
+                               np.asarray(y_ref), atol=5e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# moe gmm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("T,D,E,F,bt,bf", [
+    (512, 64, 8, 128, 128, 64), (256, 32, 4, 64, 64, 64),
+    (130, 32, 5, 48, 64, 48),                # ragged sizes
+])
+def test_moe_gmm_sweep(T, D, E, F, bt, bf):
+    sizes = RNG.multinomial(T, [1 / E] * E)
+    x = _arr((T, D))
+    w = _arr((E, D, F))
+    ref = moe_gmm_ref(x, w, jnp.asarray(sizes))
+    out = moe_gmm_pallas(x, w, jnp.asarray(sizes), interpret=True,
+                         block_t=bt, block_f=bf)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-4)
+
+
+def test_moe_gmm_empty_experts():
+    sizes = np.array([0, 100, 0, 28], np.int32)
+    x = _arr((128, 32))
+    w = _arr((4, 32, 64))
+    ref = moe_gmm_ref(x, w, jnp.asarray(sizes))
+    out = moe_gmm_pallas(x, w, jnp.asarray(sizes), interpret=True,
+                         block_t=64, block_f=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused cross entropy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("T,D,V", [(128, 64, 1000), (64, 32, 513)])
+def test_ce_forward_paths_agree(T, D, V):
+    x = _arr((T, D), scale=0.5)
+    w = _arr((D, V), scale=0.1)
+    lab = jnp.asarray(RNG.integers(0, V, T), jnp.int32)
+    ref = cross_entropy_ref(x, w, lab)
+    fused = fused_cross_entropy(x, w, lab)
+    assert abs(float(ref) - float(fused)) < 1e-4
+    lse_p, ll_p = ce_forward_pallas(x, w, lab, interpret=True,
+                                    block_t=64, block_v=256)
+    lse_c, ll_c = _forward_chunked(x, w, lab, V)
+    np.testing.assert_allclose(np.asarray(lse_p), np.asarray(lse_c),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(ll_p), np.asarray(ll_c),
+                               atol=1e-4)
+
+
+def test_ce_padded_vocab_masking():
+    """n_valid < V: padded columns must not affect the loss."""
+    T, D, V = 32, 16, 256
+    x = _arr((T, D), scale=0.5)
+    w = _arr((D, V), scale=0.1)
+    lab = jnp.asarray(RNG.integers(0, 200, T), jnp.int32)
+    ref = cross_entropy_ref(x, w[:, :200], lab)
+    # poison the padding columns — must be masked out exactly
+    w_pad = w.at[:, 200:].set(100.0)
+    fused = fused_cross_entropy(x, w_pad, lab, n_valid=200)
+    assert abs(float(ref) - float(fused)) < 1e-4
+
+
+def test_ce_grads_vs_autodiff():
+    T, D, V = 64, 32, 500
+    x = _arr((T, D), scale=0.5)
+    w = _arr((D, V), scale=0.1)
+    lab = jnp.asarray(RNG.integers(0, V, T), jnp.int32)
+    gref = jax.grad(lambda x, w: cross_entropy_ref(x, w, lab),
+                    argnums=(0, 1))(x, w)
+    gfus = jax.grad(lambda x, w: fused_cross_entropy(x, w, lab),
+                    argnums=(0, 1))(x, w)
+    for a, b in zip(gref, gfus):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)

@@ -1,0 +1,98 @@
+"""Optimizers, schedules, gradient compression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (adafactor, adamw, cosine_schedule,
+                         int8_compress_decompress, linear_warmup,
+                         make_error_feedback)
+
+
+def _optimize(opt, steps=200):
+    """Minimize ||Wx - y||² over a small linear model."""
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(rng.normal(size=(64, 8)), jnp.float32)
+    w_true = jnp.asarray(rng.normal(size=(8, 4)), jnp.float32)
+    Y = X @ w_true
+    params = {"w": jnp.zeros((8, 4), jnp.float32),
+              "b": jnp.zeros((4,), jnp.float32)}
+
+    def loss(p):
+        return jnp.mean((X @ p["w"] + p["b"] - Y) ** 2)
+
+    state = opt.init(params)
+    step = jax.jit(lambda p, s: opt.update(jax.grad(loss)(p), s, p))
+    for _ in range(steps):
+        params, state, _ = step(params, state)
+    return float(loss(params))
+
+
+def test_adamw_converges():
+    assert _optimize(adamw(lr=0.05)) < 1e-3
+
+
+def test_adafactor_converges():
+    # adafactor's RMS-clipped updates need a conservative lr on tiny problems
+    assert _optimize(adafactor(lr=0.02), steps=600) < 1e-2
+
+
+def test_grad_clip_bounds_update():
+    opt = adamw(lr=1.0, grad_clip=1e-6)
+    params = {"w": jnp.ones((4,))}
+    g = {"w": jnp.full((4,), 1e6)}
+    state = opt.init(params)
+    new, _, gnorm = opt.update(g, state, params)
+    assert float(gnorm) > 1e5              # reported pre-clip norm
+    assert float(jnp.max(jnp.abs(new["w"] - params["w"]))) < 1.1
+
+
+def test_schedules_shape():
+    s = cosine_schedule(1e-3, warmup_steps=10, total_steps=100)
+    steps = jnp.arange(0, 100)
+    lrs = jax.vmap(s)(steps)
+    assert float(lrs[0]) < 1e-4            # warmup start
+    assert abs(float(lrs[10]) - 1e-3) < 1e-4
+    assert float(lrs[99]) < float(lrs[10])
+    w = linear_warmup(1e-3, 10)
+    assert abs(float(w(jnp.asarray(20))) - 1e-3) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# int8 compression
+# ---------------------------------------------------------------------------
+
+def test_int8_roundtrip_error_bounded():
+    rng = np.random.default_rng(1)
+    g = jnp.asarray(rng.normal(size=(1000,)), jnp.float32)
+    g_hat, resid = int8_compress_decompress(g)
+    # per-block max / 127 quantization error bound
+    assert float(jnp.max(jnp.abs(resid))) <= float(jnp.max(jnp.abs(g))) / 127 + 1e-6
+    np.testing.assert_allclose(np.asarray(g_hat + resid), np.asarray(g),
+                               atol=1e-6)
+
+
+def test_error_feedback_preserves_convergence():
+    """SGD with int8+EF must converge like exact SGD on a quadratic."""
+    rng = np.random.default_rng(2)
+    A = jnp.asarray(rng.normal(size=(16, 16)) / 4, jnp.float32)
+    A = A @ A.T + 0.5 * jnp.eye(16)
+    b = jnp.asarray(rng.normal(size=(16,)), jnp.float32)
+
+    def grad(x):
+        return A @ x - b
+
+    ef_init, ef_apply = make_error_feedback()
+    x = jnp.zeros(16)
+    x_ef = jnp.zeros(16)
+    ef = ef_init({"x": x})
+    lr = 0.1
+    for _ in range(300):
+        x = x - lr * grad(x)
+        g_hat, ef2 = ef_apply({"x": grad(x_ef)}, ef)
+        ef = ef2
+        x_ef = x_ef - lr * g_hat["x"]
+    x_star = jnp.linalg.solve(A, b)
+    assert float(jnp.linalg.norm(x - x_star)) < 1e-3
+    assert float(jnp.linalg.norm(x_ef - x_star)) < 1e-2

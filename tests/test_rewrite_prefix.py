@@ -1,0 +1,97 @@
+"""GBT prefix-sharing rewrite (beyond-paper, §Perf H3.2): exactness and
+structure, plus the MoE equal-groups gmm path."""
+
+import numpy as np
+import pytest
+
+from repro.core import PipelineBatch, Stratum
+from repro.core.dag import toposort
+import repro.tabular as T
+
+
+def _pair(seed=1, n=3000):
+    x = T.read("uk_housing", n, seed=0)
+    y = T.project(x, [0])
+    Xv = T.scale(T.impute(T.project(x, [10, 11, 12, 13])))
+    s20 = T.cv_score(Xv, y, {"name": "gbt_fit", "n_trees": 20, "depth": 3},
+                     k=2, seed=seed)
+    s40 = T.cv_score(Xv, y, {"name": "gbt_fit", "n_trees": 40, "depth": 3},
+                     k=2, seed=seed)
+    return s20, s40
+
+
+def test_prefix_rewrite_fires_and_is_exact():
+    s20, s40 = _pair()
+    sess = Stratum(memory_budget_bytes=1 << 30)
+    sinks, sel, plan, _, rw, _, _ = sess.compile_batch(
+        PipelineBatch([s20, s40], ["a", "b"]))
+    ops_ = toposort(sinks)
+    fits = [o for o in ops_ if o.op_name == "gbt_fit"]
+    prefixes = [o for o in ops_ if o.op_name == "gbt_prefix"]
+    assert len(fits) == 2          # one 40-tree fit per fold
+    assert len(prefixes) == 2      # 20-tree models extracted
+    assert all(o.spec["n_trees"] == 40 for o in fits)
+
+    res, _ = sess.run_batch(PipelineBatch([s20, s40], ["a", "b"]))
+    plain = Stratum(memory_budget_bytes=1 << 30,
+                    enable=("lowering", "selection"))
+    res0, _ = plain.run_batch(PipelineBatch([s20, s40], ["a0", "b0"]))
+    assert float(res["a"]) == pytest.approx(float(res0["a0"]), abs=0)
+    assert float(res["b"]) == pytest.approx(float(res0["b0"]), abs=0)
+
+
+def test_prefix_rewrite_respects_differing_hyperparams():
+    """Different depth/lr must NOT be merged."""
+    x = T.read("uk_housing", 2000, seed=0)
+    y = T.project(x, [0])
+    Xv = T.scale(T.impute(T.project(x, [10, 11])))
+    a = T.cv_score(Xv, y, {"name": "gbt_fit", "n_trees": 20, "depth": 2},
+                   k=2, seed=3)
+    b = T.cv_score(Xv, y, {"name": "gbt_fit", "n_trees": 40, "depth": 3},
+                   k=2, seed=3)
+    sess = Stratum(memory_budget_bytes=1 << 30)
+    sinks, *_ = sess.compile_batch(PipelineBatch([a, b], ["a", "b"]))
+    fits = [o for o in toposort(sinks) if o.op_name == "gbt_fit"]
+    assert len(fits) == 4          # 2 folds × 2 distinct configs — no merge
+
+
+def test_moe_equal_groups_matches_ref():
+    import jax.numpy as jnp
+    from repro.kernels.moe_gmm.ops import moe_gmm
+    from repro.kernels.moe_gmm.ref import moe_gmm_ref
+    rng = np.random.default_rng(0)
+    E, C, D, F = 4, 16, 8, 12
+    x = jnp.asarray(rng.normal(size=(E * C, D)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(E, D, F)), jnp.float32)
+    sizes = jnp.full((E,), C, jnp.int32)
+    ref = moe_gmm_ref(x, w, sizes)
+    fast = moe_gmm(x, w, sizes, equal_groups=C)
+    np.testing.assert_allclose(np.asarray(fast), np.asarray(ref),
+                               atol=1e-5)
+
+
+def test_variant_batching_exact():
+    """H3.4: vmapped hyperparameter groups produce identical results to
+    individual execution."""
+    import repro.core.selection as sel
+    x = T.read("uk_housing", 4000, seed=0)
+    y = T.project(x, [0])
+    Xv = T.scale(T.impute(T.project(x, [10, 11, 12, 13])))
+    score, idx = T.grid_search(
+        Xv, y, "ridge_fit",
+        [{"alpha": a} for a in (0.1, 1.0, 10.0)], k=2, seed=4)
+
+    saved = dict(sel._VMAP_GROUPS)
+    try:
+        sel._VMAP_GROUPS.clear()
+        r0, rep0 = Stratum(memory_budget_bytes=1 << 30).run_batch(
+            PipelineBatch([score, idx], ["s", "i"]))
+        assert "jax-vmap" not in rep0.run.per_backend
+    finally:
+        sel._VMAP_GROUPS.update(saved)
+    r1, rep1 = Stratum(memory_budget_bytes=1 << 30).run_batch(
+        PipelineBatch([score, idx], ["s", "i"]))
+    assert rep1.run.per_backend.get("jax-vmap", 0) >= 6
+    np.testing.assert_allclose(float(np.asarray(r0["s"])),
+                               float(np.asarray(r1["s"])), atol=1e-5)
+    assert int(np.asarray(r0["i"])) == int(np.asarray(r1["i"]))

@@ -1,0 +1,127 @@
+"""Tabular operator library: python-tier vs jax-tier equivalence, GBT
+cross-implementation agreement, estimator sanity."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dag import LazyOp, TRANSFORM
+from repro.core.selection import impls_for
+from repro.data.tabular import generate_uk_housing
+from repro.tabular import gbt
+import repro.tabular as T
+
+
+def _table(n=400, seed=0):
+    return np.asarray(generate_uk_housing(n, seed=seed))
+
+
+def _run_both(op_name, spec, inputs, seed=None, atol=2e-3):
+    op = LazyOp(op_name, TRANSFORM, spec=spec,
+                inputs=(), seed=seed)
+    impls = {i.backend: i for i in impls_for(op_name) if i.fidelity == "exact"}
+    assert "python" in impls and "jax" in impls, op_name
+    py = impls["python"].fn(op, inputs)
+    jx = impls["jax"].fn(op, inputs)
+    for a, b in zip(py, jx):
+        np.testing.assert_allclose(np.asarray(a, np.float64),
+                                   np.asarray(b, np.float64),
+                                   atol=atol, rtol=2e-3)
+
+
+@pytest.mark.parametrize("op_name,spec,make_inputs", [
+    ("project", {"cols": (1, 3, 5)}, lambda X: [X]),
+    ("cleaner", {}, lambda X: [X]),
+    ("log1p", {}, lambda X: [np.abs(np.nan_to_num(X))]),
+    ("impute_fit", {"strategy": "mean"}, lambda X: [X[:, 10:14]]),
+    ("scaler_fit", {}, lambda X: [np.nan_to_num(X[:, 10:14])]),
+    ("datetime_encode", {}, lambda X: [X[:, 1:2]]),
+    ("onehot", {"cards": (5, 2)}, lambda X: [X[:, 2:4]]),
+    ("string_encode", {"dim": 8}, lambda X: [X[:, 5:6]]),
+])
+def test_tier_equivalence(op_name, spec, make_inputs):
+    X = _table()
+    _run_both(op_name, spec, make_inputs(X),
+              seed=0 if op_name == "string_encode" else None)
+
+
+def test_scaler_apply_tiers():
+    X = np.nan_to_num(_table()[:, 10:14])
+    stats = np.stack([X.mean(0), X.std(0) + 1e-9])
+    _run_both("scaler_apply", {}, [stats, X])
+
+
+def test_target_encode_tiers():
+    X = _table()
+    col, y = X[:, 5:6], X[:, 0]
+    op = LazyOp("target_encode_fit", TRANSFORM,
+                spec={"card": 1100, "smoothing": 20.0}, seed=0)
+    impls = {i.backend: i for i in impls_for("target_encode_fit")}
+    t_py = impls["python"].fn(op, [col, y])[0]
+    t_jx = impls["jax"].fn(op, [col, y])[0]
+    np.testing.assert_allclose(np.asarray(t_py), np.asarray(t_jx),
+                               rtol=2e-3, atol=2e-1)
+
+
+def test_ridge_tiers_and_quality():
+    X = np.nan_to_num(_table(1000)[:, 1:])
+    y = np.log1p(_table(1000)[:, 0])
+    op = LazyOp("ridge_fit", "estimator", spec={"alpha": 1.0}, seed=0)
+    impls = {i.backend: i for i in impls_for("ridge_fit")}
+    w_py = np.asarray(impls["python"].fn(op, [X, y])[0], np.float64)
+    w_jx = np.asarray(impls["jax"].fn(op, [X, y])[0], np.float64)
+    pred_py = X @ w_py[:-1] + w_py[-1]
+    pred_jx = X @ w_jx[:-1] + w_jx[-1]
+    # float32 solve differs in weights; predictions must agree closely
+    np.testing.assert_allclose(pred_py, pred_jx, rtol=0.05, atol=0.05)
+    ss_res = np.sum((y - pred_py) ** 2)
+    ss_tot = np.sum((y - y.mean()) ** 2)
+    assert 1 - ss_res / ss_tot > 0.3     # learns something real
+
+
+def test_elasticnet_tiers_agree_in_loss():
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(300, 8))
+    w_true = np.array([2.0, -1.0, 0, 0, 0.5, 0, 0, 0])
+    y = X @ w_true + 0.01 * rng.normal(size=300)
+    op = LazyOp("elasticnet_fit", "estimator",
+                spec={"alpha": 0.001, "l1_ratio": 0.5, "iters": 300}, seed=0)
+    impls = {i.backend: i for i in impls_for("elasticnet_fit")}
+    losses = {}
+    for name, impl in impls.items():
+        if impl.fidelity != "exact":
+            continue
+        w = np.asarray(impl.fn(op, [X, y])[0], np.float64)
+        pred = X @ w[:-1] + w[-1]
+        losses[name] = np.mean((pred - y) ** 2)
+    assert losses["python"] < 0.01 and losses["jax"] < 0.01
+
+
+def test_gbt_numpy_vs_jax_same_trees():
+    rng = np.random.default_rng(1)
+    X = rng.normal(size=(500, 6))
+    y = X[:, 0] * 2 + (X[:, 1] > 0) * 3 + 0.01 * rng.normal(size=500)
+    m_np = gbt.fit_numpy(X, y, n_trees=10, depth=3, subsample=1.0)
+    m_jx = gbt.fit_jax(X, y, n_trees=10, depth=3, subsample=1.0)
+    p_np = gbt.predict_numpy(m_np, X)
+    p_jx = gbt.predict_jax(m_jx, X)
+    # same algorithm, same bins — predictions nearly identical
+    np.testing.assert_allclose(p_np, p_jx, rtol=1e-3, atol=1e-2)
+    # and it learns
+    assert np.mean((p_np - y) ** 2) < np.var(y) * 0.4
+
+
+def test_kfold_split_partition_properties():
+    X = _table(333)
+    y = X[:, 0]
+    op = LazyOp("kfold_split", TRANSFORM, spec={"k": 3, "fold": 1}, seed=9)
+    impl = {i.backend: i for i in impls_for("kfold_split")}["python"]
+    xtr, ytr, xte, yte = impl.fn(op, [X, y])
+    assert len(xte) == 333 // 3
+    assert len(xtr) + len(xte) == 333 - (333 - 3 * (333 // 3)) + (333 - 333 // 3 * 3)
+    # folds are disjoint across fold ids (check via target values multiset)
+    op2 = LazyOp("kfold_split", TRANSFORM, spec={"k": 3, "fold": 2}, seed=9)
+    _, _, xte2, _ = impl.fn(op2, [X, y])
+    rows1 = {tuple(np.round(r, 6)) for r in np.nan_to_num(xte)}
+    rows2 = {tuple(np.round(r, 6)) for r in np.nan_to_num(xte2)}
+    assert not (rows1 & rows2)
