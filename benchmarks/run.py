@@ -8,8 +8,10 @@ Sections:
   * ablation     — paper Fig. 6b (incremental optimizations)
   * micro        — paper §6 components (cache, selection tiers, kernels)
   * roofline     — §Roofline summary rows from the dry-run artifacts
+  * service      — N concurrent agents through the multi-tenant execution
+                   service vs N isolated sessions (writes BENCH_service.json)
 
-``python -m benchmarks.run [--sections a,b,...] [--rows N]``
+``python -m benchmarks.run [--sections a,b,...] [--rows N] [--agents N]``
 """
 
 from __future__ import annotations
@@ -25,6 +27,8 @@ def main() -> None:
                     default="characterize,micro,ablation,e2e,roofline")
     ap.add_argument("--rows", type=int, default=20_000,
                     help="dataset rows for the agentic workload")
+    ap.add_argument("--agents", type=int, default=4,
+                    help="concurrent agents for the service section")
     args = ap.parse_args()
     sections = args.sections.split(",")
 
@@ -58,6 +62,9 @@ def main() -> None:
             elif section == "roofline":
                 from . import roofline as mod
                 rows = mod.rows()
+            elif section == "service":
+                from .e2e_agentic import service_rows
+                rows = service_rows(n_agents=args.agents, n_rows=args.rows)
             else:
                 raise KeyError(section)
             for name, us, derived in rows:

@@ -1,29 +1,36 @@
 """End-to-end agentic pipeline search (the paper's §6 use case).
 
 A deterministic AIDE-like agent explores preprocessing × model combinations
-and then fine-tunes the winner with a grid search — all execution flows
-through one stratum session, so fused batches share work and iteration 2
-reuses iteration 1's preprocessing from the cache.
+and then fine-tunes the winner with a grid search.
+
+Two modes:
+
+* default — the original synchronous path: one ``Stratum`` session, the
+  agent blocks on each ``run_batch``.
+* ``--service`` — the multi-tenant execution service: ``--agents N``
+  concurrent AIDE agents connect via non-blocking ``Session`` handles and
+  run :class:`AsyncAIDESearch`, which keeps drafting the next tree nodes
+  while earlier batches are still executing.  Concurrent submissions are
+  coalesced, cross-agent duplicates execute once, and all agents share one
+  intermediate cache.
 
     PYTHONPATH=src python examples/agentic_search.py [--rows 20000]
+    PYTHONPATH=src python examples/agentic_search.py --service --agents 4
 """
 
 import argparse
+import threading
 import time
 
 import numpy as np
 
-from repro.agents import paper_workload_batches
+from repro.agents import AIDEAgent, AsyncAIDESearch, paper_workload_batches
 from repro.agents.aide import second_iteration_batch
 from repro.core import Stratum
+from repro.service import StratumService
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--rows", type=int, default=20_000)
-    ap.add_argument("--cv", type=int, default=3)
-    args = ap.parse_args()
-
+def run_sync(args) -> None:
     session = Stratum(memory_budget_bytes=4 << 30)
 
     # ---- iteration 1: 2 preprocessing strategies × 4 models --------------
@@ -50,6 +57,51 @@ def main():
           f"— {report2.run.ops_from_cache} ops from cache")
     print(f"   winner: {best2} rmse={float(np.asarray(results2[best2])):.4f}"
           f" (params {specs2[int(best2.split('_')[1])].params_dict()})")
+
+
+def run_service(args) -> None:
+    t0 = time.time()
+    with StratumService(memory_budget_bytes=4 << 30,
+                        coalesce_window_s=0.05) as svc:
+        bests = [None] * args.agents
+
+        def agent_main(i: int) -> None:
+            agent = AIDEAgent(n_rows=args.rows, cv_k=args.cv, seed=i)
+            search = AsyncAIDESearch(svc.session(f"agent-{i}"), agent,
+                                     batch_size=4, max_inflight=2)
+            bests[i] = search.run(n_rounds=args.rounds)
+
+        threads = [threading.Thread(target=agent_main, args=(i,))
+                   for i in range(args.agents)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+
+        dt = time.time() - t0
+        print(f"{args.agents} agents × {args.rounds} rounds in {dt:.2f}s "
+              f"(async, overlapped planning/execution)")
+        for i, node in enumerate(bests):
+            if node is not None:
+                print(f"   agent-{i}: best rmse={node.score:.4f} "
+                      f"({node.spec.preproc}+{node.spec.model})")
+        print(svc.telemetry.report())
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=20_000)
+    ap.add_argument("--cv", type=int, default=3)
+    ap.add_argument("--service", action="store_true",
+                    help="run N concurrent agents through StratumService")
+    ap.add_argument("--agents", type=int, default=4)
+    ap.add_argument("--rounds", type=int, default=3,
+                    help="AIDE search rounds per agent (service mode)")
+    args = ap.parse_args()
+    if args.service:
+        run_service(args)
+    else:
+        run_sync(args)
 
 
 if __name__ == "__main__":

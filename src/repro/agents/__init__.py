@@ -5,6 +5,8 @@ whose emitted-pipeline statistics match the paper's workload characterization
 (Fig. 2) and its §6 evaluation workload.
 """
 
-from .aide import AIDEAgent, PipelineSpec, paper_workload_batches
+from .aide import (AIDEAgent, AsyncAIDESearch, PipelineSpec,
+                   paper_workload_batches)
 
-__all__ = ["AIDEAgent", "PipelineSpec", "paper_workload_batches"]
+__all__ = ["AIDEAgent", "AsyncAIDESearch", "PipelineSpec",
+           "paper_workload_batches"]

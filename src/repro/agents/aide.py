@@ -23,6 +23,8 @@ import random
 from dataclasses import dataclass, field, replace
 from typing import Any, Iterator, Optional, Sequence
 
+import numpy as np
+
 from ..core import PipelineBatch, annotate
 from ..core.dag import LazyOp, LazyRef, TRANSFORM
 from ..data.tabular import (CATEGORICAL, DATETIME, NUMERIC,
@@ -278,3 +280,58 @@ class AIDEAgent:
     def best(self) -> Optional[SearchNode]:
         scored = [n for n in self.nodes if n.score is not None]
         return min(scored, key=lambda n: n.score) if scored else None
+
+
+# ---------------------------------------------------------------------------
+# async search driver: overlap planning with in-flight execution (paper §3)
+# ---------------------------------------------------------------------------
+
+class AsyncAIDESearch:
+    """Drives an :class:`AIDEAgent` through a non-blocking execution session.
+
+    The synchronous loop (propose → run → observe) serializes the agent
+    behind its own executions.  This driver keeps up to ``max_inflight``
+    batches in flight: while the service executes batch *k*, the agent is
+    already drafting batch *k+1* from whatever results have landed — the
+    paper's "decouples pipeline execution from planning and reasoning".
+
+    ``session`` is anything with ``submit(batch) -> future`` whose future's
+    ``result()`` returns ``(name→value, report)`` — i.e. a
+    :class:`repro.service.Session`.
+    """
+
+    def __init__(self, session, agent: AIDEAgent, batch_size: int = 4,
+                 max_inflight: int = 2):
+        if max_inflight < 1:
+            raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
+        self.session = session
+        self.agent = agent
+        self.batch_size = batch_size
+        self.max_inflight = max_inflight
+        self.reports: list = []
+
+    def _submit(self, round_idx: int):
+        specs = self.agent.propose(self.batch_size)
+        names = [f"r{round_idx}_{i}" for i in range(len(specs))]
+        batch = PipelineBatch([s.build() for s in specs], names)
+        future = self.session.submit(batch)
+        return specs, names, future
+
+    def _harvest(self, specs, names, future) -> None:
+        results, report = future.result()
+        self.reports.append(report)
+        scores = [float(np.asarray(results[n])) for n in names]
+        self.agent.observe(specs, scores)
+
+    def run(self, n_rounds: int = 4) -> Optional[SearchNode]:
+        from collections import deque
+        inflight: deque = deque()
+        for round_idx in range(n_rounds):
+            inflight.append(self._submit(round_idx))
+            # only block once the pipeline of in-flight work is full, so
+            # proposal of the next round overlaps execution of this one
+            while len(inflight) >= self.max_inflight:
+                self._harvest(*inflight.popleft())
+        while inflight:
+            self._harvest(*inflight.popleft())
+        return self.agent.best()

@@ -68,7 +68,8 @@ class Stratum:
                  platform: str = "",
                  enable: Sequence[str] = ALL_FEATURES,
                  hardware_threads: int = 0,
-                 jit_cache_dir: Optional[str] = None):
+                 jit_cache_dir: Optional[str] = None,
+                 cache: Optional[IntermediateCache] = None):
         unknown = set(enable) - set(ALL_FEATURES)
         if unknown:
             raise ValueError(f"unknown features {unknown}")
@@ -84,8 +85,12 @@ class Stratum:
         self.memory_budget_bytes = memory_budget_bytes
         self.platform = platform
         self.hardware_threads = hardware_threads
+        # an injected cache is shared infrastructure (the multi-tenant
+        # service hands every session the same thread-safe instance)
         self.cache: Optional[IntermediateCache] = None
-        if "cache" in enable:
+        if cache is not None and "cache" in enable:
+            self.cache = cache
+        elif "cache" in enable:
             self.cache = IntermediateCache(
                 budget_bytes=int(memory_budget_bytes * cache_fraction),
                 spill_dir=spill_dir)

@@ -34,6 +34,9 @@ class RunReport:
     ops_from_cache: int = 0
     waves: int = 0
     per_backend: dict = field(default_factory=dict)
+    # op signature -> "cache" | backend name; lets multi-tenant callers
+    # (service telemetry) attribute work per pipeline after merged batches
+    sig_source: dict = field(default_factory=dict)
 
 
 class ExecutionError(RuntimeError):
@@ -66,6 +69,7 @@ class Runtime:
         self.cache_candidates = cache_candidates or set()
         self.parallel = parallel
         self._values: dict[str, Any] = {}      # "sig:index" -> value
+        self._keys_by_sig: dict[str, list[str]] = {}   # sig -> stored keys
         self._lock = threading.Lock()
 
     # ------------------------------------------------------------------
@@ -83,8 +87,12 @@ class Runtime:
 
     def _store(self, op: LazyOp, outputs: tuple) -> None:
         with self._lock:
+            keys = self._keys_by_sig.setdefault(op.signature, [])
             for i, v in enumerate(outputs):
-                self._values[f"{op.signature}:{i}"] = v
+                key = f"{op.signature}:{i}"
+                self._values[key] = v
+                if key not in keys:
+                    keys.append(key)
 
     def _run_op(self, op: LazyOp, selection: dict, report: RunReport) -> None:
         sig = op.signature
@@ -94,6 +102,7 @@ class Runtime:
                 self._store(op, hit)
                 with self._lock:
                     report.ops_from_cache += 1
+                    report.sig_source[sig] = "cache"
                 return
         inputs = self._gather_inputs(op)
         fn = self._resolve_impl(op, selection)
@@ -113,6 +122,7 @@ class Runtime:
         with self._lock:
             report.ops_executed += 1
             report.per_backend[backend] = report.per_backend.get(backend, 0) + 1
+            report.sig_source[sig] = backend
         if (self.cache is not None and op.cacheable
                 and sig in self.cache_candidates):
             self.cache.put(sig, outputs)
@@ -151,6 +161,8 @@ class Runtime:
                 report.ops_executed += len(ops_)
                 report.per_backend["jax-vmap"] = \
                     report.per_backend.get("jax-vmap", 0) + len(ops_)
+                for op in ops_:
+                    report.sig_source[op.signature] = "jax-vmap"
         return rest
 
     # ------------------------------------------------------------------
@@ -174,16 +186,18 @@ class Runtime:
                 else:
                     for op in todo:
                         self._run_op(op, selection, report)
-                # free dead intermediates
+                # free dead intermediates — exact per-signature key lists
+                # (prefix/equality scans can collide and never matched the
+                # "sig" form, which is never stored)
                 with self._lock:
                     for sig in wave.free_after:
-                        for key in [k for k in self._values
-                                    if k.startswith(sig + ":")
-                                    or k == sig]:
-                            del self._values[key]
+                        for key in self._keys_by_sig.pop(sig, ()):
+                            self._values.pop(key, None)
         finally:
             if pool is not None:
-                pool.shutdown(wait=False)
+                # cancel queued work and wait for in-flight ops so an error
+                # mid-wave can't leak threads still mutating self._values
+                pool.shutdown(wait=True, cancel_futures=True)
         with self._lock:
             results = [self._values[r.signature] for r in sinks]
         report.wall_time_s = time.perf_counter() - t0

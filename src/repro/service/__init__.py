@@ -1,0 +1,29 @@
+"""repro.service — persistent, multi-tenant stratum execution service.
+
+Decouples agent planning from pipeline execution (paper §3): agents submit
+:class:`~repro.core.fusion.PipelineBatch`es through non-blocking
+:class:`Session` handles; the service coalesces concurrent submissions from
+different agents into super-batches, dedups shared work via cross-agent CSE
+and a shared intermediate cache, schedules tenants fairly under a global
+memory budget, and resolves :class:`PipelineFuture`s with per-tenant
+telemetry.
+
+    with StratumService(memory_budget_bytes=4 << 30) as svc:
+        s1, s2 = svc.session("agent-1"), svc.session("agent-2")
+        f1 = s1.submit(batch_a)          # non-blocking: keep planning
+        f2 = s2.submit(batch_b)          # coalesced with batch_a
+        results, report = f1.result()
+        print(svc.telemetry.report())
+"""
+
+from .coalesce import SuperBatch, coalesce, cross_agent_dedup
+from .queue import AdmissionError, FairQueue, Job
+from .server import JobReport, ServiceConfig, StratumService
+from .session import PipelineFuture, Session
+from .telemetry import ServiceTelemetry, TenantStats
+
+__all__ = [
+    "AdmissionError", "FairQueue", "Job", "JobReport", "PipelineFuture",
+    "ServiceConfig", "ServiceTelemetry", "Session", "StratumService",
+    "SuperBatch", "TenantStats", "coalesce", "cross_agent_dedup",
+]

@@ -1,0 +1,138 @@
+"""Admission-controlled, tenant-fair job queue.
+
+Two properties the service needs that a plain FIFO lacks:
+
+* **admission control** — ``push`` rejects (raises :class:`AdmissionError`)
+  once global or per-tenant queue depth limits are hit, so a runaway agent
+  sheds load at the edge instead of OOMing the service;
+* **fairness** — jobs live in per-tenant FIFOs and ``pop_round`` drains them
+  round-robin with a per-tenant cap per round, so a tenant flooding the
+  queue cannot starve another: every round, each backlogged tenant gets at
+  most ``max_per_tenant`` slots and every tenant with work gets at least
+  one chance per cycle.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import OrderedDict, deque
+from dataclasses import dataclass, field
+from typing import Optional
+
+from ..core.fusion import PipelineBatch
+from .session import PipelineFuture
+
+
+class AdmissionError(RuntimeError):
+    """Job rejected at submission time (queue depth / tenant quota)."""
+
+
+@dataclass
+class Job:
+    id: int
+    tenant: str
+    batch: PipelineBatch
+    future: PipelineFuture
+    submit_t: float = field(default_factory=time.perf_counter)
+    # set at first dispatch; a failure-isolation retry must not re-measure
+    # (the second measurement would include the failed run's execution time)
+    dispatch_wait_s: Optional[float] = None
+
+
+class FairQueue:
+    def __init__(self,
+                 max_queued_total: int = 1024,
+                 max_queued_per_tenant: int = 256):
+        self.max_queued_total = max_queued_total
+        self.max_queued_per_tenant = max_queued_per_tenant
+        self._tenants: "OrderedDict[str, deque[Job]]" = OrderedDict()
+        self._total = 0
+        self._lock = threading.Lock()
+        self._not_empty = threading.Condition(self._lock)
+        self._closed = False
+
+    # ------------------------------------------------------------------
+    def push(self, job: Job) -> None:
+        with self._lock:
+            if self._closed:
+                raise AdmissionError("service is shutting down")
+            if self._total >= self.max_queued_total:
+                raise AdmissionError(
+                    f"queue full ({self._total}/{self.max_queued_total})")
+            q = self._tenants.setdefault(job.tenant, deque())
+            if len(q) >= self.max_queued_per_tenant:
+                raise AdmissionError(
+                    f"tenant {job.tenant!r} over quota "
+                    f"({len(q)}/{self.max_queued_per_tenant})")
+            q.append(job)
+            self._total += 1
+            self._not_empty.notify()
+
+    def pop_round(self, max_jobs: int, max_per_tenant: int = 1,
+                  timeout: Optional[float] = None) -> list[Job]:
+        """One fair scheduling round.
+
+        Blocks up to ``timeout`` for work, then takes ≤ ``max_per_tenant``
+        jobs from each tenant in round-robin order (tenants rotate to the
+        back after being served) until ``max_jobs`` or the queue is empty.
+        """
+        with self._lock:
+            if not self._total and timeout:
+                self._not_empty.wait(timeout)
+            out: list[Job] = []
+            if not self._total:
+                return out
+            served = 0
+            n_tenants = len(self._tenants)
+            while served < n_tenants and len(out) < max_jobs and self._total:
+                tenant, q = next(iter(self._tenants.items()))
+                take = min(max_per_tenant, len(q), max_jobs - len(out))
+                for _ in range(take):
+                    out.append(q.popleft())
+                    self._total -= 1
+                # rotate: served tenant goes to the back; drop empty queues
+                self._tenants.move_to_end(tenant)
+                if not q:
+                    del self._tenants[tenant]
+                served += 1
+            return out
+
+    def cancel(self, job_id: int) -> bool:
+        """Remove a still-queued job; returns False once dispatched."""
+        with self._lock:
+            for tenant, q in list(self._tenants.items()):
+                for job in q:
+                    if job.id == job_id:
+                        q.remove(job)
+                        self._total -= 1
+                        if not q:
+                            del self._tenants[tenant]
+                        job.future._set_cancelled()
+                        return True
+        return False
+
+    # ------------------------------------------------------------------
+    def pending(self) -> int:
+        with self._lock:
+            return self._total
+
+    def close(self) -> list[Job]:
+        """Stop admitting; drain and return whatever is still queued."""
+        with self._lock:
+            self._closed = True
+            rest = [j for q in self._tenants.values() for j in q]
+            self._tenants.clear()
+            self._total = 0
+            self._not_empty.notify_all()
+            return rest
+
+    def reopen(self) -> None:
+        """Accept submissions again after ``close`` (service restart)."""
+        with self._lock:
+            self._closed = False
+
+    def kick(self) -> None:
+        """Wake a blocked ``pop_round`` (used on shutdown)."""
+        with self._lock:
+            self._not_empty.notify_all()

@@ -1,0 +1,322 @@
+"""The stratum execution service — a persistent, multi-tenant runtime.
+
+Decouples agent *planning* from pipeline *execution* (paper §3): agents
+hold :class:`~repro.service.session.Session` handles and submit batches
+without blocking; the service side runs
+
+    submit → admission control → per-tenant fair queue → coalescer
+           → optimizer (cross-agent CSE) → memory gate → Runtime
+           → result demux → futures + per-tenant telemetry
+
+Key properties:
+
+* **fair scheduling** — each dispatch round takes at most
+  ``max_jobs_per_tenant_per_round`` jobs per tenant, round-robin, so a
+  flooding agent cannot starve the others;
+* **cross-agent work sharing** — jobs gathered in one round are merged into
+  a super-batch before optimization, so CSE dedups identical sub-DAGs
+  emitted by *different* agents, and all tenants share one thread-safe
+  :class:`IntermediateCache`;
+* **global memory budget** — a super-batch only starts executing once its
+  planned peak memory fits under the service budget alongside the other
+  in-flight super-batches;
+* **failure isolation** — an :class:`ExecutionError` fails only the
+  coalesced jobs whose DAG contains the failing op; innocent-bystander jobs
+  from the same super-batch are re-executed without the poisoned peer.
+"""
+
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+from ..core.api import ALL_FEATURES, Stratum
+from ..core.cache import IntermediateCache
+from ..core.fusion import PipelineBatch
+from ..core.runtime import ExecutionError, Runtime
+from .coalesce import SuperBatch, coalesce, cross_agent_dedup, reachable_sigs
+from .queue import AdmissionError, FairQueue, Job
+from .session import PipelineFuture, Session
+from .telemetry import ServiceTelemetry
+
+
+@dataclass
+class ServiceConfig:
+    memory_budget_bytes: int = 8 << 30
+    cache_fraction: float = 0.10
+    spill_dir: Optional[str] = None
+    platform: str = ""
+    enable: Sequence[str] = ALL_FEATURES
+    hardware_threads: int = 0
+    jit_cache_dir: Optional[str] = None
+    # admission control
+    max_queued_total: int = 1024
+    max_queued_per_tenant: int = 256
+    # coalescing / fairness
+    coalesce_window_s: float = 0.02
+    coalesce_max_jobs: int = 16
+    max_jobs_per_tenant_per_round: int = 2
+    # concurrency
+    n_executors: int = 2
+
+
+@dataclass
+class JobReport:
+    """Per-job view of a (possibly merged) execution."""
+    tenant: str
+    job_id: int
+    queue_wait_s: float
+    coalesced_with: int          # other jobs in the same super-batch
+    ops_shared_cross_agent: int  # this job's ops shared with another tenant
+    cache_hits: int
+    per_backend: dict
+    stratum: object              # the super-batch StratumReport-ish payload
+    run: object = None           # super-batch RunReport (convenience alias)
+
+
+class StratumService:
+    """Persistent multi-tenant execution service over one optimizing
+    runtime.  Thread-safe; one instance serves many concurrent agents."""
+
+    def __init__(self, config: Optional[ServiceConfig] = None,
+                 autostart: bool = True, **overrides):
+        if config is None:
+            config = ServiceConfig(**overrides)
+        elif overrides:
+            raise ValueError("pass either config or keyword overrides")
+        self.config = config
+        self.cache: Optional[IntermediateCache] = None
+        if "cache" in config.enable:
+            self.cache = IntermediateCache(
+                budget_bytes=int(config.memory_budget_bytes
+                                 * config.cache_fraction),
+                spill_dir=config.spill_dir)
+        # the optimizer: compile-only use of the existing session object,
+        # sharing the service cache (Stratum(cache=...) injection)
+        self._optimizer = Stratum(
+            memory_budget_bytes=config.memory_budget_bytes,
+            platform=config.platform,
+            enable=config.enable,
+            hardware_threads=config.hardware_threads,
+            jit_cache_dir=config.jit_cache_dir,
+            cache=self.cache)
+        self.queue = FairQueue(
+            max_queued_total=config.max_queued_total,
+            max_queued_per_tenant=config.max_queued_per_tenant)
+        self.telemetry = ServiceTelemetry()
+        self._job_ids = itertools.count()
+        self._running = False
+        self._dispatcher: Optional[threading.Thread] = None
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._slots = threading.Semaphore(config.n_executors)
+        # global memory gate across concurrent super-batches
+        self._mem_cond = threading.Condition()
+        self._mem_inflight = 0
+        # in-flight job accounting for drain on stop()
+        self._inflight_cond = threading.Condition()
+        self._inflight_jobs = 0
+        if autostart:
+            self.start()
+
+    # -- lifecycle ---------------------------------------------------------
+    def start(self) -> "StratumService":
+        if self._running:
+            return self
+        self.queue.reopen()     # stop() closed admissions; accept again
+        self._running = True
+        self._pool = ThreadPoolExecutor(
+            max_workers=self.config.n_executors,
+            thread_name_prefix="stratum-exec")
+        self._dispatcher = threading.Thread(
+            target=self._dispatch_loop, name="stratum-dispatch", daemon=True)
+        self._dispatcher.start()
+        return self
+
+    def stop(self, drain: bool = True) -> None:
+        if drain and self._running:
+            # only a live dispatcher can drain the queue; with autostart=False
+            # and no start(), draining would spin forever
+            with self._inflight_cond:
+                while self.queue.pending() or self._inflight_jobs:
+                    self._inflight_cond.wait(timeout=0.1)
+        self._running = False
+        self.queue.kick()
+        if self._dispatcher is not None:
+            self._dispatcher.join(timeout=10)
+        for job in self.queue.close():
+            job.future._set_exception(
+                AdmissionError("service stopped before job ran"))
+            self.telemetry.record_job_failed(job.tenant)
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+
+    def __enter__(self) -> "StratumService":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- tenant API --------------------------------------------------------
+    def session(self, tenant: str) -> Session:
+        return Session(self, tenant)
+
+    def submit(self, tenant: str, batch: PipelineBatch) -> PipelineFuture:
+        job_id = next(self._job_ids)
+        future = PipelineFuture(job_id, tenant)
+
+        def _cancel(jid: int) -> bool:
+            ok = self.queue.cancel(jid)
+            if ok:
+                self.telemetry.record_job_cancelled(tenant)
+            return ok
+
+        future._cancel_hook = _cancel
+        job = Job(id=job_id, tenant=tenant, batch=batch, future=future)
+        self.queue.push(job)               # may raise AdmissionError
+        self.telemetry.record_submit(tenant)
+        return future
+
+    # -- dispatch ----------------------------------------------------------
+    def _dispatch_loop(self) -> None:
+        cfg = self.config
+        while self._running:
+            # bound in-flight super-batches so the fair queue, not the
+            # executor pool's FIFO, decides ordering under load
+            if not self._slots.acquire(timeout=0.1):
+                continue
+            jobs = self.queue.pop_round(
+                max_jobs=cfg.coalesce_max_jobs,
+                max_per_tenant=cfg.max_jobs_per_tenant_per_round,
+                timeout=0.1)
+            if not jobs:
+                self._slots.release()
+                continue
+            # coalescing window: briefly gather more concurrent submissions
+            deadline = time.perf_counter() + cfg.coalesce_window_s
+            while len(jobs) < cfg.coalesce_max_jobs:
+                left = deadline - time.perf_counter()
+                if left <= 0:
+                    break
+                more = self.queue.pop_round(
+                    max_jobs=cfg.coalesce_max_jobs - len(jobs),
+                    max_per_tenant=cfg.max_jobs_per_tenant_per_round,
+                    timeout=left)
+                jobs.extend(more)
+            with self._inflight_cond:
+                self._inflight_jobs += len(jobs)
+            self._pool.submit(self._execute_guarded, jobs)
+
+    def _execute_guarded(self, jobs: list) -> None:
+        try:
+            self._execute_jobs(jobs, allow_retry=True, is_retry=False)
+        finally:
+            self._slots.release()
+            with self._inflight_cond:
+                self._inflight_jobs -= len(jobs)
+                self._inflight_cond.notify_all()
+
+    # -- memory gate -------------------------------------------------------
+    def _acquire_mem(self, need: int) -> None:
+        with self._mem_cond:
+            while (self._mem_inflight
+                   and self._mem_inflight + need
+                   > self.config.memory_budget_bytes):
+                self._mem_cond.wait()
+            self._mem_inflight += need
+
+    def _release_mem(self, need: int) -> None:
+        with self._mem_cond:
+            self._mem_inflight -= need
+            self._mem_cond.notify_all()
+
+    # -- execution ---------------------------------------------------------
+    def _fail_jobs(self, jobs: Sequence[Job], exc: BaseException) -> None:
+        for job in jobs:
+            job.future._set_exception(exc)
+            self.telemetry.record_job_failed(job.tenant)
+
+    def _execute_jobs(self, jobs: list, allow_retry: bool,
+                      is_retry: bool = False) -> None:
+        now = time.perf_counter()
+        live = [j for j in jobs if j.future._mark_running()]
+        if not live:
+            return
+        for job in live:
+            # measure queue wait once, at first dispatch — a failure-isolation
+            # retry must not re-record it (the second measurement would
+            # include the failed run's execution time)
+            if job.dispatch_wait_s is None:
+                job.dispatch_wait_s = now - job.submit_t
+                self.telemetry.record_dispatch(job.tenant,
+                                               job.dispatch_wait_s)
+
+        merged: SuperBatch = coalesce(live)
+        try:
+            (sinks, sel, plan, candidates, rw, ops_submitted,
+             opt_time) = self._optimizer.compile_batch(merged.batch)
+        except Exception as e:  # noqa: BLE001 — propagate via futures
+            self._fail_jobs(live, e)
+            return
+
+        # post-optimization per-job reachable sets: used for cross-agent
+        # dedup accounting, failure isolation and telemetry attribution
+        job_sigs = [reachable_sigs(merged.job_sinks(sinks, j))
+                    for j in range(len(live))]
+        deduped, shared = cross_agent_dedup(job_sigs,
+                                            [j.tenant for j in live])
+        if not is_retry:   # the retry re-runs jobs already accounted for
+            self.telemetry.record_super_batch(len(live), deduped, shared)
+
+        need = max(plan.est_peak_mem, 0)
+        self._acquire_mem(need)
+        try:
+            rt = Runtime(cache=self.cache, cache_candidates=candidates,
+                         parallel="parallel" in self.config.enable)
+            results, run = rt.execute(sinks, plan, sel)
+        except ExecutionError as e:
+            self._release_mem(need)
+            bad_sig = e.op.signature
+            bad = [j for j, sigs in zip(live, job_sigs) if bad_sig in sigs]
+            good = [j for j in live if j not in bad]
+            if not bad:          # can't attribute → fail the whole batch
+                self._fail_jobs(live, e)
+                return
+            self._fail_jobs(bad, e)
+            if good:
+                if allow_retry:
+                    # innocent bystanders: re-run without the poisoned peer
+                    self._execute_jobs(good, allow_retry=False,
+                                       is_retry=True)
+                else:
+                    self._fail_jobs(good, e)
+            return
+        except Exception as e:  # noqa: BLE001
+            self._release_mem(need)
+            self._fail_jobs(live, e)
+            return
+        self._release_mem(need)
+
+        named = dict(zip(merged.batch.names, results))
+        per_job = merged.split_results(named)
+        for j, (job, job_results) in enumerate(zip(live, per_job)):
+            hits = sum(1 for s in job_sigs[j]
+                       if run.sig_source.get(s) == "cache")
+            backends: dict = {}
+            for s in job_sigs[j]:
+                src = run.sig_source.get(s)
+                if src and src != "cache":
+                    backends[src] = backends.get(src, 0) + 1
+            report = JobReport(
+                tenant=job.tenant, job_id=job.id,
+                queue_wait_s=job.dispatch_wait_s or 0.0,
+                coalesced_with=len(live) - 1,
+                ops_shared_cross_agent=shared.get(job.tenant, 0),
+                cache_hits=hits, per_backend=backends,
+                stratum=rw, run=run)
+            self.telemetry.record_job_done(job.tenant, job_sigs[j],
+                                           run.sig_source)
+            job.future._set_result(job_results, report)

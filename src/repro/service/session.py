@@ -1,0 +1,170 @@
+"""Agent-facing handles: :class:`Session` and :class:`PipelineFuture`.
+
+The paper's decoupling claim (§3): the agent keeps *planning* (drafting the
+next AIDE tree node) while *execution* proceeds inside the service.  A
+``Session`` is a lightweight per-tenant handle onto a shared
+:class:`~repro.service.server.StratumService`; ``submit`` is non-blocking
+and returns a :class:`PipelineFuture` that resolves to the same
+``(results, report)`` shape ``Stratum.run_batch`` produces, so a synchronous
+agent can be ported by replacing ``run_batch(b)`` with
+``submit(b).result()``.
+"""
+
+from __future__ import annotations
+
+import threading
+from concurrent.futures import CancelledError
+from typing import Any, Callable, Optional
+
+from ..core.fusion import PipelineBatch
+
+_PENDING = "pending"
+_RUNNING = "running"
+_DONE = "done"
+_CANCELLED = "cancelled"
+
+
+class PipelineFuture:
+    """Result handle for one submitted :class:`PipelineBatch`."""
+
+    def __init__(self, job_id: int, tenant: str):
+        self.job_id = job_id
+        self.tenant = tenant
+        self._event = threading.Event()
+        self._lock = threading.Lock()
+        self._state = _PENDING
+        self._results: Optional[dict[str, Any]] = None
+        self._report: Any = None
+        self._error: Optional[BaseException] = None
+        self._callbacks: list[Callable[["PipelineFuture"], None]] = []
+        self._cancel_hook: Optional[Callable[[int], bool]] = None
+
+    # -- service side ------------------------------------------------------
+    def _mark_running(self) -> bool:
+        """Claim the job for execution.  True for pending jobs and for jobs
+        already running (the failure-isolation retry re-executes innocent
+        bystanders of a poisoned super-batch); False once cancelled/done."""
+        with self._lock:
+            if self._state == _PENDING:
+                self._state = _RUNNING
+                return True
+            return self._state == _RUNNING
+
+    def _set_result(self, results: dict[str, Any], report: Any) -> None:
+        with self._lock:
+            if self._state == _CANCELLED:
+                return
+            self._results, self._report = results, report
+            self._state = _DONE
+        self._finish()
+
+    def _set_exception(self, exc: BaseException) -> None:
+        with self._lock:
+            if self._state == _CANCELLED:
+                return
+            self._error = exc
+            self._state = _DONE
+        self._finish()
+
+    def _set_cancelled(self) -> None:
+        with self._lock:
+            if self._state == _DONE:
+                return
+            self._state = _CANCELLED
+        self._finish()
+
+    def _finish(self) -> None:
+        self._event.set()
+        callbacks, self._callbacks = self._callbacks, []
+        for cb in callbacks:
+            try:
+                cb(self)
+            except Exception:
+                pass
+
+    # -- agent side --------------------------------------------------------
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def cancelled(self) -> bool:
+        with self._lock:
+            return self._state == _CANCELLED
+
+    def cancel(self) -> bool:
+        """Cancel iff the job is still queued (never pre-empts running work).
+
+        Returns True when the job was removed from the queue."""
+        hook = self._cancel_hook
+        if hook is None:
+            return False
+        return hook(self.job_id)
+
+    def result(self, timeout: Optional[float] = None
+               ) -> tuple[dict[str, Any], Any]:
+        if not self._event.wait(timeout):
+            raise TimeoutError(
+                f"job {self.job_id} (tenant {self.tenant!r}) not done "
+                f"after {timeout}s")
+        with self._lock:
+            if self._state == _CANCELLED:
+                raise CancelledError(f"job {self.job_id} was cancelled")
+            if self._error is not None:
+                raise self._error
+            return self._results, self._report
+
+    def exception(self, timeout: Optional[float] = None
+                  ) -> Optional[BaseException]:
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"job {self.job_id} not done after {timeout}s")
+        with self._lock:
+            if self._state == _CANCELLED:
+                raise CancelledError(f"job {self.job_id} was cancelled")
+            return self._error
+
+    def add_done_callback(self, fn: Callable[["PipelineFuture"], None]
+                          ) -> None:
+        run_now = False
+        with self._lock:
+            if self._event.is_set():
+                run_now = True
+            else:
+                self._callbacks.append(fn)
+        if run_now:
+            fn(self)
+
+
+class Session:
+    """One tenant's handle onto a running :class:`StratumService`."""
+
+    def __init__(self, service, tenant: str):
+        self._service = service
+        self.tenant = tenant
+        self._closed = False
+
+    # -- non-blocking path (the point of the subsystem) --------------------
+    def submit(self, batch: PipelineBatch) -> PipelineFuture:
+        """Enqueue ``batch``; returns immediately.
+
+        Raises :class:`~repro.service.queue.AdmissionError` when admission
+        control rejects the job (queue depth / tenant quota)."""
+        if self._closed:
+            raise RuntimeError(f"session {self.tenant!r} is closed")
+        return self._service.submit(self.tenant, batch)
+
+    # -- drop-in synchronous compatibility with Stratum.run_batch ----------
+    def run_batch(self, batch: PipelineBatch,
+                  timeout: Optional[float] = None):
+        return self.submit(batch).result(timeout)
+
+    @property
+    def telemetry(self) -> dict:
+        return self._service.telemetry.snapshot().get(self.tenant, {})
+
+    def close(self) -> None:
+        self._closed = True
+
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

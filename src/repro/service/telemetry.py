@@ -1,0 +1,132 @@
+"""Per-tenant service telemetry.
+
+The service multiplexes many agents over one runtime, so aggregate numbers
+(`RunReport`) are not attributable on their own.  This module keeps a
+thread-safe per-tenant ledger fed from three places:
+
+* submission / dispatch (queue wait),
+* the coalescer (ops shared cross-agent),
+* post-run attribution: each job's post-optimization reachable signature
+  set joined against ``RunReport.sig_source`` gives exact per-tenant cache
+  hits and backend mix even for merged super-batches.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+
+
+@dataclass
+class TenantStats:
+    jobs_submitted: int = 0
+    jobs_completed: int = 0
+    jobs_failed: int = 0
+    jobs_cancelled: int = 0
+    queue_wait_s: float = 0.0
+    queue_wait_max_s: float = 0.0
+    ops_shared_cross_agent: int = 0
+    cache_hits: int = 0
+    ops_attributed: int = 0
+    per_backend: dict = field(default_factory=dict)
+
+    def as_dict(self) -> dict:
+        return {
+            "jobs_submitted": self.jobs_submitted,
+            "jobs_completed": self.jobs_completed,
+            "jobs_failed": self.jobs_failed,
+            "jobs_cancelled": self.jobs_cancelled,
+            "queue_wait_s": round(self.queue_wait_s, 6),
+            "queue_wait_max_s": round(self.queue_wait_max_s, 6),
+            "ops_shared_cross_agent": self.ops_shared_cross_agent,
+            "cache_hits": self.cache_hits,
+            "ops_attributed": self.ops_attributed,
+            "per_backend": dict(self.per_backend),
+        }
+
+
+class ServiceTelemetry:
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._tenants: dict[str, TenantStats] = {}
+        self.ops_deduped_cross_agent = 0   # global executions saved
+        self.super_batches = 0
+        self.jobs_coalesced = 0
+
+    def _t(self, tenant: str) -> TenantStats:
+        return self._tenants.setdefault(tenant, TenantStats())
+
+    # -- recording hooks ---------------------------------------------------
+    def record_submit(self, tenant: str) -> None:
+        with self._lock:
+            self._t(tenant).jobs_submitted += 1
+
+    def record_dispatch(self, tenant: str, wait_s: float) -> None:
+        with self._lock:
+            t = self._t(tenant)
+            t.queue_wait_s += wait_s
+            t.queue_wait_max_s = max(t.queue_wait_max_s, wait_s)
+
+    def record_super_batch(self, n_jobs: int, deduped: int,
+                           shared_per_tenant: dict) -> None:
+        with self._lock:
+            self.super_batches += 1
+            self.jobs_coalesced += n_jobs
+            self.ops_deduped_cross_agent += deduped
+            for tenant, n in shared_per_tenant.items():
+                self._t(tenant).ops_shared_cross_agent += n
+
+    def record_job_done(self, tenant: str, job_sigs: set,
+                        sig_source: dict) -> None:
+        """Attribute run work to a finished job via its reachable sigs."""
+        with self._lock:
+            t = self._t(tenant)
+            t.jobs_completed += 1
+            for sig in job_sigs:
+                src = sig_source.get(sig)
+                if src is None:
+                    continue
+                t.ops_attributed += 1
+                if src == "cache":
+                    t.cache_hits += 1
+                else:
+                    t.per_backend[src] = t.per_backend.get(src, 0) + 1
+
+    def record_job_failed(self, tenant: str) -> None:
+        with self._lock:
+            self._t(tenant).jobs_failed += 1
+
+    def record_job_cancelled(self, tenant: str) -> None:
+        with self._lock:
+            self._t(tenant).jobs_cancelled += 1
+
+    # -- reporting ---------------------------------------------------------
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {tenant: stats.as_dict()
+                    for tenant, stats in self._tenants.items()}
+
+    def global_snapshot(self) -> dict:
+        with self._lock:
+            return {
+                "super_batches": self.super_batches,
+                "jobs_coalesced": self.jobs_coalesced,
+                "ops_deduped_cross_agent": self.ops_deduped_cross_agent,
+            }
+
+    def report(self) -> str:
+        g = self.global_snapshot()
+        lines = [
+            f"super-batches: {g['super_batches']} "
+            f"(jobs coalesced: {g['jobs_coalesced']}, "
+            f"cross-agent ops deduped: {g['ops_deduped_cross_agent']})"
+        ]
+        for tenant, s in sorted(self.snapshot().items()):
+            lines.append(
+                f"  {tenant}: jobs={s['jobs_completed']}/"
+                f"{s['jobs_submitted']} "
+                f"wait={s['queue_wait_s']:.3f}s "
+                f"shared_ops={s['ops_shared_cross_agent']} "
+                f"cache_hits={s['cache_hits']} "
+                f"backends={s['per_backend']}")
+        return "\n".join(lines)

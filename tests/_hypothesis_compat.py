@@ -1,0 +1,51 @@
+"""Optional-hypothesis shim for the tier-1 suite.
+
+``hypothesis`` is an *extra* (see pyproject ``[test]``); the tier-1 suite
+must collect and run without it.  When it is installed we re-export the real
+``given``/``settings``/``st``.  When it is missing, ``@given`` degrades to a
+``pytest.mark.parametrize`` over a small deterministic sample of each
+strategy's domain (bounds + midpoint), so the property tests still execute
+as fixed-example tests instead of erroring at import time.
+
+Only the strategy surface the suite actually uses (``st.integers``) is
+shimmed; grow it as tests need more.
+"""
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import itertools
+
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _Integers:
+        def __init__(self, lo: int, hi: int):
+            self.lo, self.hi = int(lo), int(hi)
+
+        def samples(self) -> list:
+            mid = (self.lo + self.hi) // 2
+            return sorted({self.lo, mid, self.hi})
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Integers:
+            return _Integers(min_value, max_value)
+
+    st = _Strategies()
+
+    def settings(**_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(*strategies):
+        def deco(fn):
+            names = fn.__code__.co_varnames[:fn.__code__.co_argcount]
+            argnames = ",".join(names[-len(strategies):])
+            cases = list(itertools.product(
+                *(s.samples() for s in strategies)))
+            return pytest.mark.parametrize(argnames, cases)(fn)
+        return deco

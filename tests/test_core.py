@@ -3,7 +3,7 @@ cache — unit + hypothesis property tests."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (CONST, LazyOp, LazyRef, PipelineBatch, SOURCE,
                         Stratum, TRANSFORM, count_ops, toposort)

@@ -1,0 +1,325 @@
+"""Multi-tenant execution service: shared cache, cross-agent dedup,
+fairness, admission control, cancellation and error propagation."""
+
+from concurrent.futures import CancelledError
+
+import numpy as np
+import pytest
+
+from repro.core import GENERIC, LazyOp, PipelineBatch
+from repro.core.runtime import ExecutionError
+from repro.service import (AdmissionError, FairQueue, StratumService,
+                           cross_agent_dedup)
+from repro.service.queue import Job as QJob
+from repro.service.session import PipelineFuture
+import repro.tabular as T
+
+
+def _pipeline(n_rows=6000, cols=(10, 11, 12), kind="mae", data_seed=0):
+    x = T.read("uk_housing", n_rows, seed=data_seed)
+    xs = T.scale(T.impute(T.project(x, list(cols))))
+    y = T.project(x, [0])
+    return T.metric(T.project(xs, [0]), y, kind=kind)
+
+
+def _batch(name="p", **kw):
+    return PipelineBatch([_pipeline(**kw)], [name])
+
+
+def _boom(*_a, **_k):
+    raise ValueError("poisoned op")
+
+
+def _poison_batch():
+    sink = LazyOp("boom", GENERIC, spec={"fn": _boom},
+                  inputs=(_pipeline(n_rows=500),)).out()
+    return PipelineBatch([sink], ["bad"])
+
+
+def _service(**kw):
+    kw.setdefault("memory_budget_bytes", 1 << 30)
+    kw.setdefault("n_executors", 2)
+    return StratumService(**kw)
+
+
+# ---------------------------------------------------------------------------
+# shared cache across concurrent sessions
+# ---------------------------------------------------------------------------
+
+def test_concurrent_sessions_share_cache_no_corruption():
+    svc = _service(coalesce_window_s=0.0)
+    try:
+        # reference result from a plain single-tenant session
+        from repro.core import Stratum
+        ref, _ = Stratum(memory_budget_bytes=1 << 30).run_batch(_batch())
+        ref_val = float(np.asarray(ref["p"]))
+
+        # tenant 1 populates the shared cache
+        s1 = svc.session("t1")
+        r1, rep1 = s1.submit(_batch()).result(timeout=60)
+        assert float(np.asarray(r1["p"])) == pytest.approx(ref_val, rel=1e-6)
+
+        # tenant 2 submits the same work later: served from shared cache
+        s2 = svc.session("t2")
+        r2, rep2 = s2.submit(_batch()).result(timeout=60)
+        assert float(np.asarray(r2["p"])) == pytest.approx(ref_val, rel=1e-6)
+        assert rep2.cache_hits > 0
+        # hits are attributed to the tenant that benefited
+        snap = svc.telemetry.snapshot()
+        assert snap["t2"]["cache_hits"] > 0
+        assert snap["t1"]["jobs_completed"] == 1
+    finally:
+        svc.stop()
+
+
+def test_many_concurrent_tenants_results_stay_isolated():
+    svc = _service(coalesce_window_s=0.05)
+    try:
+        # distinct pipelines per tenant → distinct results, one shared run
+        sessions = [svc.session(f"t{i}") for i in range(4)]
+        kinds = ["mae", "rmse", "mae", "rmse"]
+        cols = [(10, 11), (10, 11), (11, 12), (11, 12)]
+        futs = [s.submit(_batch(kind=k, cols=c))
+                for s, k, c in zip(sessions, kinds, cols)]
+        vals = [float(np.asarray(f.result(timeout=60)[0]["p"]))
+                for f in futs]
+        # same (kind, cols) must agree; different kinds must differ
+        assert vals[0] != vals[1]
+        # every tenant got exactly its own single named result
+        for f in futs:
+            results, _ = f.result()
+            assert set(results) == {"p"}
+    finally:
+        svc.stop()
+
+
+# ---------------------------------------------------------------------------
+# cross-agent dedup
+# ---------------------------------------------------------------------------
+
+def test_cross_agent_dedup_identical_subdags_execute_once():
+    # autostart=False: both jobs are queued before dispatch begins, so they
+    # land in the same super-batch deterministically
+    svc = _service(autostart=False, coalesce_window_s=0.05)
+    try:
+        f1 = svc.session("a").submit(_batch())
+        f2 = svc.session("b").submit(_batch())
+        svc.start()
+        (r1, rep1), (r2, rep2) = (f1.result(timeout=60),
+                                  f2.result(timeout=60))
+        assert rep1.coalesced_with == 1 and rep2.coalesced_with == 1
+        g = svc.telemetry.global_snapshot()
+        assert g["super_batches"] == 1
+        assert g["ops_deduped_cross_agent"] > 0
+        # identical DAGs → the merged run executed each op once: both
+        # tenants' attributed op sets are the same signatures
+        assert rep1.ops_shared_cross_agent == rep2.ops_shared_cross_agent > 0
+        np.testing.assert_allclose(np.asarray(r1["p"]), np.asarray(r2["p"]))
+    finally:
+        svc.stop()
+
+
+def test_cross_agent_dedup_accounting_unit():
+    sigs = [{"s1", "s2", "shared"}, {"s3", "shared"}]
+    total, per_tenant = cross_agent_dedup(sigs, ["a", "b"])
+    assert total == 1
+    assert per_tenant == {"a": 1, "b": 1}
+    # same tenant twice → intra-agent, not cross-agent
+    total, per_tenant = cross_agent_dedup(sigs, ["a", "a"])
+    assert total == 0 and per_tenant == {}
+
+
+# ---------------------------------------------------------------------------
+# fairness
+# ---------------------------------------------------------------------------
+
+def test_fair_queue_round_robin_caps_flooding_tenant():
+    q = FairQueue()
+    for i in range(10):
+        q.push(QJob(id=i, tenant="flood", batch=_batch(),
+                    future=PipelineFuture(i, "flood")))
+    q.push(QJob(id=100, tenant="small", batch=_batch(),
+                future=PipelineFuture(100, "small")))
+    round1 = q.pop_round(max_jobs=4, max_per_tenant=2)
+    tenants = [j.tenant for j in round1]
+    # the small tenant is served in the very first round despite the flood
+    assert "small" in tenants
+    assert tenants.count("flood") <= 2
+
+
+def test_flooding_tenant_cannot_starve_another():
+    svc = _service(autostart=False, coalesce_window_s=0.0,
+                   coalesce_max_jobs=2, max_jobs_per_tenant_per_round=1,
+                   n_executors=1)
+    try:
+        done_order = []
+        flood = svc.session("flood")
+        futs = [flood.submit(_batch(name=f"f{i}", n_rows=2000))
+                for i in range(6)]
+        victim_fut = svc.session("victim").submit(_batch(n_rows=2000))
+        for i, f in enumerate(futs):
+            f.add_done_callback(
+                lambda _f, i=i: done_order.append(f"flood{i}"))
+        victim_fut.add_done_callback(lambda _f: done_order.append("victim"))
+        svc.start()
+        victim_fut.result(timeout=120)
+        for f in futs:
+            f.result(timeout=120)
+        # the victim's single job completed well before the flood drained
+        assert "victim" in done_order[:4], done_order
+        snap = svc.telemetry.snapshot()
+        assert snap["victim"]["queue_wait_max_s"] \
+            <= snap["flood"]["queue_wait_max_s"]
+    finally:
+        svc.stop()
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+def test_admission_control_rejects_over_quota():
+    svc = _service(autostart=False, max_queued_total=3,
+                   max_queued_per_tenant=2)
+    try:
+        s = svc.session("greedy")
+        s.submit(_batch())
+        s.submit(_batch())
+        with pytest.raises(AdmissionError):
+            s.submit(_batch())                     # per-tenant quota
+        svc.session("other").submit(_batch())
+        with pytest.raises(AdmissionError):
+            svc.session("third").submit(_batch())  # global depth
+    finally:
+        svc.start()
+        svc.stop()
+
+
+# ---------------------------------------------------------------------------
+# cancellation + error propagation
+# ---------------------------------------------------------------------------
+
+def test_future_cancellation_while_queued():
+    svc = _service(autostart=False)
+    try:
+        fut = svc.session("t").submit(_batch())
+        assert fut.cancel()
+        assert fut.cancelled()
+        with pytest.raises(CancelledError):
+            fut.result(timeout=5)
+        assert svc.telemetry.snapshot()["t"]["jobs_cancelled"] == 1
+        svc.start()
+        # a later job on the same tenant still works
+        r, _ = svc.session("t").submit(_batch()).result(timeout=60)
+        assert "p" in r
+    finally:
+        svc.stop()
+
+
+def test_execution_error_propagates_wrapped():
+    svc = _service()
+    try:
+        fut = svc.session("t").submit(_poison_batch())
+        with pytest.raises(ExecutionError) as ei:
+            fut.result(timeout=60)
+        assert isinstance(ei.value.cause, ValueError)
+        assert svc.telemetry.snapshot()["t"]["jobs_failed"] == 1
+    finally:
+        svc.stop()
+
+
+def test_poisoned_peer_does_not_fail_innocent_coalesced_job():
+    svc = _service(autostart=False, coalesce_window_s=0.05)
+    try:
+        bad_fut = svc.session("bad").submit(_poison_batch())
+        good_fut = svc.session("good").submit(_batch())
+        svc.start()
+        with pytest.raises(ExecutionError):
+            bad_fut.result(timeout=60)
+        # the innocent job was re-executed without the poisoned peer
+        results, _ = good_fut.result(timeout=60)
+        assert "p" in results
+        snap = svc.telemetry.snapshot()
+        assert snap["good"]["jobs_completed"] == 1
+        assert snap["bad"]["jobs_failed"] == 1
+    finally:
+        svc.stop()
+
+
+def test_cancel_after_dispatch_returns_false():
+    svc = _service()
+    try:
+        fut = svc.session("t").submit(_batch(n_rows=1000))
+        fut.result(timeout=60)
+        assert not fut.cancel()
+    finally:
+        svc.stop()
+
+
+# ---------------------------------------------------------------------------
+# lifecycle
+# ---------------------------------------------------------------------------
+
+def test_service_restart_accepts_new_jobs():
+    svc = _service()
+    try:
+        svc.session("t").submit(_batch(n_rows=1000)).result(timeout=60)
+        svc.stop()
+        with pytest.raises(AdmissionError):
+            svc.session("t").submit(_batch(n_rows=1000))
+        svc.start()
+        r, _ = svc.session("t").submit(_batch(n_rows=1000)).result(timeout=60)
+        assert "p" in r
+    finally:
+        svc.stop()
+
+
+def test_stop_without_start_fails_queued_jobs_without_hanging():
+    svc = _service(autostart=False)
+    fut = svc.session("t").submit(_batch(n_rows=1000))
+    svc.stop()                      # must not spin waiting for a dispatcher
+    with pytest.raises(AdmissionError):
+        fut.result(timeout=5)
+
+
+def test_retry_does_not_double_count_telemetry():
+    svc = _service(autostart=False, coalesce_window_s=0.05)
+    try:
+        svc.session("bad").submit(_poison_batch())
+        good_fut = svc.session("good").submit(_batch())
+        svc.start()
+        good_fut.result(timeout=60)
+        g = svc.telemetry.global_snapshot()
+        assert g["super_batches"] == 1       # the retry is not a new batch
+        assert g["jobs_coalesced"] == 2
+        snap = svc.telemetry.snapshot()
+        # queue wait recorded once, at first dispatch (not inflated by the
+        # failed run's execution time)
+        assert snap["good"]["jobs_completed"] == 1
+    finally:
+        svc.stop()
+
+
+# ---------------------------------------------------------------------------
+# async AIDE driver through the service
+# ---------------------------------------------------------------------------
+
+def test_async_aide_rejects_nonpositive_inflight():
+    from repro.agents import AIDEAgent, AsyncAIDESearch
+    with pytest.raises(ValueError):
+        AsyncAIDESearch(None, AIDEAgent(), max_inflight=0)
+
+
+def test_async_aide_search_runs_through_service():
+    from repro.agents import AIDEAgent, AsyncAIDESearch
+    svc = _service(coalesce_window_s=0.02)
+    try:
+        agent = AIDEAgent(n_rows=2000, cv_k=2, seed=0)
+        search = AsyncAIDESearch(svc.session("aide"), agent,
+                                 batch_size=2, max_inflight=2)
+        best = search.run(n_rounds=2)
+        assert best is not None and best.score is not None
+        assert len(agent.nodes) == 4
+        assert svc.telemetry.snapshot()["aide"]["jobs_completed"] == 2
+    finally:
+        svc.stop()

@@ -3,7 +3,6 @@ cross-implementation agreement, estimator sanity."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.dag import LazyOp, TRANSFORM
 from repro.core.selection import impls_for
