@@ -7,12 +7,21 @@ on the winner.  Modes: Base (sequential AIDE), Base_par (naively parallel
 AIDE), stratum (all optimizations), service (N agents multiplexed over one
 StratumService — emitted to ``BENCH_service.json``).
 
+``--mixed-priority`` measures the priority scheduler instead: an
+interactive tenant issues sequential latency-sensitive probes while batch
+tenants flood the service with bulk sweeps, once with the priority-aware
+scheduler (WFQ bands + cooperative preemption) and once priority-blind
+(plain round-robin).  Interactive p50/p99 latency for both modes is merged
+into ``BENCH_service.json`` under ``"mixed_priority"``.
+
     PYTHONPATH=src python benchmarks/e2e_agentic.py --agents 4
+    PYTHONPATH=src python benchmarks/e2e_agentic.py --mixed-priority
 """
 
 from __future__ import annotations
 
 import json
+import os
 import threading
 import time
 from dataclasses import replace
@@ -20,9 +29,10 @@ from dataclasses import replace
 import numpy as np
 
 from repro.agents import paper_workload_batches
-from repro.agents.aide import second_iteration_batch
-from repro.core import Stratum
-from repro.service import StratumService
+from repro.agents.aide import PipelineSpec, second_iteration_batch
+from repro.core import PipelineBatch, Stratum
+from repro.service import Priority, StratumService
+import repro.tabular as T
 
 try:
     from .baselines import run_base, run_base_par
@@ -201,15 +211,188 @@ def run_service(n_agents: int = 4, n_rows: int = 20_000, cv_k: int = 3,
     }
 
 
-def write_service_json(result: dict, path: str = "BENCH_service.json"
-                       ) -> None:
+def write_service_json(result: dict, path: str = "BENCH_service.json",
+                       merge: bool = False) -> None:
+    if merge and os.path.exists(path):
+        with open(path) as f:
+            prev = json.load(f)
+        prev.update(result)
+        result = prev
     with open(path, "w") as f:
         json.dump(result, f, indent=2, default=str)
 
 
+# ---------------------------------------------------------------------------
+# mixed-priority scheduling benchmark: interactive probes under batch load
+# ---------------------------------------------------------------------------
+
+def _probe_batch(i: int, n_rows: int = 4000) -> PipelineBatch:
+    """A small, unique, latency-sensitive pipeline (agent blocked on it)."""
+    cols = [3 + (i % 5), 8 + (i % 7), 13 + (i % 3)]
+    x = T.read("uk_housing", n_rows, seed=0)
+    xs = T.scale(T.impute(T.project(x, cols)))
+    y = T.project(x, [0])
+    sink = T.metric(T.project(xs, [0]), y, kind="mae" if i % 2 else "rmse")
+    return PipelineBatch([sink], [f"probe{i}"])
+
+
+def _sweep_batch(agent: int, j: int, n_rows: int, cv_k: int
+                 ) -> PipelineBatch:
+    """One bulk sweep job: half the paper's iteration-1 grid (one preproc
+    strategy × 4 models), re-seeded per (agent, job) so model fits are
+    unique work while reads and preprocessing stay shareable through the
+    cache."""
+    preproc = ("manual", "table_vectorizer")[j % 2]
+    specs = [PipelineSpec(preproc=preproc, model=m, cv_k=cv_k,
+                          n_rows=n_rows, seed=1000 * agent + j)
+             for m in ("ridge", "elasticnet", "gbt_xgboost",
+                       "gbt_lightgbm")]
+    names = [f"a{agent}_j{j}_{k}" for k in range(len(specs))]
+    return PipelineBatch([s.build() for s in specs], names)
+
+
+def _mixed_priority_mode(priority_aware: bool, n_rows: int, cv_k: int,
+                         n_batch_agents: int,
+                         n_probes: int, probe_rows: int,
+                         jit_dir: str) -> dict:
+    # small super-batches (2 jobs) keep both executors continuously busy
+    # with queued sweep work behind them — the contended regime the
+    # scheduler exists for; aging is disabled so the measurement isolates
+    # WFQ + preemption (the scavenger band still progresses via weight 1)
+    svc = StratumService(memory_budget_bytes=4 << 30,
+                         jit_cache_dir=jit_dir,
+                         coalesce_window_s=0.02,
+                         coalesce_max_jobs=2,
+                         max_jobs_per_tenant_per_round=1,
+                         n_executors=2,
+                         priority_aware=priority_aware,
+                         aging_s=None,
+                         max_preemptions_per_job=32)
+    try:
+        t_start = time.perf_counter()
+        # closed-loop flood: each bulk tenant keeps 2 sweeps outstanding
+        # until the last probe is measured, so EVERY probe (in both modes)
+        # is measured under sustained batch contention
+        stop = threading.Event()
+        sweeps_done = [0] * n_batch_agents
+        flood_errors: list = []
+
+        def flooder(a: int) -> None:
+            try:
+                ses = svc.session(f"bulk-{a}")
+                from collections import deque
+                inflight: "deque" = deque()
+                j = 0
+                while not stop.is_set():
+                    inflight.append(
+                        ses.submit(_sweep_batch(a, j, n_rows, cv_k),
+                                   priority=Priority.SCAVENGER))
+                    j += 1
+                    while len(inflight) >= 2:
+                        inflight.popleft().result(timeout=600)
+                        sweeps_done[a] += 1
+                while inflight:
+                    inflight.popleft().result(timeout=600)
+                    sweeps_done[a] += 1
+            except Exception as e:      # noqa: BLE001
+                flood_errors.append(e)
+
+        threads = [threading.Thread(target=flooder, args=(a,))
+                   for a in range(n_batch_agents)]
+        for t in threads:
+            t.start()
+        time.sleep(1.0)            # let sweeps reach the runtime
+        inter = svc.session("interactive")
+        lats, scores = [], []
+        for i in range(n_probes):
+            t0 = time.perf_counter()
+            res, _ = inter.submit(_probe_batch(i, probe_rows),
+                                  priority=Priority.INTERACTIVE
+                                  ).result(timeout=600)
+            lats.append(time.perf_counter() - t0)
+            scores.append(float(np.asarray(res[f"probe{i}"])))
+            time.sleep(0.25)       # agent "thinks" between probes
+        stop.set()
+        for t in threads:
+            t.join()
+        makespan = time.perf_counter() - t_start
+        if flood_errors:
+            raise flood_errors[0]
+        g = svc.telemetry.global_snapshot()
+        snap = svc.telemetry.snapshot()
+    finally:
+        svc.stop()
+    return {
+        "interactive_p50_s": float(np.percentile(lats, 50)),
+        "interactive_p99_s": float(np.percentile(lats, 99)),
+        "interactive_mean_s": float(np.mean(lats)),
+        "interactive_max_s": float(np.max(lats)),
+        "sweeps_completed": int(sum(sweeps_done)),
+        "batch_makespan_s": makespan,
+        "batch_throughput_jobs_per_s":
+            float(sum(sweeps_done)) / makespan,
+        "preemptions": g["preemptions"],
+        "interactive_queue_wait_s":
+            snap["interactive"]["queue_wait_s"],
+        "scores": scores,
+    }
+
+
+def run_mixed_priority(n_rows: int = 8000, cv_k: int = 2,
+                       n_batch_agents: int = 2,
+                       n_probes: int = 10, probe_rows: int = 4000,
+                       warmup: bool = True) -> dict:
+    """Priority-aware WFQ + preemption vs priority-blind round-robin."""
+    from repro.data.tabular import ensure_files
+    ensure_files("uk_housing", n_rows, 0)
+    ensure_files("uk_housing", probe_rows, 0)
+    jit_dir = "/tmp/repro_jit_cache"
+
+    if warmup:   # compile the jax kernels once so neither mode pays for it
+        s = Stratum(memory_budget_bytes=4 << 30, jit_cache_dir=jit_dir)
+        s.run_batch(_sweep_batch(0, 0, n_rows, cv_k))
+        s.run_batch(_probe_batch(0, probe_rows))
+
+    blind = _mixed_priority_mode(False, n_rows, cv_k, n_batch_agents,
+                                 n_probes, probe_rows, jit_dir)
+    aware = _mixed_priority_mode(True, n_rows, cv_k, n_batch_agents,
+                                 n_probes, probe_rows, jit_dir)
+    scores_identical = all(
+        abs(a - b) <= 1e-9 * max(abs(a), 1.0)
+        for a, b in zip(aware["scores"], blind["scores"]))
+    return {
+        "rows": n_rows,
+        "probes": n_probes,
+        "priority_aware": aware,
+        "priority_blind": blind,
+        "p50_improvement":
+            blind["interactive_p50_s"] / aware["interactive_p50_s"],
+        "p99_improvement":
+            blind["interactive_p99_s"] / aware["interactive_p99_s"],
+        "scores_identical": scores_identical,
+    }
+
+
+def mixed_priority_rows(**kw) -> list:
+    r = run_mixed_priority(**kw)
+    write_service_json({"mixed_priority": r}, merge=True)
+    a, b = r["priority_aware"], r["priority_blind"]
+    return [
+        ("priority_interactive_p50", a["interactive_p50_s"] * 1e6,
+         f"blind={b['interactive_p50_s'] * 1e6:.0f}us "
+         f"({r['p50_improvement']:.1f}x)"),
+        ("priority_interactive_p99", a["interactive_p99_s"] * 1e6,
+         f"blind={b['interactive_p99_s'] * 1e6:.0f}us "
+         f"({r['p99_improvement']:.1f}x)"),
+        ("priority_preemptions", float(a["preemptions"]), "cooperative"),
+        ("priority_scores_identical", float(r["scores_identical"]),
+         "1=identical"),
+    ]
+
+
 def service_rows(n_agents: int = 4, n_rows: int = 20_000) -> list:
     r = run_service(n_agents=n_agents, n_rows=n_rows)
-    write_service_json(r)
+    write_service_json(r, merge=True)
     return [
         ("service_sequential", r["sequential_s"] * 1e6,
          f"{r['agents']}_isolated_sessions"),
@@ -231,9 +414,30 @@ def main() -> None:
     ap.add_argument("--rows", type=int, default=20_000)
     ap.add_argument("--cv", type=int, default=3)
     ap.add_argument("--out", default="BENCH_service.json")
+    ap.add_argument("--mixed-priority", action="store_true",
+                    help="interactive latency under batch load: priority-"
+                         "aware WFQ+preemption vs priority-blind")
     args = ap.parse_args()
+    if args.mixed_priority:
+        r = run_mixed_priority(n_rows=args.rows if args.rows != 20_000
+                               else 8000, cv_k=args.cv)
+        write_service_json({"mixed_priority": r}, args.out, merge=True)
+        a, b = r["priority_aware"], r["priority_blind"]
+        print(f"interactive p50: aware {a['interactive_p50_s'] * 1e3:.0f}ms"
+              f" vs blind {b['interactive_p50_s'] * 1e3:.0f}ms"
+              f"  ({r['p50_improvement']:.1f}x)")
+        print(f"interactive p99: aware {a['interactive_p99_s'] * 1e3:.0f}ms"
+              f" vs blind {b['interactive_p99_s'] * 1e3:.0f}ms"
+              f"  ({r['p99_improvement']:.1f}x)")
+        print(f"preemptions (aware): {a['preemptions']}  "
+              f"batch makespan: aware {a['batch_makespan_s']:.1f}s "
+              f"vs blind {b['batch_makespan_s']:.1f}s")
+        print(f"probe scores identical across modes: "
+              f"{r['scores_identical']}")
+        print(f"wrote {args.out}")
+        return
     r = run_service(n_agents=args.agents, n_rows=args.rows, cv_k=args.cv)
-    write_service_json(r, args.out)
+    write_service_json(r, args.out, merge=True)
     print(f"{args.agents} sequential sessions: {r['sequential_s']:.2f}s")
     print(f"{args.agents} agents via service:  {r['service_s']:.2f}s "
           f"({r['speedup']:.1f}x)")

@@ -10,6 +10,9 @@ Sections:
   * roofline     — §Roofline summary rows from the dry-run artifacts
   * service      — N concurrent agents through the multi-tenant execution
                    service vs N isolated sessions (writes BENCH_service.json)
+  * priority     — interactive p50/p99 latency under batch load: priority-
+                   aware WFQ + preemption vs priority-blind round-robin
+                   (merged into BENCH_service.json)
 
 ``python -m benchmarks.run [--sections a,b,...] [--rows N] [--agents N]``
 """
@@ -65,6 +68,9 @@ def main() -> None:
             elif section == "service":
                 from .e2e_agentic import service_rows
                 rows = service_rows(n_agents=args.agents, n_rows=args.rows)
+            elif section == "priority":
+                from .e2e_agentic import mixed_priority_rows
+                rows = mixed_priority_rows()
             else:
                 raise KeyError(section)
             for name, us, derived in rows:

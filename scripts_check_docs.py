@@ -1,0 +1,87 @@
+#!/usr/bin/env python
+"""Docs hygiene checker (run by the CI ``docs`` job).
+
+Fails (exit 1) when:
+
+* a relative markdown link in ``README.md`` or ``docs/*.md`` points at a
+  file or directory that does not exist, or
+* an ``examples/*.py`` script is never referenced from the docs tree
+  (README or ``docs/``) — examples that nothing points at rot silently.
+
+Absolute URLs (http/https) are ignored: CI must not depend on the network.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.abspath(__file__))
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def doc_files() -> list:
+    docs = [os.path.join(ROOT, "README.md")]
+    docs_dir = os.path.join(ROOT, "docs")
+    if os.path.isdir(docs_dir):
+        docs += sorted(os.path.join(docs_dir, n)
+                       for n in os.listdir(docs_dir) if n.endswith(".md"))
+    return docs
+
+
+def check_links(paths) -> list:
+    errors = []
+    for path in paths:
+        base = os.path.dirname(path)
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        for target in LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:          # pure in-page anchor
+                continue
+            resolved = os.path.normpath(os.path.join(base, rel))
+            if not os.path.exists(resolved):
+                errors.append(f"{os.path.relpath(path, ROOT)}: "
+                              f"broken link -> {target}")
+    return errors
+
+
+def check_examples_referenced(paths) -> list:
+    corpus = ""
+    for path in paths:
+        with open(path, encoding="utf-8") as f:
+            corpus += f.read()
+    errors = []
+    ex_dir = os.path.join(ROOT, "examples")
+    for name in sorted(os.listdir(ex_dir)):
+        if not name.endswith(".py") or name.startswith("_"):
+            continue
+        if f"examples/{name}" not in corpus:
+            errors.append(f"examples/{name} is not referenced from "
+                          f"README.md or docs/")
+    return errors
+
+
+def main() -> int:
+    paths = doc_files()
+    missing = [p for p in ("docs/ARCHITECTURE.md", "docs/SCHEDULING.md",
+                           "docs/API.md")
+               if not os.path.exists(os.path.join(ROOT, p))]
+    errors = [f"missing doc: {p}" for p in missing]
+    errors += check_links(paths)
+    errors += check_examples_referenced(paths)
+    if errors:
+        for e in errors:
+            print(f"FAIL {e}")
+        return 1
+    print(f"docs OK: {len(paths)} files, links resolve, "
+          f"all examples referenced")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -298,23 +298,56 @@ class AsyncAIDESearch:
     ``session`` is anything with ``submit(batch) -> future`` whose future's
     ``result()`` returns ``(name→value, report)`` — i.e. a
     :class:`repro.service.Session`.
+
+    When the session supports priorities (``submit(batch, priority=...)``),
+    the driver stratifies its own traffic: initial *drafts* are exploratory
+    bulk work and go in at ``draft_priority`` (default BATCH), while
+    *refinements* of the current best node — the work the agent's search
+    frontier is actually blocked on — go in at ``refine_priority`` (default
+    INTERACTIVE).  Sessions without priority support still work unchanged.
     """
 
     def __init__(self, session, agent: AIDEAgent, batch_size: int = 4,
-                 max_inflight: int = 2):
+                 max_inflight: int = 2,
+                 draft_priority=None, refine_priority=None):
         if max_inflight < 1:
             raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
+        from ..service.priority import Priority
         self.session = session
         self.agent = agent
         self.batch_size = batch_size
         self.max_inflight = max_inflight
+        # capability probe up front — catching TypeError around submit()
+        # itself would mask real errors and could double-enqueue a batch
+        self._supports_priority = False
+        try:
+            import inspect
+            params = inspect.signature(session.submit).parameters
+            self._supports_priority = (
+                "priority" in params
+                or any(p.kind is inspect.Parameter.VAR_KEYWORD
+                       for p in params.values()))
+        except (AttributeError, TypeError, ValueError):
+            pass
+        self.draft_priority = (Priority.BATCH if draft_priority is None
+                               else draft_priority)
+        self.refine_priority = (Priority.INTERACTIVE
+                                if refine_priority is None
+                                else refine_priority)
         self.reports: list = []
 
     def _submit(self, round_idx: int):
         specs = self.agent.propose(self.batch_size)
         names = [f"r{round_idx}_{i}" for i in range(len(specs))]
         batch = PipelineBatch([s.build() for s in specs], names)
-        future = self.session.submit(batch)
+        # drafts (nothing scored yet) are bulk exploration; once the agent
+        # is mutating its best node, the search is latency-bound on results
+        refining = any(n.score is not None for n in self.agent.nodes)
+        prio = self.refine_priority if refining else self.draft_priority
+        if self._supports_priority:
+            future = self.session.submit(batch, priority=prio)
+        else:                   # duck-typed session without priority support
+            future = self.session.submit(batch)
         return specs, names, future
 
     def _harvest(self, specs, names, future) -> None:

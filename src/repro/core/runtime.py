@@ -7,7 +7,16 @@ Executes a scheduler :class:`Plan` wave by wave:
 * inter-operator parallelism via a bounded thread pool — the CPU analogue of
   the paper's GIL-releasing concurrent kernels; jax-tier impls are jitted and
   dispatch asynchronously, so overlapping waves also overlaps XLA execution,
-* liveness-driven freeing of intermediates (memory management).
+* liveness-driven freeing of intermediates (memory management),
+* cooperative preemption: when the caller installs a ``preempt_check``, the
+  runtime polls it at every wave boundary *and* between op completions
+  inside wide waves, and, if it fires, abandons the run with
+  :class:`ExecutionPreempted` carrying every already-completed intermediate
+  (the *salvage*); a re-run passes that salvage back as ``preloaded`` so no
+  finished work executes twice, and a liveness rule (yield only after ≥1
+  newly-executed op) guarantees progress under repeated preemption.  This
+  is how the multi-tenant service yields a low-priority super-batch to
+  freshly queued higher-priority work without losing progress.
 
 ``Base`` / ``Base_par`` executors for the paper's baselines live in
 benchmarks (they bypass the optimizer entirely).
@@ -17,7 +26,8 @@ from __future__ import annotations
 
 import threading
 import time
-from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import (FIRST_COMPLETED, ThreadPoolExecutor,
+                                wait as _fwait)
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional, Sequence
 
@@ -32,10 +42,11 @@ class RunReport:
     wall_time_s: float = 0.0
     ops_executed: int = 0
     ops_from_cache: int = 0
+    ops_salvaged: int = 0   # restored from a preempted run's salvage
     waves: int = 0
     per_backend: dict = field(default_factory=dict)
-    # op signature -> "cache" | backend name; lets multi-tenant callers
-    # (service telemetry) attribute work per pipeline after merged batches
+    # op signature -> "cache" | "salvage" | backend name; lets multi-tenant
+    # callers (service telemetry) attribute work per pipeline after merges
     sig_source: dict = field(default_factory=dict)
 
 
@@ -44,6 +55,19 @@ class ExecutionError(RuntimeError):
         super().__init__(f"executing {op.op_name}#{op.uid}: {cause!r}")
         self.op = op
         self.cause = cause
+
+
+class ExecutionPreempted(Exception):
+    """A cooperative yield, not a failure: the run stopped at a wave
+    boundary because higher-priority work arrived.  ``salvage`` maps each
+    completed op signature to its outputs tuple; feeding it back to a new
+    :class:`Runtime` via ``preloaded`` resumes without recomputation."""
+
+    def __init__(self, salvage: dict, waves_done: int):
+        super().__init__(f"preempted after {waves_done} wave(s); "
+                         f"{len(salvage)} intermediates salvaged")
+        self.salvage = salvage
+        self.waves_done = waves_done
 
 
 def execute_reference(op: LazyOp, inputs: Sequence[Any]) -> tuple:
@@ -64,10 +88,19 @@ class Runtime:
     def __init__(self,
                  cache: Optional[IntermediateCache] = None,
                  cache_candidates: Optional[set] = None,
-                 parallel: bool = True):
+                 parallel: bool = True,
+                 preloaded: Optional[dict] = None,
+                 preempt_check: Optional[Callable[[], bool]] = None,
+                 sig_tenant: Optional[dict] = None):
         self.cache = cache
         self.cache_candidates = cache_candidates or set()
         self.parallel = parallel
+        # sig → outputs tuple salvaged from a preempted run of this DAG
+        self.preloaded = preloaded or {}
+        # polled at wave boundaries; True → raise ExecutionPreempted
+        self.preempt_check = preempt_check
+        # sig → tenant owning the op (multi-tenant cache charge accounting)
+        self.sig_tenant = sig_tenant or {}
         self._values: dict[str, Any] = {}      # "sig:index" -> value
         self._keys_by_sig: dict[str, list[str]] = {}   # sig -> stored keys
         self._lock = threading.Lock()
@@ -96,8 +129,15 @@ class Runtime:
 
     def _run_op(self, op: LazyOp, selection: dict, report: RunReport) -> None:
         sig = op.signature
+        if sig in self.preloaded:
+            # salvaged from a preempted run — completed work is never redone
+            self._store(op, self.preloaded[sig])
+            with self._lock:
+                report.ops_salvaged += 1
+                report.sig_source[sig] = "salvage"
+            return
         if self.cache is not None and op.cacheable:
-            hit = self.cache.get(sig)
+            hit = self.cache.get(sig, tenant=self.sig_tenant.get(sig))
             if hit is not None:
                 self._store(op, hit)
                 with self._lock:
@@ -125,7 +165,7 @@ class Runtime:
             report.sig_source[sig] = backend
         if (self.cache is not None and op.cacheable
                 and sig in self.cache_candidates):
-            self.cache.put(sig, outputs)
+            self.cache.put(sig, outputs, tenant=self.sig_tenant.get(sig))
 
     # -- variant batching (§Perf H3.4) ---------------------------------
     def _batch_variants(self, wave_ops: list, selection: dict,
@@ -140,7 +180,8 @@ class Runtime:
             cached = (self.cache is not None and op.cacheable
                       and op.signature in self.cache)
             if reg is None or impl is None or impl.backend != "jax" \
-                    or not impl.vmappable or cached:
+                    or not impl.vmappable or cached \
+                    or op.signature in self.preloaded:
                 rest.append(op)
                 continue
             key_fn, _ = reg
@@ -156,7 +197,8 @@ class Runtime:
                 self._store(op, out)
                 if (self.cache is not None and op.cacheable
                         and op.signature in self.cache_candidates):
-                    self.cache.put(op.signature, out)
+                    self.cache.put(op.signature, out,
+                                   tenant=self.sig_tenant.get(op.signature))
             with self._lock:
                 report.ops_executed += len(ops_)
                 report.per_backend["jax-vmap"] = \
@@ -166,25 +208,95 @@ class Runtime:
         return rest
 
     # ------------------------------------------------------------------
+    def _resume_skips(self, plan: Plan, sinks: Sequence[LazyRef]) -> set:
+        """Ops a post-preemption resume can skip entirely.
+
+        The preempted run freed intermediates liveness-driven, so the
+        salvage only holds values that were still live at the yield point.
+        An op absent from the salvage whose every consumer IS salvaged (or
+        transitively skippable) completed before the yield and its output
+        is dead — re-executing it would redo finished work.  Computed by a
+        reverse-topological sweep: an op must run iff it is an un-salvaged
+        sink or feeds an op that runs."""
+        sink_ops = {r.op.signature for r in sinks}
+        needed: set = set()     # input sigs of ops that will execute
+        skips: set = set()
+        for wave in reversed(plan.waves):
+            for op in wave.ops:
+                sig = op.signature
+                used = sig in sink_ops or sig in needed
+                if sig in self.preloaded:
+                    if not used:   # salvaged but dead: don't even store it
+                        skips.add(sig)
+                    continue
+                if used:
+                    for r in op.inputs:
+                        needed.add(r.op.signature)
+                else:
+                    skips.add(sig)
+        return skips
+
+    def _should_yield(self, report: RunReport) -> bool:
+        """Yield only after real progress (≥1 newly-executed op this
+        dispatch) so repeated preemption can never livelock a job."""
+        return (self.preempt_check is not None and report.ops_executed > 0
+                and self.preempt_check())
+
+    def _preempted(self, report: RunReport) -> ExecutionPreempted:
+        with self._lock:
+            salvage = {sig: tuple(self._values[k] for k in keys)
+                       for sig, keys in self._keys_by_sig.items()}
+        # carry forward salvage not yet replayed (second yield of a resume)
+        salvage.update(self.preloaded)
+        return ExecutionPreempted(salvage, waves_done=report.waves)
+
     def execute(self, sinks: Sequence[LazyRef], plan: Plan,
                 selection: dict[str, PhysicalImpl]) -> tuple[list, RunReport]:
         report = RunReport()
+        skips = self._resume_skips(plan, sinks) if self.preloaded else set()
         t0 = time.perf_counter()
         pool: Optional[ThreadPoolExecutor] = None
         if self.parallel and plan.inter_op_parallelism > 1:
             pool = ThreadPoolExecutor(max_workers=plan.inter_op_parallelism)
         try:
             for wave in plan.waves:
+                # cooperative yield point at the wave boundary — the salvage
+                # carries every completed intermediate to the requeued re-run
+                if self._should_yield(report):
+                    raise self._preempted(report)
                 report.waves += 1
-                todo = self._batch_variants(list(wave.ops), selection,
-                                            report)
+                wave_ops = []
+                for op in wave.ops:
+                    if op.signature in skips:
+                        # completed before the preempting yield; its output
+                        # is dead on this resume — never re-executed
+                        with self._lock:
+                            report.ops_salvaged += 1
+                            report.sig_source[op.signature] = "salvage"
+                        continue
+                    wave_ops.append(op)
+                todo = self._batch_variants(wave_ops, selection, report)
                 if pool is not None and len(todo) > 1:
-                    futures = [pool.submit(self._run_op, op, selection, report)
-                               for op in todo]
-                    for f in futures:
-                        f.result()
+                    # intra-wave yield points: wide waves (e.g. 16 model
+                    # fits) can run for many seconds, so also poll between
+                    # op completions — queued ops are cancelled, in-flight
+                    # ones drained, everything finished goes into salvage
+                    pending = {pool.submit(self._run_op, op, selection,
+                                           report) for op in todo}
+                    while pending:
+                        done, pending = _fwait(pending,
+                                               return_when=FIRST_COMPLETED)
+                        for f in done:
+                            f.result()
+                        if pending and self._should_yield(report):
+                            running = [f for f in pending if not f.cancel()]
+                            for f in running:
+                                f.result()
+                            raise self._preempted(report)
                 else:
-                    for op in todo:
+                    for i, op in enumerate(todo):
+                        if i and self._should_yield(report):
+                            raise self._preempted(report)
                         self._run_op(op, selection, report)
                 # free dead intermediates — exact per-signature key lists
                 # (prefix/equality scans can collide and never matched the

@@ -1,0 +1,56 @@
+"""jax version-compat shims for ``shard_map`` and mesh construction.
+
+The codebase targets the modern jax API (``jax.shard_map`` with
+``check_vma=``/``axis_names=``, ``jax.sharding.AxisType``), but the
+supported floor is jax 0.4.37, where
+
+* ``shard_map`` lives in ``jax.experimental.shard_map`` with ``check_rep=``
+  instead of ``check_vma=`` and ``auto=`` (the complement of
+  ``axis_names``) instead of ``axis_names=``;
+* ``jax.sharding.AxisType`` does not exist and ``jax.make_mesh`` takes no
+  ``axis_types=`` keyword (every axis is implicitly Auto, which is exactly
+  what the modern call sites request).
+
+Call sites use :func:`shard_map` / :func:`make_mesh` from this module and
+get whichever spelling the installed jax understands.  See the
+"jax version gap" item in ROADMAP.md.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              axis_names: Optional[set] = None, check_vma: bool = True):
+    """``jax.shard_map`` on modern jax; the experimental fallback on 0.4.x.
+
+    ``axis_names`` names the *manual* axes (modern semantics); on old jax it
+    is translated to ``auto=`` (the mesh axes left automatic).  ``check_vma``
+    maps onto the old ``check_rep``.
+    """
+    if hasattr(jax, "shard_map"):
+        kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_vma)
+        if axis_names is not None:
+            kwargs["axis_names"] = axis_names
+        return jax.shard_map(f, **kwargs)
+    # Old jax: partial-manual regions (auto=) miscompile jax.lax.axis_index
+    # ("PartitionId instruction is not supported for SPMD partitioning"),
+    # so run fully manual over every mesh axis instead.  That is equivalent
+    # for our call sites: bodies only issue collectives over the axes they
+    # name, so the extra axes just see the body replicated — which is what
+    # the P()/unmentioned-axis in_specs already say.
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=bool(check_vma))
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with all-Auto axis types where supported."""
+    if hasattr(jax.sharding, "AxisType"):
+        axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
+        return jax.make_mesh(shape, axes, axis_types=axis_types)
+    return jax.make_mesh(shape, axes)

@@ -29,6 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from .compat import shard_map
+
 from .context import current_context
 
 
@@ -88,7 +90,7 @@ def seq_sharded_decode(q, k_cache, v_cache, cache_len, new_k, new_v,
     # f32 at the boundary for replicated operands (XLA-CPU bf16 promotion
     # abort — see distributed/vocab_ce.py); the cache stays in its dtype
     # (sharded operands don't hit the replication all-reduce path).
-    out, kc, vc = jax.shard_map(
+    out, kc, vc = shard_map(
         local, mesh=mesh,
         in_specs=(P(), P(None, "model"), P(None, "model"), P(), P(), P()),
         out_specs=(P(), P(None, "model"), P(None, "model")),

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..distributed import current_context
+from .compat import shard_map
 
 
 def _local_ce_stats(x, w_local, labels, v_lo, v_hi, n_valid):
@@ -62,7 +63,7 @@ def vocab_parallel_ce(x, w, labels, valid, n_valid: int, axis: str = "model"):
         vf = val.astype(jnp.float32)
         return (nll * vf).sum() / jnp.maximum(vf.sum(), 1.0)
 
-    smapped = jax.shard_map(
+    smapped = shard_map(
         local, mesh=ctx.mesh,
         in_specs=(P(), P(None, axis), P(), P()),
         out_specs=P(), axis_names={axis}, check_vma=False,

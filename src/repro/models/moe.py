@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from ..distributed import current_context
+from ..distributed.compat import shard_map
 from ..kernels import moe_gmm
 from .config import ModelConfig
 
@@ -136,7 +137,7 @@ def moe_ffn(params, x, cfg: ModelConfig):
         # aborts on the bf16 replication all-reduce it would otherwise emit
         # (same workaround as distributed/vocab_ce.py); expert matmuls still
         # run in the model dtype inside.
-        y_flat = jax.shard_map(
+        y_flat = shard_map(
             local_fn, mesh=ctx.mesh,
             in_specs=(P(), P(), P(axis), P(axis), P(axis)),
             out_specs=P(), axis_names={axis}, check_vma=False,
@@ -156,7 +157,7 @@ def moe_ffn(params, x, cfg: ModelConfig):
             return _moe_local(p, xf.astype(orig_dtype), cfg, E, 0) \
                 .astype(jnp.float32)
 
-        y_flat = jax.shard_map(
+        y_flat = shard_map(
             local_dp, mesh=ctx.mesh,
             in_specs=(P(axes), P(), P(), P(), P()),
             out_specs=P(axes), axis_names=set(axes), check_vma=False,

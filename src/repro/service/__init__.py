@@ -4,9 +4,11 @@ Decouples agent planning from pipeline execution (paper §3): agents submit
 :class:`~repro.core.fusion.PipelineBatch`es through non-blocking
 :class:`Session` handles; the service coalesces concurrent submissions from
 different agents into super-batches, dedups shared work via cross-agent CSE
-and a shared intermediate cache, schedules tenants fairly under a global
+and a shared intermediate cache with per-tenant quota arbitration,
+schedules priority bands by weighted fair queuing (with starvation aging
+and cooperative preemption of running low-priority work) under a global
 memory budget, and resolves :class:`PipelineFuture`s with per-tenant
-telemetry.
+telemetry.  See ``docs/ARCHITECTURE.md`` and ``docs/SCHEDULING.md``.
 
     with StratumService(memory_budget_bytes=4 << 30) as svc:
         s1, s2 = svc.session("agent-1"), svc.session("agent-2")
@@ -17,13 +19,15 @@ telemetry.
 """
 
 from .coalesce import SuperBatch, coalesce, cross_agent_dedup
+from .priority import DEFAULT_WEIGHTS, Priority
 from .queue import AdmissionError, FairQueue, Job
 from .server import JobReport, ServiceConfig, StratumService
 from .session import PipelineFuture, Session
 from .telemetry import ServiceTelemetry, TenantStats
 
 __all__ = [
-    "AdmissionError", "FairQueue", "Job", "JobReport", "PipelineFuture",
-    "ServiceConfig", "ServiceTelemetry", "Session", "StratumService",
-    "SuperBatch", "TenantStats", "coalesce", "cross_agent_dedup",
+    "AdmissionError", "DEFAULT_WEIGHTS", "FairQueue", "Job", "JobReport",
+    "PipelineFuture", "Priority", "ServiceConfig", "ServiceTelemetry",
+    "Session", "StratumService", "SuperBatch", "TenantStats", "coalesce",
+    "cross_agent_dedup",
 ]

@@ -9,6 +9,11 @@ encoder — the op executes once and both futures see its value.
 The coalescer also owns **result remapping**: sink names are namespaced per
 job (``j<id>/<name>``) so the merged run's name→value dict splits losslessly
 back into each tenant's original names.
+
+Super-batches are *priority-homogeneous*: the dispatcher only coalesces jobs
+popped from the same priority band (see ``queue.pop_round(band=...)``), so
+an INTERACTIVE probe is never welded to a bulk sweep whose execution time it
+would then inherit, and a preemption decision applies to the whole merge.
 """
 
 from __future__ import annotations

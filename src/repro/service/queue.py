@@ -1,15 +1,29 @@
-"""Admission-controlled, tenant-fair job queue.
+"""Admission-controlled, priority-stratified, tenant-fair job queue.
 
-Two properties the service needs that a plain FIFO lacks:
+Three properties the service needs that a plain FIFO lacks:
 
 * **admission control** — ``push`` rejects (raises :class:`AdmissionError`)
   once global or per-tenant queue depth limits are hit, so a runaway agent
   sheds load at the edge instead of OOMing the service;
-* **fairness** — jobs live in per-tenant FIFOs and ``pop_round`` drains them
-  round-robin with a per-tenant cap per round, so a tenant flooding the
-  queue cannot starve another: every round, each backlogged tenant gets at
-  most ``max_per_tenant`` slots and every tenant with work gets at least
-  one chance per cycle.
+* **priority stratification** — jobs land in one of three bands
+  (:class:`~repro.service.priority.Priority`); ``pop_round`` picks the band
+  to serve by weighted fair queuing (credit accrual proportional to
+  configurable weights), so latency-sensitive INTERACTIVE probes do not sit
+  behind another agent's bulk sweep, while BATCH/SCAVENGER retain a
+  configurable fraction of throughput.  Each round serves exactly one band,
+  keeping coalesced super-batches priority-homogeneous (a prerequisite for
+  coherent preemption decisions);
+* **fairness within a band** — jobs live in per-tenant FIFOs and a round
+  drains them round-robin with a per-tenant cap, so a tenant flooding the
+  queue cannot starve another tenant of the same priority.
+
+Starvation-proofing: a queued job is *aged* — promoted one band for every
+``aging_s`` seconds it has waited — so even a SCAVENGER job under sustained
+INTERACTIVE load (or with a weight-0 band) eventually reaches the top band
+and is served by ordinary round-robin there.
+
+``requeue`` re-admits cooperatively preempted jobs at the *front* of their
+tenant FIFO, bypassing admission limits (they were already admitted once).
 """
 
 from __future__ import annotations
@@ -18,9 +32,10 @@ import threading
 import time
 from collections import OrderedDict, deque
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Optional, Sequence
 
 from ..core.fusion import PipelineBatch
+from .priority import DEFAULT_WEIGHTS, Priority
 from .session import PipelineFuture
 
 
@@ -34,19 +49,49 @@ class Job:
     tenant: str
     batch: PipelineBatch
     future: PipelineFuture
+    priority: Priority = Priority.BATCH
     submit_t: float = field(default_factory=time.perf_counter)
     # set at first dispatch; a failure-isolation retry must not re-measure
     # (the second measurement would include the failed run's execution time)
     dispatch_wait_s: Optional[float] = None
+    # current effective band (≤ priority once aging promotes the job)
+    band: int = -1
+    # cooperative-preemption state: times this job's super-batch yielded,
+    # and intermediates completed before the yield (sig → outputs tuple) so
+    # the re-run loses no finished work
+    preemptions: int = 0
+    salvage: dict = field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        if self.band < 0:
+            self.band = int(self.priority)
 
 
 class FairQueue:
+    """Priority-stratified weighted-fair queue with per-tenant round-robin.
+
+    ``priority_aware=False`` collapses every job into the BATCH band,
+    reproducing the original priority-blind round-robin scheduler (used as
+    the baseline in ``benchmarks/e2e_agentic.py --mixed-priority``).
+    """
+
     def __init__(self,
                  max_queued_total: int = 1024,
-                 max_queued_per_tenant: int = 256):
+                 max_queued_per_tenant: int = 256,
+                 weights: Optional[dict] = None,
+                 aging_s: Optional[float] = 5.0,
+                 priority_aware: bool = True):
         self.max_queued_total = max_queued_total
         self.max_queued_per_tenant = max_queued_per_tenant
-        self._tenants: "OrderedDict[str, deque[Job]]" = OrderedDict()
+        self.weights = {Priority(k): int(v)
+                        for k, v in (weights or DEFAULT_WEIGHTS).items()}
+        self.aging_s = aging_s
+        self.priority_aware = priority_aware
+        # band → (tenant → FIFO); OrderedDict gives intra-band round-robin
+        self._bands: dict[int, "OrderedDict[str, deque[Job]]"] = {
+            int(p): OrderedDict() for p in Priority}
+        self._credits: dict[int, float] = {int(p): 0.0 for p in Priority}
+        self._tenant_total: dict[str, int] = {}
         self._total = 0
         self._lock = threading.Lock()
         self._not_empty = threading.Condition(self._lock)
@@ -60,56 +105,150 @@ class FairQueue:
             if self._total >= self.max_queued_total:
                 raise AdmissionError(
                     f"queue full ({self._total}/{self.max_queued_total})")
-            q = self._tenants.setdefault(job.tenant, deque())
-            if len(q) >= self.max_queued_per_tenant:
+            n_tenant = self._tenant_total.get(job.tenant, 0)
+            if n_tenant >= self.max_queued_per_tenant:
                 raise AdmissionError(
                     f"tenant {job.tenant!r} over quota "
-                    f"({len(q)}/{self.max_queued_per_tenant})")
-            q.append(job)
+                    f"({n_tenant}/{self.max_queued_per_tenant})")
+            if not self.priority_aware:
+                job.band = int(Priority.BATCH)
+            band = self._bands[job.band]
+            band.setdefault(job.tenant, deque()).append(job)
+            self._tenant_total[job.tenant] = n_tenant + 1
             self._total += 1
             self._not_empty.notify()
 
-    def pop_round(self, max_jobs: int, max_per_tenant: int = 1,
-                  timeout: Optional[float] = None) -> list[Job]:
-        """One fair scheduling round.
+    def requeue(self, jobs: Sequence[Job]) -> None:
+        """Re-admit preempted jobs at the front of their tenant FIFO.
 
-        Blocks up to ``timeout`` for work, then takes ≤ ``max_per_tenant``
-        jobs from each tenant in round-robin order (tenants rotate to the
-        back after being served) until ``max_jobs`` or the queue is empty.
-        """
+        Bypasses depth limits — the jobs were admitted once already and
+        rejecting them now would lose accepted work.  After the queue is
+        closed the caller must fail the jobs instead."""
         with self._lock:
-            if not self._total and timeout:
-                self._not_empty.wait(timeout)
+            if self._closed:
+                raise AdmissionError("service is shutting down")
+            for job in reversed(list(jobs)):
+                if not self.priority_aware:
+                    job.band = int(Priority.BATCH)
+                band = self._bands[job.band]
+                band.setdefault(job.tenant, deque()).appendleft(job)
+                band.move_to_end(job.tenant, last=False)
+                self._tenant_total[job.tenant] = \
+                    self._tenant_total.get(job.tenant, 0) + 1
+                self._total += 1
+            self._not_empty.notify_all()
+
+    # ------------------------------------------------------------------
+    def _age_locked(self, now: float) -> None:
+        """Promote jobs one band per ``aging_s`` seconds waited."""
+        if not self.aging_s or not self.priority_aware:
+            return
+        for b in (int(Priority.SCAVENGER), int(Priority.BATCH)):
+            tenants = self._bands[b]
+            for tenant in list(tenants):
+                q = tenants[tenant]
+                keep: deque = deque()
+                for job in q:
+                    target = max(0, int(job.priority)
+                                 - int((now - job.submit_t) / self.aging_s))
+                    if target < b:
+                        job.band = b - 1   # one band per aging step
+                        dst = self._bands[b - 1]
+                        dst.setdefault(job.tenant, deque()).append(job)
+                    else:
+                        keep.append(job)
+                if keep:
+                    tenants[tenant] = keep
+                else:
+                    del tenants[tenant]
+
+    def _select_band_locked(self) -> Optional[int]:
+        """Weighted-fair band choice (surplus round-robin over credits)."""
+        nonempty = [b for b in sorted(self._bands) if self._bands[b]]
+        if not nonempty:
+            return None
+        if not self.priority_aware:
+            return nonempty[0]
+        weighted = [b for b in nonempty if self.weights.get(Priority(b), 0) > 0]
+        candidates = weighted or nonempty
+        if len(candidates) == 1:
+            return candidates[0]
+        for b in candidates:
+            self._credits[b] += self.weights.get(Priority(b), 0)
+        chosen = max(candidates, key=lambda b: (self._credits[b], -b))
+        self._credits[chosen] -= sum(self.weights.get(Priority(b), 0)
+                                     for b in candidates)
+        return chosen
+
+    def pop_round(self, max_jobs: int, max_per_tenant: int = 1,
+                  timeout: Optional[float] = None,
+                  band: Optional[int] = None) -> list[Job]:
+        """One fair scheduling round, confined to a single priority band.
+
+        Blocks up to ``timeout`` for work, ages waiting jobs, selects a band
+        by weighted fair queuing (or uses ``band`` when the caller is
+        extending an in-progress coalescing window — super-batches must stay
+        priority-homogeneous), then takes ≤ ``max_per_tenant`` jobs from
+        each of the band's tenants in round-robin order (tenants rotate to
+        the back after being served) until ``max_jobs`` or the band drains.
+        """
+        deadline = (time.perf_counter() + timeout) if timeout else None
+
+        def _has_work() -> bool:
+            if band is None:
+                return bool(self._total)
+            return bool(self._bands[band])
+
+        with self._lock:
+            while not _has_work():
+                if deadline is None:
+                    return []
+                left = deadline - time.perf_counter()
+                if left <= 0 or self._closed:
+                    return []
+                self._not_empty.wait(left)
+            now = time.perf_counter()
+            self._age_locked(now)
+            chosen = band if band is not None else self._select_band_locked()
+            if chosen is None or not self._bands[chosen]:
+                return []
+            tenants = self._bands[chosen]
             out: list[Job] = []
-            if not self._total:
-                return out
             served = 0
-            n_tenants = len(self._tenants)
-            while served < n_tenants and len(out) < max_jobs and self._total:
-                tenant, q = next(iter(self._tenants.items()))
+            n_tenants = len(tenants)
+            while served < n_tenants and len(out) < max_jobs and tenants:
+                tenant, q = next(iter(tenants.items()))
                 take = min(max_per_tenant, len(q), max_jobs - len(out))
                 for _ in range(take):
-                    out.append(q.popleft())
+                    job = q.popleft()
+                    out.append(job)
                     self._total -= 1
+                    self._tenant_total[tenant] -= 1
+                    if not self._tenant_total[tenant]:
+                        del self._tenant_total[tenant]
                 # rotate: served tenant goes to the back; drop empty queues
-                self._tenants.move_to_end(tenant)
+                tenants.move_to_end(tenant)
                 if not q:
-                    del self._tenants[tenant]
+                    del tenants[tenant]
                 served += 1
             return out
 
     def cancel(self, job_id: int) -> bool:
         """Remove a still-queued job; returns False once dispatched."""
         with self._lock:
-            for tenant, q in list(self._tenants.items()):
-                for job in q:
-                    if job.id == job_id:
-                        q.remove(job)
-                        self._total -= 1
-                        if not q:
-                            del self._tenants[tenant]
-                        job.future._set_cancelled()
-                        return True
+            for tenants in self._bands.values():
+                for tenant, q in list(tenants.items()):
+                    for job in q:
+                        if job.id == job_id:
+                            q.remove(job)
+                            self._total -= 1
+                            self._tenant_total[tenant] -= 1
+                            if not self._tenant_total[tenant]:
+                                del self._tenant_total[tenant]
+                            if not q:
+                                del tenants[tenant]
+                            job.future._set_cancelled()
+                            return True
         return False
 
     # ------------------------------------------------------------------
@@ -117,12 +256,26 @@ class FairQueue:
         with self._lock:
             return self._total
 
+    def pending_by_band(self) -> dict[int, int]:
+        with self._lock:
+            return {b: sum(len(q) for q in tenants.values())
+                    for b, tenants in self._bands.items()}
+
+    def has_work_above(self, band: int) -> bool:
+        """True when a job is queued in a strictly more urgent band —
+        the cooperative-preemption trigger for a running super-batch."""
+        with self._lock:
+            return any(self._bands[b] for b in self._bands if b < band)
+
     def close(self) -> list[Job]:
         """Stop admitting; drain and return whatever is still queued."""
         with self._lock:
             self._closed = True
-            rest = [j for q in self._tenants.values() for j in q]
-            self._tenants.clear()
+            rest = [j for tenants in self._bands.values()
+                    for q in tenants.values() for j in q]
+            for tenants in self._bands.values():
+                tenants.clear()
+            self._tenant_total.clear()
             self._total = 0
             self._not_empty.notify_all()
             return rest

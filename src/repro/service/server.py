@@ -4,19 +4,27 @@ Decouples agent *planning* from pipeline *execution* (paper §3): agents
 hold :class:`~repro.service.session.Session` handles and submit batches
 without blocking; the service side runs
 
-    submit → admission control → per-tenant fair queue → coalescer
+    submit → admission control → priority-stratified fair queue → coalescer
            → optimizer (cross-agent CSE) → memory gate → Runtime
            → result demux → futures + per-tenant telemetry
 
 Key properties:
 
-* **fair scheduling** — each dispatch round takes at most
-  ``max_jobs_per_tenant_per_round`` jobs per tenant, round-robin, so a
-  flooding agent cannot starve the others;
+* **priority-aware fair scheduling** — jobs carry a
+  :class:`~repro.service.priority.Priority`; the queue serves bands by
+  weighted fair queuing (INTERACTIVE ≫ BATCH ≫ SCAVENGER by default) with
+  round-robin and a per-tenant cap inside each band, and ages long-waiting
+  jobs upward so nothing starves (see ``docs/SCHEDULING.md``);
+* **cooperative preemption** — a running low-priority super-batch polls the
+  queue at wave boundaries and yields when more urgent work is waiting: its
+  jobs are requeued at the front of their band carrying every completed
+  intermediate (*salvage*), so the re-run redoes no finished work.  A job
+  yields at most ``max_preemptions_per_job`` times, then runs to completion;
 * **cross-agent work sharing** — jobs gathered in one round are merged into
   a super-batch before optimization, so CSE dedups identical sub-DAGs
   emitted by *different* agents, and all tenants share one thread-safe
-  :class:`IntermediateCache`;
+  :class:`IntermediateCache` with per-tenant charge accounting and quota
+  arbitration (an over-quota tenant's entries are evicted first);
 * **global memory budget** — a super-batch only starts executing once its
   planned peak memory fits under the service budget alongside the other
   in-flight super-batches;
@@ -37,8 +45,9 @@ from typing import Optional, Sequence
 from ..core.api import ALL_FEATURES, Stratum
 from ..core.cache import IntermediateCache
 from ..core.fusion import PipelineBatch
-from ..core.runtime import ExecutionError, Runtime
+from ..core.runtime import ExecutionError, ExecutionPreempted, Runtime
 from .coalesce import SuperBatch, coalesce, cross_agent_dedup, reachable_sigs
+from .priority import Priority
 from .queue import AdmissionError, FairQueue, Job
 from .session import PipelineFuture, Session
 from .telemetry import ServiceTelemetry
@@ -60,6 +69,18 @@ class ServiceConfig:
     coalesce_window_s: float = 0.02
     coalesce_max_jobs: int = 16
     max_jobs_per_tenant_per_round: int = 2
+    # priority scheduling (docs/SCHEDULING.md)
+    priority_aware: bool = True          # False → priority-blind round-robin
+    priority_weights: Optional[dict] = None   # Priority → WFQ weight
+    aging_s: Optional[float] = 5.0       # starvation aging; None disables
+    preemption: bool = True              # cooperative wave-boundary yields
+    # liveness: every dispatch completes ≥1 wave before it may yield again,
+    # so even a generous cap cannot livelock a low-priority job — the cap
+    # only bounds resume overhead (re-optimize + salvage replay per yield)
+    max_preemptions_per_job: int = 8
+    # shared-cache cross-tenant arbitration
+    cache_arbitration: str = "quota"     # "quota" | "lru"
+    cache_tenant_quota_fraction: float = 0.5
     # concurrency
     n_executors: int = 2
 
@@ -76,6 +97,9 @@ class JobReport:
     per_backend: dict
     stratum: object              # the super-batch StratumReport-ish payload
     run: object = None           # super-batch RunReport (convenience alias)
+    priority: Priority = Priority.BATCH
+    preemptions: int = 0         # times this job's super-batch yielded
+    ops_salvaged: int = 0        # ops restored from preemption salvage
 
 
 class StratumService:
@@ -94,7 +118,9 @@ class StratumService:
             self.cache = IntermediateCache(
                 budget_bytes=int(config.memory_budget_bytes
                                  * config.cache_fraction),
-                spill_dir=config.spill_dir)
+                spill_dir=config.spill_dir,
+                arbitration=config.cache_arbitration,
+                tenant_quota_fraction=config.cache_tenant_quota_fraction)
         # the optimizer: compile-only use of the existing session object,
         # sharing the service cache (Stratum(cache=...) injection)
         self._optimizer = Stratum(
@@ -106,13 +132,24 @@ class StratumService:
             cache=self.cache)
         self.queue = FairQueue(
             max_queued_total=config.max_queued_total,
-            max_queued_per_tenant=config.max_queued_per_tenant)
-        self.telemetry = ServiceTelemetry()
+            max_queued_per_tenant=config.max_queued_per_tenant,
+            weights=config.priority_weights,
+            aging_s=config.aging_s,
+            priority_aware=config.priority_aware)
+        self.telemetry = ServiceTelemetry(cache=self.cache)
         self._job_ids = itertools.count()
         self._running = False
         self._dispatcher: Optional[threading.Thread] = None
         self._pool: Optional[ThreadPoolExecutor] = None
         self._slots = threading.Semaphore(config.n_executors)
+        # mirrors the semaphore so preempt checks can ask "is any executor
+        # idle?" without touching semaphore internals.  Unlocked READS are
+        # fine (a stale value delays/spares one yield by one poll); writes
+        # go through _adjust_free_slots — a bare `+=` is a non-atomic
+        # read-modify-write and concurrent finishes would drift the counter
+        # permanently, silently disabling preemption
+        self._free_slots = config.n_executors
+        self._free_slots_lock = threading.Lock()
         # global memory gate across concurrent super-batches
         self._mem_cond = threading.Condition()
         self._mem_inflight = 0
@@ -164,9 +201,11 @@ class StratumService:
     def session(self, tenant: str) -> Session:
         return Session(self, tenant)
 
-    def submit(self, tenant: str, batch: PipelineBatch) -> PipelineFuture:
+    def submit(self, tenant: str, batch: PipelineBatch,
+               priority: Priority = Priority.BATCH) -> PipelineFuture:
+        priority = Priority(priority)
         job_id = next(self._job_ids)
-        future = PipelineFuture(job_id, tenant)
+        future = PipelineFuture(job_id, tenant, priority)
 
         def _cancel(jid: int) -> bool:
             ok = self.queue.cancel(jid)
@@ -175,9 +214,10 @@ class StratumService:
             return ok
 
         future._cancel_hook = _cancel
-        job = Job(id=job_id, tenant=tenant, batch=batch, future=future)
+        job = Job(id=job_id, tenant=tenant, batch=batch, future=future,
+                  priority=priority)
         self.queue.push(job)               # may raise AdmissionError
-        self.telemetry.record_submit(tenant)
+        self.telemetry.record_submit(tenant, priority)
         return future
 
     # -- dispatch ----------------------------------------------------------
@@ -188,14 +228,18 @@ class StratumService:
             # executor pool's FIFO, decides ordering under load
             if not self._slots.acquire(timeout=0.1):
                 continue
+            self._adjust_free_slots(-1)
             jobs = self.queue.pop_round(
                 max_jobs=cfg.coalesce_max_jobs,
                 max_per_tenant=cfg.max_jobs_per_tenant_per_round,
                 timeout=0.1)
             if not jobs:
+                self._adjust_free_slots(+1)
                 self._slots.release()
                 continue
             # coalescing window: briefly gather more concurrent submissions
+            # from the SAME band — super-batches stay priority-homogeneous,
+            # so a cheap interactive probe is never welded to a bulk sweep
             deadline = time.perf_counter() + cfg.coalesce_window_s
             while len(jobs) < cfg.coalesce_max_jobs:
                 left = deadline - time.perf_counter()
@@ -204,16 +248,21 @@ class StratumService:
                 more = self.queue.pop_round(
                     max_jobs=cfg.coalesce_max_jobs - len(jobs),
                     max_per_tenant=cfg.max_jobs_per_tenant_per_round,
-                    timeout=left)
+                    timeout=left, band=jobs[0].band)
                 jobs.extend(more)
             with self._inflight_cond:
                 self._inflight_jobs += len(jobs)
             self._pool.submit(self._execute_guarded, jobs)
 
+    def _adjust_free_slots(self, delta: int) -> None:
+        with self._free_slots_lock:
+            self._free_slots += delta
+
     def _execute_guarded(self, jobs: list) -> None:
         try:
             self._execute_jobs(jobs, allow_retry=True, is_retry=False)
         finally:
+            self._adjust_free_slots(+1)
             self._slots.release()
             with self._inflight_cond:
                 self._inflight_jobs -= len(jobs)
@@ -239,6 +288,34 @@ class StratumService:
             job.future._set_exception(exc)
             self.telemetry.record_job_failed(job.tenant)
 
+    def _preempt_check_for(self, live: Sequence[Job], band: int):
+        """Install a wave-boundary yield hook — only for super-batches that
+        are not already top-band and have preemption budget left."""
+        cfg = self.config
+        if (not cfg.preemption or not cfg.priority_aware
+                or band <= int(Priority.INTERACTIVE)):
+            return None
+        if max(j.preemptions for j in live) >= cfg.max_preemptions_per_job:
+            return None     # yielded enough; now run to completion
+        # yield only when the urgent work cannot be placed on an idle
+        # executor anyway — otherwise preemption would just waste progress
+        return lambda: (self._free_slots <= 0
+                        and self.queue.has_work_above(band))
+
+    def _requeue_preempted(self, live: list, job_sigs: list,
+                           preempted: ExecutionPreempted) -> None:
+        for job, sigs in zip(live, job_sigs):
+            job.preemptions += 1
+            # each job carries exactly its own reachable completed
+            # intermediates; re-coalescing merges them back losslessly
+            job.salvage = {s: v for s, v in preempted.salvage.items()
+                           if s in sigs}
+            self.telemetry.record_preemption(job.tenant)
+        try:
+            self.queue.requeue(live)
+        except AdmissionError as e:     # service shutting down mid-yield
+            self._fail_jobs(live, e)
+
     def _execute_jobs(self, jobs: list, allow_retry: bool,
                       is_retry: bool = False) -> None:
         now = time.perf_counter()
@@ -252,7 +329,8 @@ class StratumService:
             if job.dispatch_wait_s is None:
                 job.dispatch_wait_s = now - job.submit_t
                 self.telemetry.record_dispatch(job.tenant,
-                                               job.dispatch_wait_s)
+                                               job.dispatch_wait_s,
+                                               job.priority)
 
         merged: SuperBatch = coalesce(live)
         try:
@@ -263,20 +341,44 @@ class StratumService:
             return
 
         # post-optimization per-job reachable sets: used for cross-agent
-        # dedup accounting, failure isolation and telemetry attribution
+        # dedup accounting, failure isolation, cache charge attribution and
+        # telemetry attribution
         job_sigs = [reachable_sigs(merged.job_sinks(sinks, j))
                     for j in range(len(live))]
         deduped, shared = cross_agent_dedup(job_sigs,
                                             [j.tenant for j in live])
-        if not is_retry:   # the retry re-runs jobs already accounted for
+        if not is_retry and not any(j.preemptions for j in live):
+            # neither a failure-isolation retry nor a post-preemption
+            # re-dispatch is a new super-batch for accounting purposes
             self.telemetry.record_super_batch(len(live), deduped, shared)
 
+        # cache charge attribution: an op shared by several tenants is
+        # charged to the first submitter in this round (deterministic);
+        # the others' reuse shows up as cross-tenant hits instead
+        sig_tenant: dict = {}
+        for job, sigs in zip(live, job_sigs):
+            for s in sigs:
+                sig_tenant.setdefault(s, job.tenant)
+
+        # salvage from a previous preemption of any of these jobs
+        preloaded: dict = {}
+        for job in live:
+            preloaded.update(job.salvage)
+
+        band = min(j.band for j in live)
         need = max(plan.est_peak_mem, 0)
         self._acquire_mem(need)
         try:
             rt = Runtime(cache=self.cache, cache_candidates=candidates,
-                         parallel="parallel" in self.config.enable)
+                         parallel="parallel" in self.config.enable,
+                         preloaded=preloaded,
+                         preempt_check=self._preempt_check_for(live, band),
+                         sig_tenant=sig_tenant)
             results, run = rt.execute(sinks, plan, sel)
+        except ExecutionPreempted as p:
+            self._release_mem(need)
+            self._requeue_preempted(live, job_sigs, p)
+            return
         except ExecutionError as e:
             self._release_mem(need)
             bad_sig = e.op.signature
@@ -305,10 +407,12 @@ class StratumService:
         for j, (job, job_results) in enumerate(zip(live, per_job)):
             hits = sum(1 for s in job_sigs[j]
                        if run.sig_source.get(s) == "cache")
+            salvaged = sum(1 for s in job_sigs[j]
+                           if run.sig_source.get(s) == "salvage")
             backends: dict = {}
             for s in job_sigs[j]:
                 src = run.sig_source.get(s)
-                if src and src != "cache":
+                if src and src not in ("cache", "salvage"):
                     backends[src] = backends.get(src, 0) + 1
             report = JobReport(
                 tenant=job.tenant, job_id=job.id,
@@ -316,7 +420,10 @@ class StratumService:
                 coalesced_with=len(live) - 1,
                 ops_shared_cross_agent=shared.get(job.tenant, 0),
                 cache_hits=hits, per_backend=backends,
-                stratum=rw, run=run)
+                stratum=rw, run=run,
+                priority=job.priority, preemptions=job.preemptions,
+                ops_salvaged=salvaged)
             self.telemetry.record_job_done(job.tenant, job_sigs[j],
                                            run.sig_source)
+            job.salvage = {}    # release pinned intermediates
             job.future._set_result(job_results, report)

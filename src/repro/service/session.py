@@ -8,6 +8,11 @@ and returns a :class:`PipelineFuture` that resolves to the same
 ``(results, report)`` shape ``Stratum.run_batch`` produces, so a synchronous
 agent can be ported by replacing ``run_batch(b)`` with
 ``submit(b).result()``.
+
+``submit`` also takes a :class:`~repro.service.priority.Priority`: a
+latency-sensitive probe the agent is blocked on goes in as ``INTERACTIVE``,
+bulk sweeps as ``BATCH`` (default) or ``SCAVENGER`` — see
+``docs/SCHEDULING.md`` for the scheduling semantics.
 """
 
 from __future__ import annotations
@@ -17,6 +22,7 @@ from concurrent.futures import CancelledError
 from typing import Any, Callable, Optional
 
 from ..core.fusion import PipelineBatch
+from .priority import Priority
 
 _PENDING = "pending"
 _RUNNING = "running"
@@ -27,9 +33,11 @@ _CANCELLED = "cancelled"
 class PipelineFuture:
     """Result handle for one submitted :class:`PipelineBatch`."""
 
-    def __init__(self, job_id: int, tenant: str):
+    def __init__(self, job_id: int, tenant: str,
+                 priority: Priority = Priority.BATCH):
         self.job_id = job_id
         self.tenant = tenant
+        self.priority = priority
         self._event = threading.Event()
         self._lock = threading.Lock()
         self._state = _PENDING
@@ -142,19 +150,21 @@ class Session:
         self._closed = False
 
     # -- non-blocking path (the point of the subsystem) --------------------
-    def submit(self, batch: PipelineBatch) -> PipelineFuture:
-        """Enqueue ``batch``; returns immediately.
+    def submit(self, batch: PipelineBatch,
+               priority: Priority = Priority.BATCH) -> PipelineFuture:
+        """Enqueue ``batch`` at ``priority``; returns immediately.
 
         Raises :class:`~repro.service.queue.AdmissionError` when admission
         control rejects the job (queue depth / tenant quota)."""
         if self._closed:
             raise RuntimeError(f"session {self.tenant!r} is closed")
-        return self._service.submit(self.tenant, batch)
+        return self._service.submit(self.tenant, batch, priority=priority)
 
     # -- drop-in synchronous compatibility with Stratum.run_batch ----------
     def run_batch(self, batch: PipelineBatch,
-                  timeout: Optional[float] = None):
-        return self.submit(batch).result(timeout)
+                  timeout: Optional[float] = None,
+                  priority: Priority = Priority.BATCH):
+        return self.submit(batch, priority=priority).result(timeout)
 
     @property
     def telemetry(self) -> dict:

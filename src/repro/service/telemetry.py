@@ -2,19 +2,27 @@
 
 The service multiplexes many agents over one runtime, so aggregate numbers
 (`RunReport`) are not attributable on their own.  This module keeps a
-thread-safe per-tenant ledger fed from three places:
+thread-safe per-tenant ledger fed from four places:
 
-* submission / dispatch (queue wait),
+* submission / dispatch (queue wait, split by priority class),
 * the coalescer (ops shared cross-agent),
+* the preemption path (cooperative yields per tenant),
 * post-run attribution: each job's post-optimization reachable signature
   set joined against ``RunReport.sig_source`` gives exact per-tenant cache
-  hits and backend mix even for merged super-batches.
+  hits, salvage restores and backend mix even for merged super-batches.
+
+When constructed with the shared :class:`IntermediateCache`, the global
+snapshot additionally surfaces the cache's cross-tenant arbitration state:
+bytes charged per tenant, per-tenant evictions, and cross-tenant hits
+(tenant A reusing an intermediate materialized and charged to tenant B).
 """
 
 from __future__ import annotations
 
 import threading
 from dataclasses import dataclass, field
+
+from .priority import Priority
 
 
 @dataclass
@@ -27,8 +35,12 @@ class TenantStats:
     queue_wait_max_s: float = 0.0
     ops_shared_cross_agent: int = 0
     cache_hits: int = 0
+    ops_salvaged: int = 0
+    preemptions: int = 0
     ops_attributed: int = 0
     per_backend: dict = field(default_factory=dict)
+    submitted_by_priority: dict = field(default_factory=dict)
+    queue_wait_by_priority: dict = field(default_factory=dict)
 
     def as_dict(self) -> dict:
         return {
@@ -40,32 +52,48 @@ class TenantStats:
             "queue_wait_max_s": round(self.queue_wait_max_s, 6),
             "ops_shared_cross_agent": self.ops_shared_cross_agent,
             "cache_hits": self.cache_hits,
+            "ops_salvaged": self.ops_salvaged,
+            "preemptions": self.preemptions,
             "ops_attributed": self.ops_attributed,
             "per_backend": dict(self.per_backend),
+            "submitted_by_priority": {k.name: v for k, v
+                                      in self.submitted_by_priority.items()},
+            "queue_wait_by_priority": {
+                k.name: round(v, 6)
+                for k, v in self.queue_wait_by_priority.items()},
         }
 
 
 class ServiceTelemetry:
-    def __init__(self) -> None:
+    def __init__(self, cache=None) -> None:
         self._lock = threading.Lock()
         self._tenants: dict[str, TenantStats] = {}
+        self._cache = cache            # shared IntermediateCache (optional)
         self.ops_deduped_cross_agent = 0   # global executions saved
         self.super_batches = 0
         self.jobs_coalesced = 0
+        self.preemptions = 0
 
     def _t(self, tenant: str) -> TenantStats:
         return self._tenants.setdefault(tenant, TenantStats())
 
     # -- recording hooks ---------------------------------------------------
-    def record_submit(self, tenant: str) -> None:
+    def record_submit(self, tenant: str,
+                      priority: Priority = Priority.BATCH) -> None:
         with self._lock:
-            self._t(tenant).jobs_submitted += 1
+            t = self._t(tenant)
+            t.jobs_submitted += 1
+            t.submitted_by_priority[priority] = \
+                t.submitted_by_priority.get(priority, 0) + 1
 
-    def record_dispatch(self, tenant: str, wait_s: float) -> None:
+    def record_dispatch(self, tenant: str, wait_s: float,
+                        priority: Priority = Priority.BATCH) -> None:
         with self._lock:
             t = self._t(tenant)
             t.queue_wait_s += wait_s
             t.queue_wait_max_s = max(t.queue_wait_max_s, wait_s)
+            t.queue_wait_by_priority[priority] = \
+                t.queue_wait_by_priority.get(priority, 0.0) + wait_s
 
     def record_super_batch(self, n_jobs: int, deduped: int,
                            shared_per_tenant: dict) -> None:
@@ -75,6 +103,12 @@ class ServiceTelemetry:
             self.ops_deduped_cross_agent += deduped
             for tenant, n in shared_per_tenant.items():
                 self._t(tenant).ops_shared_cross_agent += n
+
+    def record_preemption(self, tenant: str) -> None:
+        """One job of ``tenant`` yielded at a wave boundary and requeued."""
+        with self._lock:
+            self.preemptions += 1
+            self._t(tenant).preemptions += 1
 
     def record_job_done(self, tenant: str, job_sigs: set,
                         sig_source: dict) -> None:
@@ -89,6 +123,8 @@ class ServiceTelemetry:
                 t.ops_attributed += 1
                 if src == "cache":
                     t.cache_hits += 1
+                elif src == "salvage":
+                    t.ops_salvaged += 1
                 else:
                     t.per_backend[src] = t.per_backend.get(src, 0) + 1
 
@@ -108,19 +144,34 @@ class ServiceTelemetry:
 
     def global_snapshot(self) -> dict:
         with self._lock:
-            return {
+            out = {
                 "super_batches": self.super_batches,
                 "jobs_coalesced": self.jobs_coalesced,
                 "ops_deduped_cross_agent": self.ops_deduped_cross_agent,
+                "preemptions": self.preemptions,
             }
+        if self._cache is not None:
+            arb = self._cache.arbitration_snapshot()   # copied under lock
+            out["cache_cross_tenant_hits"] = arb["cross_tenant_hits"]
+            out["cache_bytes_by_tenant"] = {
+                str(k): v for k, v in arb["bytes_by_tenant"].items()}
+            out["cache_evictions_by_tenant"] = {
+                str(k): v for k, v in arb["evictions_by_tenant"].items()}
+        return out
 
     def report(self) -> str:
         g = self.global_snapshot()
         lines = [
             f"super-batches: {g['super_batches']} "
             f"(jobs coalesced: {g['jobs_coalesced']}, "
-            f"cross-agent ops deduped: {g['ops_deduped_cross_agent']})"
+            f"cross-agent ops deduped: {g['ops_deduped_cross_agent']}, "
+            f"preemptions: {g['preemptions']})"
         ]
+        if "cache_cross_tenant_hits" in g:
+            lines.append(
+                f"shared cache: cross-tenant hits="
+                f"{g['cache_cross_tenant_hits']} "
+                f"bytes_by_tenant={g['cache_bytes_by_tenant']}")
         for tenant, s in sorted(self.snapshot().items()):
             lines.append(
                 f"  {tenant}: jobs={s['jobs_completed']}/"
@@ -128,5 +179,7 @@ class ServiceTelemetry:
                 f"wait={s['queue_wait_s']:.3f}s "
                 f"shared_ops={s['ops_shared_cross_agent']} "
                 f"cache_hits={s['cache_hits']} "
+                f"salvaged={s['ops_salvaged']} "
+                f"preempted={s['preemptions']} "
                 f"backends={s['per_backend']}")
         return "\n".join(lines)

@@ -52,9 +52,6 @@ def test_nested_scan_multiplicity():
     assert f == 12 * 2 * 128 ** 3
 
 
-@pytest.mark.skipif(
-    not (hasattr(jax, "shard_map") and hasattr(jax.sharding, "AxisType")),
-    reason="installed jax lacks shard_map/AxisType (make_debug_mesh needs both)")
 def test_collective_trip_weighting():
     """A psum inside a scan must count once per iteration."""
     import os
@@ -70,9 +67,10 @@ sys_path = %r
 import sys; sys.path.insert(0, sys_path)
 from repro.launch.hlo_cost import analyze
 from repro.launch.mesh import make_debug_mesh
+from repro.distributed.compat import shard_map
 mesh = make_debug_mesh((1, 4), ("data", "model"))
 
-@partial(jax.shard_map, mesh=mesh, in_specs=P(None, "model"),
+@partial(shard_map, mesh=mesh, in_specs=P(None, "model"),
          out_specs=P(None, "model"), check_vma=False)
 def inner(x):
     def body(c, _):

@@ -1,5 +1,9 @@
 """Distributed correctness tests — run in subprocesses with a forced
-8-device host platform (the main test process must keep 1 device)."""
+8-device host platform (the main test process must keep 1 device).
+
+``repro.distributed.compat`` bridges the jax version gap (shard_map /
+make_mesh spellings), so these run on both modern jax and the 0.4.37
+floor."""
 
 import json
 import os
@@ -7,15 +11,7 @@ import subprocess
 import sys
 import textwrap
 
-import jax
 import pytest
-
-# every test here shells out to code built on jax.shard_map /
-# jax.sharding.AxisType (via make_debug_mesh); older jax lacks both
-pytestmark = pytest.mark.skipif(
-    not (hasattr(jax, "shard_map") and hasattr(jax.sharding, "AxisType")),
-    reason="installed jax lacks shard_map/AxisType (make_debug_mesh needs "
-           "both); failing since seed — see ROADMAP open items")
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
@@ -153,12 +149,14 @@ def test_compressed_psum_matches_psum():
     rng = np.random.default_rng(3)
     g = jnp.asarray(rng.normal(size=(8, 512)), jnp.float32)
 
-    @partial(jax.shard_map, mesh=mesh, in_specs=P(("data", "model")),
+    from repro.distributed.compat import shard_map
+
+    @partial(shard_map, mesh=mesh, in_specs=P(("data", "model")),
              out_specs=P(("data", "model")), check_vma=False)
     def exact(g):
         return jax.lax.psum(g, ("data", "model")) / 8 + 0 * g
 
-    @partial(jax.shard_map, mesh=mesh, in_specs=P(("data", "model")),
+    @partial(shard_map, mesh=mesh, in_specs=P(("data", "model")),
              out_specs=P(("data", "model")), check_vma=False)
     def compressed(g):
         return compressed_psum(g, ("data", "model")) / 8 + 0 * g
