@@ -1,0 +1,90 @@
+"""Bench regression gate (run by the CI ``bench`` job).
+
+Compares a freshly produced smoke benchmark artifact against the
+committed ``BENCH_service.json`` baseline and fails (exit 1) when an
+agent-scaling *speedup* regressed by more than ``--max-regression``
+(default 20%).  Speedups are dimensionless ratios measured within one
+machine and one run, so they transfer across runner generations far
+better than absolute latencies; the tolerance absorbs normal CI noise.
+
+Gated metrics (checked when present in the baseline):
+
+* ``service_smoke.speedup`` — N concurrent agents through one service vs
+  N isolated sequential sessions;
+* ``sharded_smoke.speedup`` — aggregate fabric throughput at K shards vs
+  1 shard.
+
+A metric present in the baseline but missing from the fresh artifact is a
+failure (the bench crashed or was skipped); a metric missing from the
+baseline is skipped (lets a PR introduce the baseline it is adding).
+
+    python -m benchmarks.check_regression \
+        --baseline BENCH_service.json --fresh /tmp/bench_smoke.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+GATES = (
+    ("service_smoke", "speedup"),
+    ("sharded_smoke", "speedup"),
+)
+
+
+def check(baseline: dict, fresh: dict, max_regression: float) -> list:
+    """Returns a list of failure strings (empty = gate passes)."""
+    failures = []
+    gated = 0
+    for section, metric in GATES:
+        base = baseline.get(section, {}).get(metric)
+        if base is None:
+            continue                      # no committed baseline yet
+        gated += 1
+        new = fresh.get(section, {}).get(metric)
+        if new is None:
+            failures.append(f"{section}.{metric}: missing from fresh "
+                            f"artifact (bench crashed or skipped?)")
+            continue
+        floor = base * (1.0 - max_regression)
+        if new < floor:
+            failures.append(
+                f"{section}.{metric}: {new:.2f} < allowed floor "
+                f"{floor:.2f} (baseline {base:.2f}, "
+                f"max regression {max_regression:.0%})")
+    if not gated:
+        failures.append("no gated metrics found in baseline — nothing "
+                        "was checked; commit a *_smoke baseline first")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_service.json")
+    ap.add_argument("--fresh", required=True)
+    ap.add_argument("--max-regression", type=float, default=0.20,
+                    help="allowed fractional speedup loss (default 0.20)")
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    failures = check(baseline, fresh, args.max_regression)
+    for section, metric in GATES:
+        base = baseline.get(section, {}).get(metric)
+        new = fresh.get(section, {}).get(metric)
+        if base is not None and new is not None:
+            print(f"{section}.{metric}: baseline {base:.2f} -> "
+                  f"fresh {new:.2f}")
+    if failures:
+        for msg in failures:
+            print(f"REGRESSION {msg}")
+        return 1
+    print("bench regression gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -14,8 +14,16 @@ scheduler (WFQ bands + cooperative preemption) and once priority-blind
 (plain round-robin).  Interactive p50/p99 latency for both modes is merged
 into ``BENCH_service.json`` under ``"mixed_priority"``.
 
+``--shards K`` measures the sharded fabric: agent cohorts over distinct
+datasets submit open-loop sweeps through ``ShardedStratum`` at 1 shard vs
+K shards; consistent-hash placement keeps each shard's intermediate cache
+and cross-agent CSE hot for its cohorts, where a single shard LRU-thrashes
+across all of them.  Aggregate throughput, signature-locality hit rate and
+score agreement land in ``BENCH_service.json`` under ``"sharded"``.
+
     PYTHONPATH=src python benchmarks/e2e_agentic.py --agents 4
     PYTHONPATH=src python benchmarks/e2e_agentic.py --mixed-priority
+    PYTHONPATH=src python benchmarks/e2e_agentic.py --shards 4 --agents 16
 """
 
 from __future__ import annotations
@@ -223,6 +231,190 @@ def write_service_json(result: dict, path: str = "BENCH_service.json",
 
 
 # ---------------------------------------------------------------------------
+# sharded-fabric scaling: N agents over 1 vs K consistent-hash shards
+# ---------------------------------------------------------------------------
+
+def _cohort_job(cohort_seed: int, n_rows: int, tail_idx: int
+                ) -> PipelineBatch:
+    """One agent-round job: an expensive preprocessing *prefix* shared by
+    the whole cohort (read → TableVectorizer fit over the cohort's
+    dataset — real encoder compute, not just IO) and a cheap
+    per-(agent, round) unique *tail* (a metric on one vectorized column)
+    — the regime where shard-local cache/CSE locality decides
+    throughput."""
+    from repro.data.tabular import feature_target_indices, schema_dict
+    feats, tgt = feature_target_indices()
+    x = T.read("uk_housing", n_rows, seed=cohort_seed)
+    Xv = T.table_vectorizer(T.project(x, feats), schema_dict(), feats)
+    y = T.project(x, [tgt])
+    col = tail_idx % len(feats)
+    kind = "mae" if (tail_idx // len(feats)) % 2 else "rmse"
+    sink = T.metric(T.project(Xv, [col]), y, kind=kind)
+    return PipelineBatch([sink], [f"tail{tail_idx}"])
+
+
+def _balanced_cohort_keys(n_cohorts: int, n_shards: int, vnodes: int = 64
+                          ) -> list:
+    """Affinity keys placing ``n_cohorts`` work groups evenly on an
+    ``n_shards`` ring.  Placement is deterministic (blake2b ring), so the
+    scaling measurement is not at the mercy of hash luck on 4 draws; with
+    many real datasets the ring balances statistically, which is what this
+    emulates."""
+    from repro.service.fabric import ConsistentHashRing
+    ring = ConsistentHashRing([f"shard-{i}" for i in range(n_shards)],
+                              vnodes=vnodes)
+    keys, used = [], set()
+    i = 0
+    while len(keys) < n_cohorts and i < 100_000:
+        key = f"cohort-{i}"
+        shard = ring.route(key)
+        if shard not in used or len(used) == n_shards:
+            if shard in used:           # ring full: start a second lap
+                used.clear()
+            used.add(shard)
+            keys.append(key)
+        i += 1
+    return keys
+
+
+def _run_fabric_mode(n_shards: int, n_agents: int, n_cohorts: int,
+                     rounds: int, n_rows: int, jit_dir: str,
+                     ring_shards_for_keys: int) -> dict:
+    from repro.service import ServiceConfig
+    from repro.service.fabric import ShardedStratum
+    # per-shard cache sized to hold ~1.3 cohort working sets (one host's
+    # RAM holds its own cohort with headroom): a shard serving its cohort
+    # stays hot, one server serving every cohort LRU-thrashes — the
+    # single-server ceiling the fabric removes.  A looser budget lets the
+    # single server keep 2 cohorts resident and the measurement bimodal.
+    # ~900 B/row ≈ one cohort's cached TableVectorizer intermediates
+    # (measured at 30k rows; scales linearly with rows)
+    per_cohort = int(n_rows * 900)
+    mem_budget = 256 << 20
+    cfg = ServiceConfig(
+        memory_budget_bytes=mem_budget,
+        cache_fraction=min(0.5, 1.3 * per_cohort / mem_budget),
+        jit_cache_dir=jit_dir,
+        coalesce_window_s=0.005,
+        coalesce_max_jobs=2,
+        max_jobs_per_tenant_per_round=1,
+        # one executor per shard: per-shard resources are identical across
+        # modes (the fabric's aggregate grows with shards, which is the
+        # claim under test), and the single server's eviction pattern is
+        # deterministic — with 2 executors, concurrently running
+        # super-batches race each other's cache insertions and the
+        # 1-shard number becomes a coin flip between thrash and reuse
+        n_executors=1)
+    keys = _balanced_cohort_keys(n_cohorts, ring_shards_for_keys)
+    fab = ShardedStratum(n_shards=n_shards, config=cfg)
+    sessions = [fab.session(f"agent-{i}") for i in range(n_agents)]
+    scores = [[None] * rounds for _ in range(n_agents)]
+
+    # open-loop: every agent's whole sweep is submitted up front, round by
+    # round in agent order.  Adjacent submissions belong to *different*
+    # cohorts (agent i → cohort i % n_cohorts), so a single shard sees a
+    # strict cross-cohort interleave — the deterministic worst case for
+    # its LRU cache — while each fabric shard's queue holds only its own
+    # cohort's jobs.  (A closed loop measures the same effect but lets
+    # same-cohort agents phase-lock into bursts, making the single-shard
+    # number a coin flip.)
+    t0 = time.perf_counter()
+    futures = []
+    for r in range(rounds):
+        for i in range(n_agents):
+            cohort = i % n_cohorts
+            rank = i // n_cohorts           # position within the cohort
+            tail = rank * rounds + r        # unique within the cohort
+            futures.append((i, r, tail, sessions[i].submit(
+                _cohort_job(cohort, n_rows, tail),
+                affinity=keys[cohort])))
+    for i, r, tail, fut in futures:
+        res, _ = fut.result(timeout=600)
+        scores[i][r] = float(np.asarray(res[f"tail{tail}"]))
+    makespan = time.perf_counter() - t0
+    g = fab.telemetry.global_snapshot()
+    fab.stop()
+    total_jobs = n_agents * rounds
+    return {
+        "shards": n_shards,
+        "makespan_s": makespan,
+        "throughput_jobs_per_s": total_jobs / makespan,
+        "locality_hit_rate": g["signature_locality_hit_rate"],
+        "super_batches": g["super_batches"],
+        "envelopes_per_shard": {k: v["envelopes_routed"]
+                                for k, v in g["per_shard"].items()},
+        "scores": scores,
+    }
+
+
+def run_sharded(n_agents: int = 16, rounds: int = 3, n_rows: int = 30_000,
+                n_cohorts: int = 4, shard_counts=(1, 4),
+                warmup: bool = True) -> dict:
+    """Aggregate throughput of the sharded fabric vs one service shard.
+
+    ``n_agents`` agents in ``n_cohorts`` cohorts (one dataset each) submit
+    open-loop multi-round sweeps.  Cohorts are pinned to ring
+    positions via affinity keys, so with K shards each shard serves ~K-th
+    of the cohorts and its intermediate cache stays hot; one shard serving
+    every cohort thrashes its cache — the structural ceiling the ROADMAP's
+    "shard the service across hosts" item targets.  Scores must be
+    identical across shard counts (same deterministic pipelines)."""
+    from repro.data.tabular import ensure_files
+    for c in range(n_cohorts):
+        ensure_files("uk_housing", n_rows, c)
+    jit_dir = "/tmp/repro_jit_cache"
+    max_shards = max(shard_counts)
+
+    if warmup:   # compile each op shape once so no mode pays XLA compile
+        s = Stratum(memory_budget_bytes=256 << 20, jit_cache_dir=jit_dir)
+        s.run_batch(_cohort_job(0, n_rows, 0))
+
+    modes = {}
+    for n_shards in shard_counts:
+        modes[str(n_shards)] = _run_fabric_mode(
+            n_shards, n_agents, n_cohorts, rounds, n_rows, jit_dir,
+            ring_shards_for_keys=max_shards)
+
+    lo = modes[str(min(shard_counts))]
+    hi = modes[str(max(shard_counts))]
+    scores_identical = all(
+        abs(a - b) <= 1e-9 * max(abs(a), 1.0)
+        for ra, rb in zip(lo["scores"], hi["scores"])
+        for a, b in zip(ra, rb))
+    out = {
+        "agents": n_agents,
+        "rounds": rounds,
+        "rows": n_rows,
+        "cohorts": n_cohorts,
+        "modes": {k: {kk: vv for kk, vv in v.items() if kk != "scores"}
+                  for k, v in modes.items()},
+        "speedup": hi["throughput_jobs_per_s"] / lo["throughput_jobs_per_s"],
+        "scores_identical": scores_identical,
+    }
+    return out
+
+
+def sharded_rows(smoke: bool = False,
+                 out: str = "BENCH_service.json") -> list:
+    kw = dict(n_agents=16, rounds=3, n_rows=12_000) if smoke else {}
+    r = run_sharded(**kw)
+    key = "sharded_smoke" if smoke else "sharded"
+    write_service_json({key: r}, out, merge=True)
+    lo, hi = (r["modes"][str(k)] for k in (min(map(int, r["modes"])),
+                                           max(map(int, r["modes"]))))
+    return [
+        (f"{key}_1shard_makespan", lo["makespan_s"] * 1e6,
+         f"{lo['throughput_jobs_per_s']:.2f}_jobs_per_s"),
+        (f"{key}_{hi['shards']}shard_makespan", hi["makespan_s"] * 1e6,
+         f"{hi['throughput_jobs_per_s']:.2f}_jobs_per_s "
+         f"(speedup={r['speedup']:.1f}x)"),
+        (f"{key}_locality", hi["locality_hit_rate"] * 1e6, "hit_rate_x1e-6"),
+        (f"{key}_scores_identical", float(r["scores_identical"]),
+         "1=identical"),
+    ]
+
+
+# ---------------------------------------------------------------------------
 # mixed-priority scheduling benchmark: interactive probes under batch load
 # ---------------------------------------------------------------------------
 
@@ -390,19 +582,25 @@ def mixed_priority_rows(**kw) -> list:
     ]
 
 
-def service_rows(n_agents: int = 4, n_rows: int = 20_000) -> list:
+def service_rows(n_agents: int = 4, n_rows: int = 20_000,
+                 smoke: bool = False,
+                 out: str = "BENCH_service.json") -> list:
     r = run_service(n_agents=n_agents, n_rows=n_rows)
-    write_service_json(r, merge=True)
+    prefix = "service_smoke" if smoke else "service"
+    if smoke:      # CI-sized datapoint, gated by check_regression.py
+        write_service_json({"service_smoke": r}, out, merge=True)
+    else:
+        write_service_json(r, out, merge=True)
     return [
-        ("service_sequential", r["sequential_s"] * 1e6,
+        (f"{prefix}_sequential", r["sequential_s"] * 1e6,
          f"{r['agents']}_isolated_sessions"),
-        ("service_concurrent", r["service_s"] * 1e6,
+        (f"{prefix}_concurrent", r["service_s"] * 1e6,
          f"speedup={r['speedup']:.1f}x"),
-        ("service_deduped_ops", float(r["ops_deduped_cross_agent"]),
+        (f"{prefix}_deduped_ops", float(r["ops_deduped_cross_agent"]),
          "cross_agent"),
-        ("service_cache_hits", float(r["shared_cache_hits"]),
+        (f"{prefix}_cache_hits", float(r["shared_cache_hits"]),
          "shared_cache"),
-        ("service_score_agreement", r["score_rel_diff"] * 1e6,
+        (f"{prefix}_score_agreement", r["score_rel_diff"] * 1e6,
          "rel_diff_x1e-6"),
     ]
 
@@ -410,17 +608,40 @@ def service_rows(n_agents: int = 4, n_rows: int = 20_000) -> list:
 def main() -> None:
     import argparse
     ap = argparse.ArgumentParser()
-    ap.add_argument("--agents", type=int, default=4)
-    ap.add_argument("--rows", type=int, default=20_000)
+    # None = "not passed": each mode picks its own default (service 4
+    # agents / 20k rows, mixed-priority 8k rows, sharded 16 agents / 30k
+    # rows — the parameters the committed BENCH_service.json entries and
+    # the docs' numbers were measured at)
+    ap.add_argument("--agents", type=int, default=None)
+    ap.add_argument("--rows", type=int, default=None)
     ap.add_argument("--cv", type=int, default=3)
     ap.add_argument("--out", default="BENCH_service.json")
     ap.add_argument("--mixed-priority", action="store_true",
                     help="interactive latency under batch load: priority-"
                          "aware WFQ+preemption vs priority-blind")
+    ap.add_argument("--shards", type=int, default=0, metavar="N",
+                    help="sharded-fabric scaling: compare 1 shard vs N "
+                         "shards at --agents agents (default 16)")
+    ap.add_argument("--rounds", type=int, default=3,
+                    help="sweep rounds per agent, submitted open-loop "
+                         "(--shards mode)")
     args = ap.parse_args()
+    if args.shards:
+        r = run_sharded(n_agents=args.agents or 16, rounds=args.rounds,
+                        n_rows=args.rows or 30_000,
+                        shard_counts=(1, args.shards))
+        write_service_json({"sharded": r}, args.out, merge=True)
+        for k in sorted(r["modes"], key=int):
+            m = r["modes"][k]
+            print(f"{k} shard(s): makespan {m['makespan_s']:.2f}s  "
+                  f"{m['throughput_jobs_per_s']:.2f} jobs/s  "
+                  f"locality={m['locality_hit_rate']:.2f}")
+        print(f"aggregate throughput speedup: {r['speedup']:.1f}x  "
+              f"scores identical: {r['scores_identical']}")
+        print(f"wrote {args.out}")
+        return
     if args.mixed_priority:
-        r = run_mixed_priority(n_rows=args.rows if args.rows != 20_000
-                               else 8000, cv_k=args.cv)
+        r = run_mixed_priority(n_rows=args.rows or 8000, cv_k=args.cv)
         write_service_json({"mixed_priority": r}, args.out, merge=True)
         a, b = r["priority_aware"], r["priority_blind"]
         print(f"interactive p50: aware {a['interactive_p50_s'] * 1e3:.0f}ms"
@@ -436,10 +657,12 @@ def main() -> None:
               f"{r['scores_identical']}")
         print(f"wrote {args.out}")
         return
-    r = run_service(n_agents=args.agents, n_rows=args.rows, cv_k=args.cv)
+    n_agents = args.agents or 4
+    r = run_service(n_agents=n_agents, n_rows=args.rows or 20_000,
+                    cv_k=args.cv)
     write_service_json(r, args.out, merge=True)
-    print(f"{args.agents} sequential sessions: {r['sequential_s']:.2f}s")
-    print(f"{args.agents} agents via service:  {r['service_s']:.2f}s "
+    print(f"{n_agents} sequential sessions: {r['sequential_s']:.2f}s")
+    print(f"{n_agents} agents via service:  {r['service_s']:.2f}s "
           f"({r['speedup']:.1f}x)")
     print(f"cross-agent ops deduped: {r['ops_deduped_cross_agent']}  "
           f"shared-cache hits: {r['shared_cache_hits']}")

@@ -13,8 +13,22 @@ Sections:
   * priority     — interactive p50/p99 latency under batch load: priority-
                    aware WFQ + preemption vs priority-blind round-robin
                    (merged into BENCH_service.json)
+  * sharded      — aggregate throughput of the consistent-hash sharded
+                   fabric (1 shard vs 4) at 16 agents submitting
+                   open-loop sweeps (merged into BENCH_service.json)
 
-``python -m benchmarks.run [--sections a,b,...] [--rows N] [--agents N]``
+``--smoke`` runs CI-sized variants of the ``service`` and ``sharded``
+sections (smaller rows / agents / rounds) and records them under
+``*_smoke`` keys, which ``benchmarks/check_regression.py`` gates against
+the committed baseline; the other sections ignore the flag.
+
+Exit code: nonzero iff any requested section failed.  Failures include a
+section raising ``SystemExit`` mid-run (even ``SystemExit(0)`` — a section
+must not be able to vouch for sections that never ran), so the CI bench
+job can trust a zero exit.
+
+``python -m benchmarks.run [--sections a,b,...] [--rows N] [--agents N]
+                           [--smoke] [--out BENCH_service.json]``
 """
 
 from __future__ import annotations
@@ -24,7 +38,71 @@ import sys
 import traceback
 
 
-def main() -> None:
+def _characterize(args):
+    from . import characterize as mod
+    return mod.rows()
+
+
+def _micro(args):
+    from . import micro as mod
+    return mod.rows()
+
+
+def _ablation(args):
+    from .ablation import run as run_ablation
+    return [(f"ablation_{label}", dt * 1e6, f"speedup={speedup:.2f}x")
+            for label, dt, speedup, _ in run_ablation(n_rows=args.rows)]
+
+
+def _e2e(args):
+    from .e2e_agentic import run as run_e2e
+    r = run_e2e(n_rows=args.rows)
+    return [("e2e_base", r["base_s"] * 1e6, ""),
+            ("e2e_base_par", r.get("base_par_s", 0) * 1e6,
+             f"speedup={r.get('speedup_vs_base_par', 0):.1f}x"),
+            ("e2e_stratum", r["stratum_s"] * 1e6,
+             f"speedup={r['speedup_vs_base']:.1f}x (paper: 16.6x)"),
+            ("e2e_score_agreement", r["score_rel_diff"] * 1e6,
+             "rel_diff_x1e-6")]
+
+
+def _roofline(args):
+    from . import roofline as mod
+    return mod.rows()
+
+
+def _service(args):
+    from .e2e_agentic import service_rows
+    if args.smoke:
+        return service_rows(n_agents=2, n_rows=3000, smoke=True,
+                            out=args.out)
+    return service_rows(n_agents=args.agents, n_rows=args.rows,
+                        out=args.out)
+
+
+def _priority(args):
+    from .e2e_agentic import mixed_priority_rows
+    return mixed_priority_rows()
+
+
+def _sharded(args):
+    from .e2e_agentic import sharded_rows
+    return sharded_rows(smoke=args.smoke, out=args.out)
+
+
+SECTIONS = {
+    "characterize": _characterize,
+    "micro": _micro,
+    "ablation": _ablation,
+    "e2e": _e2e,
+    "roofline": _roofline,
+    "service": _service,
+    "priority": _priority,
+    "sharded": _sharded,
+}
+
+
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--sections",
                     default="characterize,micro,ablation,e2e,roofline")
@@ -32,56 +110,31 @@ def main() -> None:
                     help="dataset rows for the agentic workload")
     ap.add_argument("--agents", type=int, default=4,
                     help="concurrent agents for the service section")
-    args = ap.parse_args()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized section variants, recorded under "
+                         "*_smoke keys for the regression gate")
+    ap.add_argument("--out", default="BENCH_service.json",
+                    help="JSON artifact for service/sharded sections")
+    args = ap.parse_args(argv)
     sections = args.sections.split(",")
 
     print("name,us_per_call,derived")
     failures = 0
     for section in sections:
         try:
-            if section == "characterize":
-                from . import characterize as mod
-                rows = mod.rows()
-            elif section == "micro":
-                from . import micro as mod
-                rows = mod.rows()
-            elif section == "ablation":
-                from .ablation import run as run_ablation
-                rows = [(f"ablation_{label}", dt * 1e6,
-                         f"speedup={speedup:.2f}x")
-                        for label, dt, speedup, _ in run_ablation(
-                            n_rows=args.rows)]
-            elif section == "e2e":
-                from .e2e_agentic import run as run_e2e
-                r = run_e2e(n_rows=args.rows)
-                rows = [("e2e_base", r["base_s"] * 1e6, ""),
-                        ("e2e_base_par", r.get("base_par_s", 0) * 1e6,
-                         f"speedup={r.get('speedup_vs_base_par', 0):.1f}x"),
-                        ("e2e_stratum", r["stratum_s"] * 1e6,
-                         f"speedup={r['speedup_vs_base']:.1f}x"
-                         f" (paper: 16.6x)"),
-                        ("e2e_score_agreement", r["score_rel_diff"] * 1e6,
-                         "rel_diff_x1e-6")]
-            elif section == "roofline":
-                from . import roofline as mod
-                rows = mod.rows()
-            elif section == "service":
-                from .e2e_agentic import service_rows
-                rows = service_rows(n_agents=args.agents, n_rows=args.rows)
-            elif section == "priority":
-                from .e2e_agentic import mixed_priority_rows
-                rows = mixed_priority_rows()
-            else:
-                raise KeyError(section)
-            for name, us, derived in rows:
+            fn = SECTIONS[section]          # KeyError → unknown section
+            for name, us, derived in fn(args):
                 print(f"{name},{us:.1f},{derived}")
             sys.stdout.flush()
-        except Exception:
+        except (Exception, SystemExit):
+            # SystemExit included deliberately: a section calling
+            # sys.exit(0) mid-run must register as a failure, not let the
+            # harness report success for sections that never executed
             failures += 1
             print(f"{section},ERROR,{traceback.format_exc(limit=1)!r}")
-    if failures:
-        raise SystemExit(1)
+            sys.stdout.flush()
+    return 1 if failures else 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

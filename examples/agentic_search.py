@@ -12,10 +12,14 @@ Two modes:
   run :class:`AsyncAIDESearch`, which keeps drafting the next tree nodes
   while earlier batches are still executing.  Concurrent submissions are
   coalesced, cross-agent duplicates execute once, and all agents share one
-  intermediate cache.
+  intermediate cache.  Add ``--shards K`` to run the agents against the
+  sharded fabric instead (``ShardedStratum``): submissions cross the
+  serializable envelope boundary and each search tree is pinned to one
+  consistent-hash shard via ``shard_affinity``.
 
     PYTHONPATH=src python examples/agentic_search.py [--rows 20000]
     PYTHONPATH=src python examples/agentic_search.py --service --agents 4
+    PYTHONPATH=src python examples/agentic_search.py --service --shards 2
 """
 
 import argparse
@@ -27,7 +31,7 @@ import numpy as np
 from repro.agents import AIDEAgent, AsyncAIDESearch, paper_workload_batches
 from repro.agents.aide import second_iteration_batch
 from repro.core import Stratum
-from repro.service import StratumService
+from repro.service import ShardedStratum, StratumService
 
 
 def run_sync(args) -> None:
@@ -61,14 +65,21 @@ def run_sync(args) -> None:
 
 def run_service(args) -> None:
     t0 = time.time()
-    with StratumService(memory_budget_bytes=4 << 30,
-                        coalesce_window_s=0.05) as svc:
+    if args.shards:
+        svc = ShardedStratum(n_shards=args.shards,
+                             memory_budget_bytes=4 << 30,
+                             coalesce_window_s=0.05)
+    else:
+        svc = StratumService(memory_budget_bytes=4 << 30,
+                             coalesce_window_s=0.05)
+    with svc:
         bests = [None] * args.agents
 
         def agent_main(i: int) -> None:
             agent = AIDEAgent(n_rows=args.rows, cv_k=args.cv, seed=i)
             search = AsyncAIDESearch(svc.session(f"agent-{i}"), agent,
-                                     batch_size=4, max_inflight=2)
+                                     batch_size=4, max_inflight=2,
+                                     shard_affinity=bool(args.shards))
             bests[i] = search.run(n_rounds=args.rounds)
 
         threads = [threading.Thread(target=agent_main, args=(i,))
@@ -97,6 +108,9 @@ def main():
     ap.add_argument("--agents", type=int, default=4)
     ap.add_argument("--rounds", type=int, default=3,
                     help="AIDE search rounds per agent (service mode)")
+    ap.add_argument("--shards", type=int, default=0,
+                    help="service mode: run agents against a ShardedStratum"
+                         " fabric with this many shards")
     args = ap.parse_args()
     if args.service:
         run_service(args)

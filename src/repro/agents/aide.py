@@ -305,11 +305,20 @@ class AsyncAIDESearch:
     *refinements* of the current best node — the work the agent's search
     frontier is actually blocked on — go in at ``refine_priority`` (default
     INTERACTIVE).  Sessions without priority support still work unchanged.
+
+    Against a sharded fabric (:class:`repro.service.fabric.ShardedStratum`),
+    ``shard_affinity=True`` tags every submission of this search with one
+    stable affinity key, pinning the whole search tree to a single shard:
+    successive rounds mutate the same pipeline prefix, so the shard that
+    cached round *k*'s intermediates is exactly where round *k+1* wants to
+    run.  Sessions whose ``submit`` lacks an ``affinity`` parameter (plain
+    services, bare ``Stratum`` adapters) ignore the flag.
     """
 
     def __init__(self, session, agent: AIDEAgent, batch_size: int = 4,
                  max_inflight: int = 2,
-                 draft_priority=None, refine_priority=None):
+                 draft_priority=None, refine_priority=None,
+                 shard_affinity: bool = False):
         if max_inflight < 1:
             raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
         from ..service.priority import Priority
@@ -320,15 +329,22 @@ class AsyncAIDESearch:
         # capability probe up front — catching TypeError around submit()
         # itself would mask real errors and could double-enqueue a batch
         self._supports_priority = False
+        self._supports_affinity = False
         try:
             import inspect
             params = inspect.signature(session.submit).parameters
-            self._supports_priority = (
-                "priority" in params
-                or any(p.kind is inspect.Parameter.VAR_KEYWORD
-                       for p in params.values()))
+            var_kw = any(p.kind is inspect.Parameter.VAR_KEYWORD
+                         for p in params.values())
+            self._supports_priority = "priority" in params or var_kw
+            self._supports_affinity = "affinity" in params or var_kw
         except (AttributeError, TypeError, ValueError):
             pass
+        self._affinity = None
+        if shard_affinity and self._supports_affinity:
+            # one stable key per search (NOT drawn from agent.rng — that
+            # would perturb the deterministic draft sequence): every round
+            # of this tree lands on the shard holding its cached prefix
+            self._affinity = f"aide-search-{id(self):x}"
         self.draft_priority = (Priority.BATCH if draft_priority is None
                                else draft_priority)
         self.refine_priority = (Priority.INTERACTIVE
@@ -344,10 +360,12 @@ class AsyncAIDESearch:
         # is mutating its best node, the search is latency-bound on results
         refining = any(n.score is not None for n in self.agent.nodes)
         prio = self.refine_priority if refining else self.draft_priority
+        kwargs: dict = {}
         if self._supports_priority:
-            future = self.session.submit(batch, priority=prio)
-        else:                   # duck-typed session without priority support
-            future = self.session.submit(batch)
+            kwargs["priority"] = prio
+        if self._affinity is not None:
+            kwargs["affinity"] = self._affinity
+        future = self.session.submit(batch, **kwargs)
         return specs, names, future
 
     def _harvest(self, specs, names, future) -> None:

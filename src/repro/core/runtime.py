@@ -56,6 +56,13 @@ class ExecutionError(RuntimeError):
         self.op = op
         self.cause = cause
 
+    def __reduce__(self):
+        # default exception pickling replays __init__ with ``args`` (the
+        # formatted message), which doesn't match this signature; the
+        # fabric's result codec needs the (op, cause) form to survive the
+        # wire so tenants still see .op/.cause across the shard boundary
+        return (ExecutionError, (self.op, self.cause))
+
 
 class ExecutionPreempted(Exception):
     """A cooperative yield, not a failure: the run stopped at a wave

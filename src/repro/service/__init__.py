@@ -23,11 +23,13 @@ from .priority import DEFAULT_WEIGHTS, Priority
 from .queue import AdmissionError, FairQueue, Job
 from .server import JobReport, ServiceConfig, StratumService
 from .session import PipelineFuture, Session
-from .telemetry import ServiceTelemetry, TenantStats
+from .telemetry import ServiceTelemetry, TenantStats, merge_tenant_snapshots
+from .fabric import ShardedStratum, StratumFabric
 
 __all__ = [
     "AdmissionError", "DEFAULT_WEIGHTS", "FairQueue", "Job", "JobReport",
     "PipelineFuture", "Priority", "ServiceConfig", "ServiceTelemetry",
-    "Session", "StratumService", "SuperBatch", "TenantStats", "coalesce",
-    "cross_agent_dedup",
+    "Session", "ShardedStratum", "StratumFabric", "StratumService",
+    "SuperBatch", "TenantStats", "coalesce", "cross_agent_dedup",
+    "merge_tenant_snapshots",
 ]

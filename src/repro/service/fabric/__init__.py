@@ -1,0 +1,33 @@
+"""repro.service.fabric — sharded execution fabric.
+
+Scales the multi-tenant execution service past a single server: N
+:class:`~repro.service.server.StratumService` shards behind a
+:class:`ShardRouter` that consistent-hashes the pipeline-signature space,
+with a serializable :class:`JobEnvelope`/:class:`ResultEnvelope` submission
+boundary (explicit wire codec + :class:`Transport` abstraction), ring-based
+rebalancing, crash failover that requeues in-flight envelopes onto ring
+successors, and fabric-level telemetry aggregation.  See
+``docs/ARCHITECTURE.md`` (fabric section) and ``docs/API.md``.
+
+    from repro.service.fabric import ShardedStratum
+
+    with ShardedStratum(n_shards=4, memory_budget_bytes=2 << 30) as fabric:
+        results, report = fabric.session("agent-0").submit(batch).result()
+"""
+
+from .envelope import (CodecError, FabricJobReport, JobEnvelope,
+                       ResultEnvelope, decode_job, decode_result, encode_job,
+                       encode_result, routing_key_for)
+from .fabric import ShardedStratum, StratumFabric
+from .ring import ConsistentHashRing
+from .router import NoShardsError, ShardRouter
+from .telemetry import FabricTelemetry
+from .transport import LocalTransport, Transport, TransportError
+
+__all__ = [
+    "CodecError", "ConsistentHashRing", "FabricJobReport", "FabricTelemetry",
+    "JobEnvelope", "LocalTransport", "NoShardsError", "ResultEnvelope",
+    "ShardRouter", "ShardedStratum", "StratumFabric", "Transport",
+    "TransportError", "decode_job", "decode_result", "encode_job",
+    "encode_result", "routing_key_for",
+]

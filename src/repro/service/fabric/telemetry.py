@@ -1,0 +1,132 @@
+"""Fabric-level telemetry: per-shard state plus cross-shard aggregation.
+
+A sharded fabric multiplies the observability problem: each shard keeps its
+own :class:`~repro.service.telemetry.ServiceTelemetry` ledger, and the
+router keeps the placement-side counters (envelopes per shard, locality,
+failovers).  :class:`FabricTelemetry` joins both without copying state —
+snapshots are taken live from the shards — and exposes the same
+``snapshot()`` / ``global_snapshot()`` / ``report()`` surface as a single
+service, so :class:`~repro.service.session.Session.telemetry` and existing
+dashboards work unchanged against the fabric.
+
+The interesting fabric-only number is the **signature-locality hit rate**:
+of all routed envelopes whose routing key had been seen before, the
+fraction that landed on the same shard as last time.  With a stable ring
+this is 1.0; it degrades exactly by the keys remapped during membership
+changes, so it doubles as a live measure of how much cache/CSE locality a
+rebalance or failover cost.
+"""
+
+from __future__ import annotations
+
+from ..telemetry import merge_tenant_snapshots
+
+
+class FabricTelemetry:
+    """Aggregated view over the router and every live shard service.
+
+    ``shards`` is a zero-argument callable returning a *copied* dict of
+    live shards (taken under the fabric's lock) — the live dict mutates
+    during failover/rebalance, and iterating it directly from a
+    monitoring thread would race those membership changes."""
+
+    def __init__(self, router, shards) -> None:
+        self._router = router
+        self._shards = shards     # () -> dict shard_id -> StratumService
+        # final ledgers of failed/drained shards: fabric-wide counters must
+        # stay monotone — a shard's history doesn't vanish with the shard
+        self._retired: dict = {}  # shard_id -> (tenant_snap, per_shard row)
+
+    def retire(self, shard_id: str, svc) -> None:
+        """Freeze a departing shard's ledger before the fabric drops it."""
+        g = svc.telemetry.global_snapshot()
+        row = {
+            "retired": True,
+            "queue_depth": 0,
+            "inflight": 0,
+            "envelopes_routed":
+                self._router.envelopes_routed.get(shard_id, 0),
+            "pending_replies": 0,
+            "super_batches": g["super_batches"],
+            "jobs_coalesced": g["jobs_coalesced"],
+            "ops_deduped_cross_agent": g["ops_deduped_cross_agent"],
+            "preemptions": g["preemptions"],
+        }
+        self._retired[shard_id] = (svc.telemetry.snapshot(), row)
+
+    # -- per-tenant view (Session.telemetry compatibility) -----------------
+    def snapshot(self) -> dict:
+        snaps = [snap for snap, _ in self._retired.values()]
+        snaps += [svc.telemetry.snapshot()
+                  for svc in self._shards().values()]
+        return merge_tenant_snapshots(snaps)
+
+    # -- fabric-wide view --------------------------------------------------
+    def per_shard(self) -> dict:
+        r = self._router
+        out: dict[str, dict] = {sid: dict(row)
+                                for sid, (_, row) in self._retired.items()}
+        for shard_id, svc in self._shards().items():
+            g = svc.telemetry.global_snapshot()
+            out[shard_id] = {
+                "queue_depth": svc.queue_depth(),
+                "inflight": svc.inflight(),
+                "envelopes_routed": r.envelopes_routed.get(shard_id, 0),
+                "pending_replies": r.pending_count(shard_id),
+                "super_batches": g["super_batches"],
+                "jobs_coalesced": g["jobs_coalesced"],
+                "ops_deduped_cross_agent": g["ops_deduped_cross_agent"],
+                "preemptions": g["preemptions"],
+            }
+            if "cache_cross_tenant_hits" in g:
+                out[shard_id]["cache_cross_tenant_hits"] = \
+                    g["cache_cross_tenant_hits"]
+        return out
+
+    def global_snapshot(self) -> dict:
+        per_shard = self.per_shard()
+        r = self._router
+        totals = {
+            "n_shards": sum(1 for s in per_shard.values()
+                            if not s.get("retired")),
+            "envelopes_routed": sum(s["envelopes_routed"]
+                                    for s in per_shard.values()),
+            "signature_locality_hit_rate": r.locality_hit_rate(),
+            "failover_requeues": r.failover_requeues,
+            "shards_failed": r.shards_failed,
+            "shards_added": r.shards_added,
+            "shards_drained": r.shards_drained,
+            "reply_codec_errors": r.reply_codec_errors,
+            "super_batches": sum(s["super_batches"]
+                                 for s in per_shard.values()),
+            "jobs_coalesced": sum(s["jobs_coalesced"]
+                                  for s in per_shard.values()),
+            "ops_deduped_cross_agent": sum(s["ops_deduped_cross_agent"]
+                                           for s in per_shard.values()),
+            "preemptions": sum(s["preemptions"]
+                               for s in per_shard.values()),
+        }
+        totals["per_shard"] = per_shard
+        return totals
+
+    def report(self) -> str:
+        g = self.global_snapshot()
+        lines = [
+            f"fabric: {g['n_shards']} shard(s), "
+            f"{g['envelopes_routed']} envelopes routed, "
+            f"locality={g['signature_locality_hit_rate']:.2f}, "
+            f"failover_requeues={g['failover_requeues']}",
+        ]
+        for shard_id in sorted(g["per_shard"]):
+            s = g["per_shard"][shard_id]
+            lines.append(
+                f"  {shard_id}: routed={s['envelopes_routed']} "
+                f"queue={s['queue_depth']} inflight={s['inflight']} "
+                f"super_batches={s['super_batches']} "
+                f"deduped={s['ops_deduped_cross_agent']}")
+        for tenant, s in sorted(self.snapshot().items()):
+            lines.append(
+                f"  {tenant}: jobs={s['jobs_completed']}/"
+                f"{s['jobs_submitted']} wait={s['queue_wait_s']:.3f}s "
+                f"cache_hits={s['cache_hits']}")
+        return "\n".join(lines)

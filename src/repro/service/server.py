@@ -83,6 +83,9 @@ class ServiceConfig:
     cache_tenant_quota_fraction: float = 0.5
     # concurrency
     n_executors: int = 2
+    # identity when the service runs as one shard of a sharded fabric
+    # (src/repro/service/fabric/); "" for a standalone service
+    shard_id: str = ""
 
 
 @dataclass
@@ -201,8 +204,27 @@ class StratumService:
     def session(self, tenant: str) -> Session:
         return Session(self, tenant)
 
+    # -- shard introspection (used by the fabric's router/telemetry) -------
+    @property
+    def shard_id(self) -> str:
+        return self.config.shard_id
+
+    def queue_depth(self) -> int:
+        """Jobs admitted but not yet dispatched."""
+        return self.queue.pending()
+
+    def inflight(self) -> int:
+        """Jobs dispatched and currently executing."""
+        with self._inflight_cond:
+            return self._inflight_jobs
+
     def submit(self, tenant: str, batch: PipelineBatch,
-               priority: Priority = Priority.BATCH) -> PipelineFuture:
+               priority: Priority = Priority.BATCH,
+               affinity: Optional[str] = None) -> PipelineFuture:
+        # ``affinity`` is a sharded-fabric routing hint; a standalone
+        # service has exactly one place to run the job, so it is accepted
+        # (keeping Session portable across backends) and ignored
+        del affinity
         priority = Priority(priority)
         job_id = next(self._job_ids)
         future = PipelineFuture(job_id, tenant, priority)

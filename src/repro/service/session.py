@@ -13,6 +13,16 @@ agent can be ported by replacing ``run_batch(b)`` with
 latency-sensitive probe the agent is blocked on goes in as ``INTERACTIVE``,
 bulk sweeps as ``BATCH`` (default) or ``SCAVENGER`` — see
 ``docs/SCHEDULING.md`` for the scheduling semantics.
+
+A ``Session`` is backend-agnostic: the same handle fronts a standalone
+:class:`~repro.service.server.StratumService` or a sharded
+:class:`~repro.service.fabric.StratumFabric` — anything exposing
+``submit(tenant, batch, priority=..., affinity=...) -> PipelineFuture``
+and a ``telemetry`` object with ``snapshot()``.  Against the fabric every
+submission crosses the serializable envelope boundary; ``affinity`` (an
+opaque string) pins related submissions to one shard by overriding the
+content-derived routing key — e.g. one agent's whole search sticking to
+the shard that holds its cached intermediates.
 """
 
 from __future__ import annotations
@@ -142,7 +152,8 @@ class PipelineFuture:
 
 
 class Session:
-    """One tenant's handle onto a running :class:`StratumService`."""
+    """One tenant's handle onto an execution backend — a standalone
+    :class:`StratumService` or a sharded fabric (see module docstring)."""
 
     def __init__(self, service, tenant: str):
         self._service = service
@@ -151,20 +162,26 @@ class Session:
 
     # -- non-blocking path (the point of the subsystem) --------------------
     def submit(self, batch: PipelineBatch,
-               priority: Priority = Priority.BATCH) -> PipelineFuture:
+               priority: Priority = Priority.BATCH,
+               affinity: Optional[str] = None) -> PipelineFuture:
         """Enqueue ``batch`` at ``priority``; returns immediately.
 
-        Raises :class:`~repro.service.queue.AdmissionError` when admission
-        control rejects the job (queue depth / tenant quota)."""
+        ``affinity`` pins the job to the shard owning that key on a sharded
+        backend (ignored by a standalone service).  Raises
+        :class:`~repro.service.queue.AdmissionError` when admission control
+        rejects the job (queue depth / tenant quota)."""
         if self._closed:
             raise RuntimeError(f"session {self.tenant!r} is closed")
-        return self._service.submit(self.tenant, batch, priority=priority)
+        return self._service.submit(self.tenant, batch, priority=priority,
+                                    affinity=affinity)
 
     # -- drop-in synchronous compatibility with Stratum.run_batch ----------
     def run_batch(self, batch: PipelineBatch,
                   timeout: Optional[float] = None,
-                  priority: Priority = Priority.BATCH):
-        return self.submit(batch, priority=priority).result(timeout)
+                  priority: Priority = Priority.BATCH,
+                  affinity: Optional[str] = None):
+        return self.submit(batch, priority=priority,
+                           affinity=affinity).result(timeout)
 
     @property
     def telemetry(self) -> dict:

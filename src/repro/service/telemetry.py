@@ -64,6 +64,31 @@ class TenantStats:
         }
 
 
+def merge_tenant_snapshots(snapshots) -> dict:
+    """Merge per-tenant ``ServiceTelemetry.snapshot()`` dicts from several
+    shards into one fabric-wide view: counters and waits sum, ``*_max_*``
+    fields take the max, nested per-key dicts (backends, priorities) sum
+    per key.  Used by the sharded fabric's telemetry aggregation."""
+    merged: dict[str, dict] = {}
+    for snap in snapshots:
+        for tenant, stats in snap.items():
+            if tenant not in merged:
+                merged[tenant] = {k: (dict(v) if isinstance(v, dict) else v)
+                                  for k, v in stats.items()}
+                continue
+            out = merged[tenant]
+            for k, v in stats.items():
+                if isinstance(v, dict):
+                    tgt = out.setdefault(k, {})
+                    for kk, vv in v.items():
+                        tgt[kk] = tgt.get(kk, 0) + vv
+                elif "max" in k:
+                    out[k] = max(out.get(k, 0), v)
+                else:
+                    out[k] = out.get(k, 0) + v
+    return merged
+
+
 class ServiceTelemetry:
     def __init__(self, cache=None) -> None:
         self._lock = threading.Lock()

@@ -1,0 +1,116 @@
+"""Benchmark harness: exit-code propagation and the CI regression gate.
+
+The CI bench job can only be trusted if ``benchmarks.run`` reliably exits
+nonzero when a section fails — including the sneaky case of a section
+raising ``SystemExit(0)`` mid-run, which ``except Exception`` would let
+sail through as success."""
+
+import sys
+
+import pytest
+
+from benchmarks import run as bench_run
+from benchmarks.check_regression import check
+
+
+# ---------------------------------------------------------------------------
+# benchmarks.run exit codes
+# ---------------------------------------------------------------------------
+
+def test_unknown_section_exits_nonzero(capsys):
+    assert bench_run.main(["--sections", "no_such_section"]) == 1
+    out = capsys.readouterr().out
+    assert "no_such_section,ERROR" in out
+
+
+def test_crashing_section_exits_nonzero_but_others_still_run(capsys,
+                                                            monkeypatch):
+    monkeypatch.setitem(bench_run.SECTIONS, "boom",
+                        lambda args: (_ for _ in ()).throw(RuntimeError("x")))
+    monkeypatch.setitem(bench_run.SECTIONS, "fine",
+                        lambda args: [("ok_row", 1.0, "d")])
+    assert bench_run.main(["--sections", "boom,fine"]) == 1
+    out = capsys.readouterr().out
+    assert "boom,ERROR" in out
+    assert "ok_row,1.0,d" in out          # later sections still executed
+
+
+def test_section_calling_sys_exit_zero_is_a_failure(capsys, monkeypatch):
+    def exits(args):
+        sys.exit(0)                       # must NOT vouch for the harness
+    monkeypatch.setitem(bench_run.SECTIONS, "exiter", exits)
+    assert bench_run.main(["--sections", "exiter"]) == 1
+    assert "exiter,ERROR" in capsys.readouterr().out
+
+
+def test_all_sections_ok_exits_zero(monkeypatch):
+    monkeypatch.setitem(bench_run.SECTIONS, "fine",
+                        lambda args: [("row", 1.0, "")])
+    assert bench_run.main(["--sections", "fine"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# check_regression gate logic
+# ---------------------------------------------------------------------------
+
+BASE = {"service_smoke": {"speedup": 2.0}, "sharded_smoke": {"speedup": 3.0}}
+
+
+def test_gate_passes_within_tolerance_and_on_improvement():
+    fresh = {"service_smoke": {"speedup": 1.7},   # -15% < 20% tolerance
+             "sharded_smoke": {"speedup": 4.0}}   # improvement
+    assert check(BASE, fresh, 0.20) == []
+
+
+def test_gate_fails_on_regression_beyond_tolerance():
+    fresh = {"service_smoke": {"speedup": 1.5},   # -25%
+             "sharded_smoke": {"speedup": 3.0}}
+    failures = check(BASE, fresh, 0.20)
+    assert len(failures) == 1 and "service_smoke.speedup" in failures[0]
+
+
+def test_gate_fails_when_fresh_metric_missing():
+    fresh = {"service_smoke": {"speedup": 2.0}}   # sharded crashed/skipped
+    failures = check(BASE, fresh, 0.20)
+    assert any("missing from fresh" in f for f in failures)
+
+
+def test_gate_skips_metrics_absent_from_baseline():
+    base = {"sharded_smoke": {"speedup": 3.0}}    # no service baseline yet
+    fresh = {"sharded_smoke": {"speedup": 2.9}}
+    assert check(base, fresh, 0.20) == []
+
+
+def test_gate_refuses_empty_baseline():
+    failures = check({}, {}, 0.20)
+    assert any("nothing" in f for f in failures)
+
+
+def test_committed_baseline_contains_gated_smoke_metrics():
+    """The CI gate is only meaningful if the repo ships the baselines."""
+    import json
+    import os
+    path = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_service.json")
+    with open(path) as f:
+        baseline = json.load(f)
+    assert baseline["sharded_smoke"]["speedup"] > 0
+    assert baseline["service_smoke"]["speedup"] > 0
+    # the tentpole acceptance datapoint: >=2x aggregate throughput at
+    # 4 shards / 16 agents with identical pipeline scores
+    assert baseline["sharded"]["speedup"] >= 2.0
+    assert baseline["sharded"]["scores_identical"] is True
+    assert baseline["sharded"]["agents"] == 16
+
+
+@pytest.mark.parametrize("argv_exit", [(["--sections", "nope"], 1)])
+def test_module_entrypoint_propagates_exit_code(argv_exit):
+    import subprocess
+    argv, expected = argv_exit
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", *argv],
+        capture_output=True, text=True, timeout=120,
+        cwd=str(__import__("pathlib").Path(__file__).resolve().parent.parent),
+        env={**__import__("os").environ,
+             "PYTHONPATH": "src"})
+    assert proc.returncode == expected
