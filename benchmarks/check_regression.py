@@ -12,7 +12,10 @@ Gated metrics (checked when present in the baseline):
 * ``service_smoke.speedup`` — N concurrent agents through one service vs
   N isolated sequential sessions;
 * ``sharded_smoke.speedup`` — aggregate fabric throughput at K shards vs
-  1 shard.
+  1 shard;
+* ``compiled_smoke.speedup`` — compiled plan-segment backends (warm
+  structural plan cache) vs per-op dispatch on the repeated-structure
+  workload.
 
 A metric present in the baseline but missing from the fresh artifact is a
 failure (the bench crashed or was skipped); a metric missing from the
@@ -31,6 +34,7 @@ import sys
 GATES = (
     ("service_smoke", "speedup"),
     ("sharded_smoke", "speedup"),
+    ("compiled_smoke", "speedup"),
 )
 
 

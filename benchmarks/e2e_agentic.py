@@ -304,7 +304,13 @@ def _run_fabric_mode(n_shards: int, n_agents: int, n_cohorts: int,
         # deterministic — with 2 executors, concurrently running
         # super-batches race each other's cache insertions and the
         # 1-shard number becomes a coin flip between thrash and reuse
-        n_executors=1)
+        n_executors=1,
+        # per-op dispatch: this experiment isolates INTERMEDIATE-cache
+        # locality (shard-local working sets vs single-server LRU thrash).
+        # Compiled segments make recompute ~4x cheaper, which shrinks the
+        # thrash penalty and would entangle the two effects; the compiled
+        # dispatch win is measured by its own section (--sections compiled)
+        compiled_segments=False)
     keys = _balanced_cohort_keys(n_cohorts, ring_shards_for_keys)
     fab = ShardedStratum(n_shards=n_shards, config=cfg)
     sessions = [fab.session(f"agent-{i}") for i in range(n_agents)]
@@ -366,7 +372,8 @@ def run_sharded(n_agents: int = 16, rounds: int = 3, n_rows: int = 30_000,
     max_shards = max(shard_counts)
 
     if warmup:   # compile each op shape once so no mode pays XLA compile
-        s = Stratum(memory_budget_bytes=256 << 20, jit_cache_dir=jit_dir)
+        s = Stratum(memory_budget_bytes=256 << 20, jit_cache_dir=jit_dir,
+                    compiled_segments=False)   # match the modes' regime
         s.run_batch(_cohort_job(0, n_rows, 0))
 
     modes = {}
@@ -409,6 +416,126 @@ def sharded_rows(smoke: bool = False,
          f"{hi['throughput_jobs_per_s']:.2f}_jobs_per_s "
          f"(speedup={r['speedup']:.1f}x)"),
         (f"{key}_locality", hi["locality_hit_rate"] * 1e6, "hit_rate_x1e-6"),
+        (f"{key}_scores_identical", float(r["scores_identical"]),
+         "1=identical"),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# compiled plan-segment benchmark: repeated-structure workload, whole-segment
+# jit + structural plan cache vs per-op dispatch
+# ---------------------------------------------------------------------------
+
+def _refinement_batch(round_i: int, n_variants: int, n_rows: int
+                      ) -> PipelineBatch:
+    """One round of AIDE-style refinements: ``n_variants`` pipelines with
+    identical structure, differing only in tunable constants.  The clip
+    quantile varies *early* in the DAG, so every downstream signature is
+    fresh each round — the intermediate cache cannot short-circuit the
+    work, and the measured gap is purely compiled-segment dispatch vs
+    per-op dispatch over a warm structural plan cache."""
+    from repro.data.tabular import feature_target_indices
+    feats, tgt = feature_target_indices()
+    cols = list(feats[:8])
+    sinks, names = [], []
+    x = T.read("uk_housing", n_rows, seed=0)
+    y = T.project(x, [tgt])
+    for j in range(n_variants):
+        k = round_i * n_variants + j
+        Xc = T.clip_outliers(T.project(x, cols), q=0.001 + 0.0004 * k)
+        Xs = T.log1p(T.scale(T.impute(Xc)))
+        w = T.ridge_fit(Xs, y, alpha=0.05 * (1 + k))
+        sinks.append(T.metric(y, T.predict(w, Xs), kind="rmse"))
+        names.append(f"r{round_i}v{j}")
+    return PipelineBatch(sinks, names)
+
+
+def _compiled_mode(compiled: bool, rounds: int, n_variants: int,
+                   n_rows: int, jit_dir: str) -> dict:
+    svc = StratumService(memory_budget_bytes=2 << 30,
+                         jit_cache_dir=jit_dir,
+                         coalesce_window_s=0.0,
+                         n_executors=1,
+                         compiled_segments=compiled)
+    try:
+        ses = svc.session("agent")
+        # two warmup rounds (indices past the measured range): the first
+        # warms the per-op jit caches and the intermediate cache, the
+        # second compiles the segment shape measured rounds actually see
+        # (shared prefix ops become cache hits, changing the segment cut)
+        for w in (rounds, rounds + 1):
+            ses.submit(_refinement_batch(w, n_variants, n_rows)
+                       ).result(timeout=600)
+        scores = []
+        t0 = time.perf_counter()
+        for r in range(rounds):
+            res, _ = ses.submit(_refinement_batch(r, n_variants, n_rows)
+                                ).result(timeout=600)
+            scores.extend(float(np.asarray(res[f"r{r}v{j}"]))
+                          for j in range(n_variants))
+        makespan = time.perf_counter() - t0
+        g = svc.telemetry.global_snapshot()
+    finally:
+        svc.stop()
+    out = {
+        "compiled_segments": compiled,
+        "makespan_s": makespan,
+        "pipelines_per_s": rounds * n_variants / makespan,
+        "scores": scores,
+    }
+    if "plan_cache" in g:
+        out["plan_cache"] = g["plan_cache"]
+    return out
+
+
+def run_compiled(rounds: int = 10, n_variants: int = 8,
+                 n_rows: int = 4000) -> dict:
+    """Compiled plan-segment backends vs per-op dispatch on the
+    repeated-structure workload (structurally identical refinement rounds
+    differing only in constants).  Scores must be identical — segmentation
+    changes dispatch granularity, never semantics."""
+    from repro.data.tabular import ensure_files
+    ensure_files("uk_housing", n_rows, 0)
+    jit_dir = "/tmp/repro_jit_cache"
+    per_op = _compiled_mode(False, rounds, n_variants, n_rows, jit_dir)
+    comp = _compiled_mode(True, rounds, n_variants, n_rows, jit_dir)
+    max_rel = max(abs(a - b) / max(abs(a), 1e-12)
+                  for a, b in zip(comp["scores"], per_op["scores"]))
+    out = {
+        "rounds": rounds,
+        "variants": n_variants,
+        "rows": n_rows,
+        "modes": {
+            "per_op": {k: v for k, v in per_op.items() if k != "scores"},
+            "compiled": {k: v for k, v in comp.items() if k != "scores"},
+        },
+        "speedup": per_op["makespan_s"] / comp["makespan_s"],
+        # whole-segment XLA fusion may reassociate float32 reductions vs
+        # the eager per-op order; 1e-6 relative is float32 parity, far
+        # below any score-ranking significance
+        "score_max_rel_diff": max_rel,
+        "scores_identical": bool(max_rel <= 1e-6),
+        "plan_cache_hit_rate":
+            comp.get("plan_cache", {}).get("hit_rate", 0.0),
+    }
+    return out
+
+
+def compiled_rows(smoke: bool = False,
+                  out: str = "BENCH_service.json") -> list:
+    kw = dict(rounds=5, n_variants=6, n_rows=2000) if smoke else {}
+    r = run_compiled(**kw)
+    key = "compiled_smoke" if smoke else "compiled"
+    write_service_json({key: r}, out, merge=True)
+    m = r["modes"]
+    return [
+        (f"{key}_per_op", m["per_op"]["makespan_s"] * 1e6,
+         f"{m['per_op']['pipelines_per_s']:.1f}_pipelines_per_s"),
+        (f"{key}_compiled", m["compiled"]["makespan_s"] * 1e6,
+         f"{m['compiled']['pipelines_per_s']:.1f}_pipelines_per_s "
+         f"(speedup={r['speedup']:.1f}x)"),
+        (f"{key}_plan_cache_hit_rate", r["plan_cache_hit_rate"] * 1e6,
+         "hit_rate_x1e-6"),
         (f"{key}_scores_identical", float(r["scores_identical"]),
          "1=identical"),
     ]

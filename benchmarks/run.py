@@ -16,11 +16,15 @@ Sections:
   * sharded      — aggregate throughput of the consistent-hash sharded
                    fabric (1 shard vs 4) at 16 agents submitting
                    open-loop sweeps (merged into BENCH_service.json)
+  * compiled     — repeated-structure workload: compiled plan-segment
+                   backends (whole-segment jit + warm structural plan
+                   cache) vs per-op dispatch (merged into
+                   BENCH_service.json)
 
-``--smoke`` runs CI-sized variants of the ``service`` and ``sharded``
-sections (smaller rows / agents / rounds) and records them under
-``*_smoke`` keys, which ``benchmarks/check_regression.py`` gates against
-the committed baseline; the other sections ignore the flag.
+``--smoke`` runs CI-sized variants of the ``service``, ``sharded`` and
+``compiled`` sections (smaller rows / agents / rounds) and records them
+under ``*_smoke`` keys, which ``benchmarks/check_regression.py`` gates
+against the committed baseline; the other sections ignore the flag.
 
 Exit code: nonzero iff any requested section failed.  Failures include a
 section raising ``SystemExit`` mid-run (even ``SystemExit(0)`` — a section
@@ -90,6 +94,11 @@ def _sharded(args):
     return sharded_rows(smoke=args.smoke, out=args.out)
 
 
+def _compiled(args):
+    from .e2e_agentic import compiled_rows
+    return compiled_rows(smoke=args.smoke, out=args.out)
+
+
 SECTIONS = {
     "characterize": _characterize,
     "micro": _micro,
@@ -99,6 +108,7 @@ SECTIONS = {
     "service": _service,
     "priority": _priority,
     "sharded": _sharded,
+    "compiled": _compiled,
 }
 
 

@@ -10,19 +10,29 @@ The paper's contribution (§4), as a composable library:
 * :mod:`repro.core.selection`   tiered physical operator selection
 * :mod:`repro.core.scheduler`   memory-budgeted parallelization planning
 * :mod:`repro.core.cache`       intermediate reuse (RAM + disk spill)
-* :mod:`repro.core.runtime`     wave executor
+* :mod:`repro.core.plan_cache`  compiled-plan cache (structural signatures)
+* :mod:`repro.core.runtime`     segment executor over pluggable backends
+* :mod:`repro.core.backends`    ExecutionBackend seam (per-op / compiled)
 * :mod:`repro.core.api`         the Stratum session
 """
 
 from .api import ALL_FEATURES, Stratum, StratumReport
+from .backends import (ExecutionBackend, JaxSegmentBackend,
+                       PythonThreadBackend, make_backends, register_backend)
 from .dag import (COMPOSITE, CONST, ESTIMATOR, EVAL, FILTER, GENERIC, LazyOp,
-                  LazyRef, PROJECT, SOURCE, TRANSFORM, count_ops, toposort)
+                  LazyRef, PROJECT, SOURCE, TRANSFORM, count_ops,
+                  declare_tunable, structural_signature, toposort,
+                  tunable_fields)
 from .fusion import PipelineBatch, group_variants
+from .plan_cache import PlanCache
 from .annotations import annotate
 
 __all__ = [
     "ALL_FEATURES", "Stratum", "StratumReport", "LazyOp", "LazyRef",
     "PipelineBatch", "group_variants", "annotate", "count_ops", "toposort",
+    "declare_tunable", "tunable_fields", "structural_signature",
+    "ExecutionBackend", "JaxSegmentBackend", "PythonThreadBackend",
+    "make_backends", "register_backend", "PlanCache",
     "SOURCE", "TRANSFORM", "PROJECT", "FILTER", "ESTIMATOR", "EVAL",
     "COMPOSITE", "CONST", "GENERIC",
 ]

@@ -18,11 +18,13 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Optional, Sequence
 
+from .backends import make_backends
 from .cache import CacheStats, IntermediateCache, mark_cache_candidates
 from .dag import LazyOp, LazyRef, count_ops
 from .fusion import PipelineBatch
 from .lowering import lower
 from .metadata import collect_metadata
+from .plan_cache import PlanCache
 from .rewrites import RewriteStats, optimize_logical
 from .runtime import RunReport, Runtime, execute_reference
 from .scheduler import Plan, SchedulerConfig, plan as make_plan
@@ -40,6 +42,7 @@ class StratumReport:
     ops_submitted: int
     ops_planned: int
     optimize_time_s: float
+    plan_cache: Optional[dict] = None   # PlanCache.snapshot() at run end
 
     def summary(self) -> str:
         lines = [
@@ -55,6 +58,11 @@ class StratumReport:
             f"wall: {self.run.wall_time_s:.4f}s "
             f"(optimize {self.optimize_time_s:.4f}s)",
         ]
+        if self.plan_cache is not None:
+            lines.append(
+                f"plan cache: {self.plan_cache['entries']} entries "
+                f"hit_rate={self.plan_cache['hit_rate']:.2f} "
+                f"(compiles {self.plan_cache['compiles']})")
         return "\n".join(lines)
 
 
@@ -69,7 +77,10 @@ class Stratum:
                  enable: Sequence[str] = ALL_FEATURES,
                  hardware_threads: int = 0,
                  jit_cache_dir: Optional[str] = None,
-                 cache: Optional[IntermediateCache] = None):
+                 cache: Optional[IntermediateCache] = None,
+                 compiled_segments: bool = True,
+                 plan_cache: Optional[PlanCache] = None,
+                 plan_cache_entries: int = 256):
         unknown = set(enable) - set(ALL_FEATURES)
         if unknown:
             raise ValueError(f"unknown features {unknown}")
@@ -94,6 +105,16 @@ class Stratum:
             self.cache = IntermediateCache(
                 budget_bytes=int(memory_budget_bytes * cache_fraction),
                 spill_dir=spill_dir)
+        # compiled-plan cache + pluggable backends: an injected plan cache
+        # is shared infrastructure (a service shard hands every run the
+        # same instance so structurally identical plans compile once)
+        self.compiled_segments = compiled_segments
+        self.plan_cache: Optional[PlanCache] = None
+        if compiled_segments:
+            self.plan_cache = (plan_cache if plan_cache is not None
+                               else PlanCache(capacity=plan_cache_entries))
+        self._backends = make_backends(self.plan_cache,
+                                       compiled=compiled_segments)
 
     # ------------------------------------------------------------------
     def compile_batch(self, batch: PipelineBatch):
@@ -127,7 +148,8 @@ class Stratum:
         p = make_plan(sinks, sel, SchedulerConfig(
             memory_budget_bytes=self.memory_budget_bytes,
             hardware_threads=self.hardware_threads,
-            enable_inter_op="parallel" in self.enable))
+            enable_inter_op="parallel" in self.enable,
+            compiled_segments=self.compiled_segments))
 
         opt_time = time.perf_counter() - t0
         return sinks, sel, p, candidates, rw, ops_submitted, opt_time
@@ -137,13 +159,16 @@ class Stratum:
         (sinks, sel, p, candidates, rw, ops_submitted,
          opt_time) = self.compile_batch(batch)
         rt = Runtime(cache=self.cache, cache_candidates=candidates,
-                     parallel="parallel" in self.enable)
+                     parallel="parallel" in self.enable,
+                     backends=self._backends)
         results, run = rt.execute(sinks, p, sel)
         report = StratumReport(
             rewrites=rw, plan=p, run=run,
             cache=self.cache.stats if self.cache else None,
             ops_submitted=ops_submitted, ops_planned=p.n_ops,
-            optimize_time_s=opt_time)
+            optimize_time_s=opt_time,
+            plan_cache=(self.plan_cache.snapshot()
+                        if self.plan_cache else None))
         # remap results onto the (possibly rewritten) sink order
         named = dict(zip(batch.names, results))
         return named, report

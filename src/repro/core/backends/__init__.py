@@ -1,0 +1,20 @@
+"""Pluggable execution backends for the stratum runtime.
+
+See :mod:`.base` for the seam, :mod:`.python_thread` for the per-op
+interpreted path and :mod:`.jax_segment` for whole-segment jit
+compilation with the structural plan cache.
+"""
+
+from .base import (ExecutionBackend, available_backends, make_backends,
+                   register_backend)
+from .jax_segment import JaxSegmentBackend
+from .python_thread import PythonThreadBackend
+
+__all__ = [
+    "ExecutionBackend",
+    "JaxSegmentBackend",
+    "PythonThreadBackend",
+    "available_backends",
+    "make_backends",
+    "register_backend",
+]

@@ -1,0 +1,271 @@
+"""Whole-segment jit compilation — the compiled backend.
+
+A ``"jax"`` segment contains only ops whose selected implementation is a
+*traceable* jax-tier function (``PhysicalImpl.traceable``).  Instead of
+dispatching them one by one through python, this backend traces the whole
+segment into ONE jitted program:
+
+* **inputs** — values produced outside the compute set (earlier segments,
+  intermediate-cache hits, preemption salvage) enter as runtime arguments;
+* **tunable constants** — spec fields declared via
+  :func:`repro.core.dag.declare_tunable` (``alpha``, ``l1_ratio``, ...)
+  are hoisted to traced scalar arguments, so hyperparameter variants of
+  the same structure reuse one compiled program with zero retraces;
+* **outputs** — every computed op's outputs are returned and stored back
+  into the runtime's value store, so cache inserts, liveness freeing and
+  preemption salvage behave exactly as on the per-op path.
+
+Compiled programs live in a :class:`~repro.core.plan_cache.PlanCache`
+keyed by the segment's structural signature plus the runtime *cut* (which
+ops were served from cache/salvage and therefore became inputs).  The
+cache is shared per service shard, so a thousand structurally identical
+agent plans compile once and then pay one dispatch per segment.
+
+Semantics at the boundary: the intermediate cache is probed (one
+tenant-aware ``get`` per op) *before* tracing — hits become inputs, not
+traced ops — and marked candidates are inserted after execution;
+cooperative preemption yields between segments.  Failure handling keeps
+the "degrades performance, never correctness" contract: a segment shape
+that fails a trace-only ``jax.eval_shape`` probe (mis-declared traceable
+impl) is remembered as uncompilable — kept out of the plan cache so hit
+rates stay honest — and runs per-op forever after; a *runtime* failure of a
+compiled program (possibly transient, e.g. resource exhaustion) falls
+back per-op for that round only, reproducing any precise per-op error
+exactly as the uncompiled path would.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Optional, Sequence
+
+import jax
+
+from ..dag import LazyOp, tunable_fields
+from ..plan_cache import PlanCache
+from .base import ExecutionBackend
+
+_EXT, _INT = 0, 1
+
+
+class _TracedOp:
+    """Stand-in for a LazyOp during tracing: exposes exactly the surface
+    impl functions read (``op_name``/``op_class``/``spec``/``n_outputs``)
+    without pinning the source plan's DAG — no ``inputs``, no ``meta``, so
+    a cached compiled segment never keeps a whole submitted plan alive.
+
+    Reading ``seed`` raises: seed *values* are excluded from structural
+    signatures, so a traceable impl consuming one would bake this plan's
+    seed into a program reused by seed-variants of the same structure.
+    The trap turns that contract violation into a trace-time error — the
+    backend falls back to per-op execution, degrading performance, never
+    correctness."""
+
+    __slots__ = ("op_name", "op_class", "spec", "n_outputs")
+
+    def __init__(self, op_name: str, op_class: str, spec: dict,
+                 n_outputs: int):
+        self.op_name = op_name
+        self.op_class = op_class
+        self.spec = spec
+        self.n_outputs = n_outputs
+
+    @classmethod
+    def of(cls, op: LazyOp) -> "_TracedOp":
+        return cls(op.op_name, op.op_class, dict(op.spec), op.n_outputs)
+
+    def with_spec(self, spec: dict) -> "_TracedOp":
+        return _TracedOp(self.op_name, self.op_class, spec, self.n_outputs)
+
+    @property
+    def seed(self):
+        raise TypeError(
+            "op.seed is unavailable inside a compiled segment: seed values "
+            "are not part of the structural signature, so a traceable impl "
+            "must not read them (mark the impl traceable=False)")
+
+
+class JaxSegmentBackend(ExecutionBackend):
+    name = "jax"
+
+    def __init__(self, plan_cache: Optional[PlanCache] = None):
+        # a private cache when none is injected: a bare Runtime still
+        # benefits within its own lifetime; services inject the shared
+        # per-shard cache so all tenants reuse each other's compiles
+        self.plan_cache = plan_cache if plan_cache is not None \
+            else PlanCache()
+        # segment shapes whose tracing failed (mis-declared traceable
+        # impl): go straight to per-op, never re-trace.  Kept OUT of the
+        # plan cache so its hit rate reflects compiled reuse only, and
+        # bounded so one bad impl on an open-ended stream of distinct
+        # structures cannot grow a shard's memory without limit
+        self._uncompilable: "OrderedDict" = OrderedDict()
+        self._uncompilable_max = 1024
+
+    # ------------------------------------------------------------------
+    def execute_segment(self, rt, segment, selection, report) -> None:
+        report.waves += len(segment.waves)
+        compute: list[LazyOp] = []
+        produced: set[str] = set()
+        for wave in segment.waves:
+            for op in wave.ops:
+                sig = op.signature
+                if sig in rt._skips:
+                    rt._mark_salvaged(op, report)
+                    continue
+                if sig in produced:
+                    continue      # identical-signature peer: one compute
+                if sig in rt.preloaded:
+                    rt._store(op, rt.preloaded[sig])
+                    rt._mark_salvaged(op, report)
+                    continue
+                # one tenant-aware probe; the hit becomes a segment
+                # input instead of a traced op
+                if rt._try_cache_hit(op, report) is not None:
+                    continue
+                compute.append(op)
+                produced.add(sig)
+        if compute:
+            self._run_compiled(rt, segment, compute, selection, report)
+        # liveness freeing at the segment boundary (the planner's
+        # est_peak_mem accounts for the deferral — see scheduler.plan)
+        for wave in segment.waves:
+            rt._free_wave(wave)
+
+    # ------------------------------------------------------------------
+    def _wiring(self, compute: Sequence[LazyOp]):
+        """Input wiring for the compute set: per op, each input is either
+        (_INT, producer_position, out_index) — produced inside the segment
+        — or (_EXT, arg_position, 0) — fetched from the value store."""
+        pos_by_sig: dict[str, int] = {}
+        for i, op in enumerate(compute):
+            pos_by_sig.setdefault(op.signature, i)
+        ext_keys: list[str] = []
+        ext_index: dict[str, int] = {}
+        in_specs = []
+        for op in compute:
+            specs = []
+            for r in op.inputs:
+                p = pos_by_sig.get(r.op.signature)
+                if p is not None:
+                    specs.append((_INT, p, r.index))
+                else:
+                    key = r.signature
+                    j = ext_index.get(key)
+                    if j is None:
+                        j = ext_index[key] = len(ext_keys)
+                        ext_keys.append(key)
+                    specs.append((_EXT, j, 0))
+            in_specs.append(tuple(specs))
+        return tuple(in_specs), ext_keys
+
+    def _fallback(self, rt, segment, compute, selection, report) -> None:
+        """Per-op execution of the segment's compute set, wave-aligned so
+        it keeps the python path's pool parallelism and intra-wave
+        preemption polls — the fallback must never be worse than running
+        with compiled segments disabled."""
+        pending = {id(op) for op in compute}
+        for wave in segment.waves:
+            todo = [op for op in wave.ops if id(op) in pending]
+            if todo:
+                rt._run_ops_parallel(todo, selection, report)
+
+    def _run_compiled(self, rt, segment, compute, selection,
+                      report) -> None:
+        in_specs, ext_keys = self._wiring(compute)
+        hoists = tuple(tuple(sorted(tunable_fields(op.op_name)
+                                    & set(op.spec))) for op in compute)
+        # key: structure of every traced op + the cut (which inputs are
+        # external) + the exact impl chosen (fidelity annotations can
+        # swap impls between structurally identical plans)
+        key = ("jax-seg",
+               tuple(op.structural_signature for op in compute),
+               in_specs,
+               tuple(id(selection[op.signature]) for op in compute))
+        if key in self._uncompilable:
+            self._fallback(rt, segment, compute, selection, report)
+            return
+        with rt._lock:
+            ext_vals = tuple(rt._values[k] for k in ext_keys)
+        hoist_vals = tuple(op.spec[f]
+                           for op, fs in zip(compute, hoists)
+                           for f in fs)
+        compiled = self.plan_cache.get(key)
+        if compiled is None:
+            seg_fn, compiled = self._build(compute, in_specs, hoists,
+                                           selection)
+            try:
+                # abstract trace probe: a segment shape that cannot trace
+                # (mis-declared traceable impl, seed read, host numpy) is
+                # a deterministic property — remember it and never retry.
+                # eval_shape never lowers/compiles, so the probe costs a
+                # fraction of the real compile it precedes
+                jax.eval_shape(seg_fn, ext_vals, hoist_vals)
+            except Exception:  # noqa: BLE001 — tracing failure
+                self._uncompilable[key] = True
+                while len(self._uncompilable) > self._uncompilable_max:
+                    self._uncompilable.popitem(last=False)
+                # per-op reproduces any precise error
+                self._fallback(rt, segment, compute, selection, report)
+                return
+            self.plan_cache.put(key, compiled)
+        try:
+            outs = compiled(ext_vals, hoist_vals)
+        except Exception:  # noqa: BLE001 — XLA runtime failure
+            # possibly transient (e.g. resource exhaustion): run per-op
+            # this round WITHOUT forgetting the compiled program — tracing
+            # failures were already excluded by the eval_shape probe, so the
+            # next structurally identical plan tries compiled again
+            self._fallback(rt, segment, compute, selection, report)
+            return
+        self._commit(rt, compute, outs, selection, report)
+
+    def _build(self, compute, in_specs, hoists, selection):
+        """Returns ``(seg_fn, jitted)`` — the raw traceable function (for
+        the abstract-trace probe) and its jit wrapper (what the plan
+        cache stores)."""
+        impl_fns = [selection[op.signature].fn for op in compute]
+        # proxies, not the LazyOps: a cached program must not pin the
+        # submitting plan's DAG (inputs/meta/const payloads) in memory
+        protos = [_TracedOp.of(op) for op in compute]
+
+        def seg_fn(ext_vals, hoist_vals):
+            outs: list[tuple] = []
+            h = 0
+            for i, fn in enumerate(impl_fns):
+                ins = [ext_vals[j] if tag == _EXT else outs[j][oi]
+                       for tag, j, oi in in_specs[i]]
+                op = protos[i]
+                if hoists[i]:
+                    # fresh spec per trace: tracers must not leak into the
+                    # shared proto (concurrent retraces would race on it)
+                    spec = dict(op.spec)
+                    for f in hoists[i]:
+                        spec[f] = hoist_vals[h]
+                        h += 1
+                    op = op.with_spec(spec)
+                o = fn(op, ins)
+                if not isinstance(o, tuple):
+                    o = (o,)
+                outs.append(o)
+            return tuple(outs)
+
+        return seg_fn, jax.jit(seg_fn)
+
+    def _commit(self, rt, compute, outs, selection, report) -> None:
+        from ..runtime import ExecutionError
+        for op, out in zip(compute, outs):
+            if len(out) != op.n_outputs:
+                raise ExecutionError(
+                    op, ValueError(f"impl returned {len(out)} outputs, "
+                                   f"declared {op.n_outputs}"))
+            rt._store(op, out)
+            sig = op.signature
+            with rt._lock:
+                report.ops_executed += 1
+                report.per_backend["jax-seg"] = \
+                    report.per_backend.get("jax-seg", 0) + 1
+                report.sig_source[sig] = "jax-seg"
+            if (rt.cache is not None and op.cacheable
+                    and sig in rt.cache_candidates):
+                rt.cache.put(sig, out, tenant=rt.sig_tenant.get(sig))

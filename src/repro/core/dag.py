@@ -14,6 +14,18 @@ skrub's DataOps.  Nodes carry
                    cached on the node for O(1) equality (paper §4.3 Reuse).
 
 The signature doubles as the cache key and the CSE equivalence class.
+
+A second, coarser identity — the **structural signature** — hashes the DAG
+*shape* modulo payload constants: op names, wiring, output arity and the
+non-tunable parts of each spec, but not tunable hyperparameter values,
+seeds, or constant payloads (only their shape/dtype).  Two AIDE refinements
+that differ only in ``alpha`` share one structural signature, which is the
+key the compiled-plan cache (``core/plan_cache.py``) uses to reuse a
+whole-segment jitted program across thousands of near-identical agent
+plans.  Which spec fields count as *tunable* is declared per op name via
+:func:`declare_tunable` (impl modules register theirs next to the physical
+implementations); a tunable field's value is hoisted to a runtime argument
+of the compiled segment, so excluding it from the hash is sound.
 """
 
 from __future__ import annotations
@@ -43,6 +55,26 @@ OP_CLASSES = (SOURCE, TRANSFORM, PROJECT, FILTER, ESTIMATOR, EVAL, COMPOSITE,
               CONST, GENERIC)
 
 _uid = itertools.count()
+
+# ---------------------------------------------------------------------------
+# tunable spec fields: hyperparameters excluded from the structural signature
+# because the compiled-segment backend hoists them to runtime arguments
+# ---------------------------------------------------------------------------
+
+_TUNABLE_FIELDS: dict[str, frozenset] = {}
+
+
+def declare_tunable(op_name: str, *fields: str) -> None:
+    """Declare spec ``fields`` of ``op_name`` as tunable scalars: traced as
+    arguments by compiled segments and ignored by structural signatures.
+    Only declare fields whose value never changes trace *structure* (no
+    shapes, no static loop bounds, no branch selectors)."""
+    _TUNABLE_FIELDS[op_name] = (_TUNABLE_FIELDS.get(op_name, frozenset())
+                                | frozenset(fields))
+
+
+def tunable_fields(op_name: str) -> frozenset:
+    return _TUNABLE_FIELDS.get(op_name, frozenset())
 
 
 def _hash_payload(value: Any) -> str:
@@ -80,6 +112,40 @@ def _hash_payload(value: Any) -> str:
     return h.hexdigest()
 
 
+def _hash_structural_payload(value: Any) -> str:
+    """Like :func:`_hash_payload` but constants collapse to their *type
+    skeleton*: arrays hash dtype+shape only, scalars hash their type — the
+    payload bits that decide what a compiled program looks like, not what
+    it computes on."""
+    h = hashlib.blake2b(digest_size=16)
+
+    def feed(v: Any) -> None:
+        if isinstance(v, np.ndarray):
+            h.update(b"nd")
+            h.update(str(v.dtype).encode())
+            h.update(str(v.shape).encode())
+        elif isinstance(v, (list, tuple)):
+            h.update(b"seq")
+            for item in v:
+                feed(item)
+        elif isinstance(v, Mapping):
+            h.update(b"map")
+            for k in sorted(v):
+                h.update(str(k).encode())
+                feed(v[k])
+        elif isinstance(v, (int, float, bool, complex)) or v is None:
+            h.update(type(v).__name__.encode())
+        elif hasattr(v, "shape") and hasattr(v, "dtype"):
+            h.update(b"arr")
+            h.update(str(v.dtype).encode())
+            h.update(str(v.shape).encode())
+        else:
+            h.update(repr(v).encode())
+
+    feed(value)
+    return h.hexdigest()
+
+
 @dataclass(frozen=True)
 class LazyRef:
     """A handle to output ``index`` of ``op`` — the DAG's edge type."""
@@ -106,6 +172,7 @@ class LazyOp:
     # filled by the metadata pass (metadata.py)
     meta: Optional[Any] = None
     _signature: Optional[str] = field(default=None, repr=False)
+    _structural_signature: Optional[str] = field(default=None, repr=False)
 
     def __post_init__(self) -> None:
         if self.op_class not in OP_CLASSES:
@@ -130,6 +197,38 @@ class LazyOp:
                 h.update(ref.signature.encode())
             object.__setattr__(self, "_signature", h.hexdigest())
         return self._signature
+
+    @property
+    def structural_signature(self) -> str:
+        """Hash of the op's *shape*: name, class, arity, wiring and the
+        non-tunable spec entries — but not tunable hyperparameter values,
+        the seed value, or constant payloads (shape/dtype only).  Two ops
+        share a structural signature iff a compiled program traced for one
+        (with tunables hoisted to arguments and constants fed as inputs)
+        is reusable verbatim for the other."""
+        if self._structural_signature is None:
+            h = hashlib.blake2b(digest_size=16)
+            h.update(self.op_name.encode())
+            h.update(self.op_class.encode())
+            h.update(str(self.n_outputs).encode())
+            tun = tunable_fields(self.op_name)
+            if self.op_class == CONST:
+                # const payloads reach compiled segments as runtime inputs,
+                # never baked constants — only their type skeleton matters
+                h.update(_hash_structural_payload(self.spec).encode())
+            else:
+                pruned = {k: v for k, v in self.spec.items() if k not in tun}
+                h.update(_hash_payload(pruned).encode())
+                # which tunables are present still shapes the hoisted
+                # argument list, so their *names* (not values) are hashed
+                h.update(",".join(sorted(tun & set(self.spec))).encode())
+            h.update(b"s1" if self.seed is not None else b"s0")
+            h.update(b"d1" if self.deterministic else b"d0")
+            for ref in self.inputs:
+                h.update(ref.op.structural_signature.encode())
+                h.update(str(ref.index).encode())
+            object.__setattr__(self, "_structural_signature", h.hexdigest())
+        return self._structural_signature
 
     @property
     def cacheable(self) -> bool:
@@ -216,6 +315,18 @@ def rebuild(sinks: Sequence[LazyRef],
 
 def count_ops(sinks: Sequence[LazyRef]) -> int:
     return len(toposort(sinks))
+
+
+def structural_signature(sinks: Sequence[LazyRef]) -> str:
+    """Structural signature of a whole plan: per-sink structural signatures
+    in sink order (each already encodes its subgraph recursively).  Plans
+    differing only in payload constants / tunable hyperparameters collide;
+    plans differing in topology, op vocabulary or output wiring do not."""
+    h = hashlib.blake2b(digest_size=16)
+    for ref in sinks:
+        h.update(ref.op.structural_signature.encode())
+        h.update(str(ref.index).encode())
+    return h.hexdigest()
 
 
 def graphviz(sinks: Sequence[LazyRef]) -> str:

@@ -1,0 +1,100 @@
+"""Compiled-plan cache: structural signature → compiled segment program.
+
+Agentic searches emit thousands of structurally identical DAGs (AIDE
+refinements differ only in constants and hyperparameters).  The
+:class:`~repro.core.backends.jax_segment.JaxSegmentBackend` traces a whole
+backend-homogeneous segment into one jitted callable with tunable
+constants hoisted to arguments; this module keeps those callables keyed by
+the segment's *structural* signature (``dag.py``), so the second
+structurally identical plan — from any tenant of the same service shard —
+skips tracing and compilation entirely and pays one dispatch per segment.
+
+One :class:`PlanCache` is shared per service shard (wired through
+``service/server.py``); hit rates surface in per-shard service telemetry
+and in the fabric's aggregated snapshot, where signature-locality routing
+makes compiled-plan locality visible fabric-wide.
+
+Entries are LRU-evicted by count, not bytes: a compiled segment's host
+footprint is dominated by the XLA executable, which jax already dedups
+through its own compilation cache — this layer only bounds the number of
+live python callables.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Any, Hashable, Optional
+
+
+@dataclass
+class PlanCacheStats:
+    hits: int = 0
+    misses: int = 0
+    compiles: int = 0      # callables built and inserted
+    evictions: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class PlanCache:
+    """Thread-safe LRU of compiled segment callables.
+
+    Keys are hashable descriptors built by the segment backend — the
+    segment's structural signature plus whatever runtime cut the backend
+    folds in (e.g. which ops were served from the intermediate cache and
+    therefore became segment inputs instead of traced ops)."""
+
+    def __init__(self, capacity: int = 256):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._entries: "OrderedDict[Hashable, Any]" = OrderedDict()
+        self._lock = threading.Lock()
+        self.stats = PlanCacheStats()
+
+    def get(self, key: Hashable) -> Optional[Any]:
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is None:
+                self.stats.misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self.stats.hits += 1
+            return entry
+
+    def put(self, key: Hashable, compiled: Any) -> None:
+        with self._lock:
+            if key not in self._entries:
+                self.stats.compiles += 1
+            self._entries[key] = compiled
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+                self.stats.evictions += 1
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def __contains__(self, key: Hashable) -> bool:
+        with self._lock:
+            return key in self._entries
+
+    def snapshot(self) -> dict:
+        """Telemetry view, copied under the lock."""
+        with self._lock:
+            s = self.stats
+            return {
+                "entries": len(self._entries),
+                "capacity": self.capacity,
+                "hits": s.hits,
+                "misses": s.misses,
+                "compiles": s.compiles,
+                "evictions": s.evictions,
+                "hit_rate": round(s.hit_rate, 6),
+            }

@@ -1,22 +1,32 @@
 """Execution runtime (paper §4.2–4.3).
 
-Executes a scheduler :class:`Plan` wave by wave:
+Executes a scheduler :class:`Plan` segment by segment through pluggable
+:class:`~repro.core.backends.ExecutionBackend`\\ s: the runtime owns the
+value store, cache handles, salvage state and preemption hooks, and each
+backend-homogeneous :class:`~repro.core.scheduler.Segment` is handed to
+the backend registered for its kind —
 
-* cache probe before execution, insert-after for marked candidates (§4.3),
-* physical impl resolved from the selection table (late binding, §4.2),
-* inter-operator parallelism via a bounded thread pool — the CPU analogue of
-  the paper's GIL-releasing concurrent kernels; jax-tier impls are jitted and
-  dispatch asynchronously, so overlapping waves also overlaps XLA execution,
-* liveness-driven freeing of intermediates (memory management),
-* cooperative preemption: when the caller installs a ``preempt_check``, the
-  runtime polls it at every wave boundary *and* between op completions
-  inside wide waves, and, if it fires, abandons the run with
-  :class:`ExecutionPreempted` carrying every already-completed intermediate
-  (the *salvage*); a re-run passes that salvage back as ``preloaded`` so no
-  finished work executes twice, and a liveness rule (yield only after ≥1
-  newly-executed op) guarantees progress under repeated preemption.  This
-  is how the multi-tenant service yields a low-priority super-batch to
-  freshly queued higher-priority work without losing progress.
+* ``"python"`` (:class:`~repro.core.backends.PythonThreadBackend`): per-op
+  dispatch with cache probe before execution / insert-after for marked
+  candidates (§4.3), late-bound physical impls (§4.2), inter-operator
+  parallelism via a bounded thread pool, vmap variant batching, and
+  intra-wave preemption polls;
+* ``"jax"`` (:class:`~repro.core.backends.JaxSegmentBackend`): the whole
+  segment traced into ONE jitted program (tunable constants hoisted to
+  arguments), reused across structurally identical plans through the
+  shared :class:`~repro.core.plan_cache.PlanCache`.
+
+Invariants preserved across backends: liveness-driven freeing of
+intermediates no later than segment boundaries, and cooperative
+preemption — when the caller installs a ``preempt_check``, the runtime
+polls it at every segment/wave boundary (and between op completions
+inside wide python waves), and, if it fires, abandons the run with
+:class:`ExecutionPreempted` carrying every already-completed intermediate
+(the *salvage*); a re-run passes that salvage back as ``preloaded`` so no
+finished work executes twice, and a liveness rule (yield only after ≥1
+newly-executed op) guarantees progress under repeated preemption.  This
+is how the multi-tenant service yields a low-priority super-batch to
+freshly queued higher-priority work without losing progress.
 
 ``Base`` / ``Base_par`` executors for the paper's baselines live in
 benchmarks (they bypass the optimizer entirely).
@@ -33,7 +43,8 @@ from typing import Any, Callable, Optional, Sequence
 
 from .cache import IntermediateCache
 from .dag import CONST, LazyOp, LazyRef
-from .scheduler import Plan
+from .plan_cache import PlanCache
+from .scheduler import Plan, Segment
 from .selection import PhysicalImpl, reference_impl, vmap_group_for
 
 
@@ -98,18 +109,30 @@ class Runtime:
                  parallel: bool = True,
                  preloaded: Optional[dict] = None,
                  preempt_check: Optional[Callable[[], bool]] = None,
-                 sig_tenant: Optional[dict] = None):
+                 sig_tenant: Optional[dict] = None,
+                 plan_cache: Optional[PlanCache] = None,
+                 backends: Optional[dict] = None,
+                 compiled_segments: bool = True):
         self.cache = cache
         self.cache_candidates = cache_candidates or set()
         self.parallel = parallel
         # sig → outputs tuple salvaged from a preempted run of this DAG
         self.preloaded = preloaded or {}
-        # polled at wave boundaries; True → raise ExecutionPreempted
+        # polled at segment/wave boundaries; True → raise ExecutionPreempted
         self.preempt_check = preempt_check
         # sig → tenant owning the op (multi-tenant cache charge accounting)
         self.sig_tenant = sig_tenant or {}
+        # segment kind → ExecutionBackend; long-lived callers (the service)
+        # inject a shared set so the plan cache spans tenants and runs
+        if backends is None:
+            from .backends import make_backends   # lazy: avoids a cycle
+            backends = make_backends(plan_cache,
+                                     compiled=compiled_segments)
+        self.backends = backends
         self._values: dict[str, Any] = {}      # "sig:index" -> value
         self._keys_by_sig: dict[str, list[str]] = {}   # sig -> stored keys
+        self._skips: set = set()               # resume-skippable ops
+        self._pool: Optional[ThreadPoolExecutor] = None
         self._lock = threading.Lock()
 
     # ------------------------------------------------------------------
@@ -134,23 +157,78 @@ class Runtime:
                 if key not in keys:
                     keys.append(key)
 
+    # -- shared backend helpers (both backends mutate runtime state
+    # through these, so the semantics live in exactly one place) --------
+    def _mark_salvaged(self, op: LazyOp, report: RunReport) -> None:
+        """Record an op restored from (or skipped thanks to) preemption
+        salvage — completed work is never redone on a resume."""
+        with self._lock:
+            report.ops_salvaged += 1
+            report.sig_source[op.signature] = "salvage"
+
+    def _free_wave(self, wave) -> None:
+        """Liveness freeing: drop dead intermediates by their exact
+        per-signature key lists (prefix/equality scans can collide and
+        never matched the "sig" form, which is never stored)."""
+        with self._lock:
+            for sig in wave.free_after:
+                for key in self._keys_by_sig.pop(sig, ()):
+                    self._values.pop(key, None)
+
+    def _try_cache_hit(self, op: LazyOp, report: RunReport
+                       ) -> Optional[tuple]:
+        """ONE tenant-aware intermediate-cache probe; on a hit the value
+        is stored and attributed (hit count, sig_source, cross-tenant
+        accounting inside the cache) in a single place — every backend's
+        probe goes through here so the attribution can never drift."""
+        if self.cache is None or not op.cacheable:
+            return None
+        sig = op.signature
+        hit = self.cache.get(sig, tenant=self.sig_tenant.get(sig))
+        if hit is None:
+            return None
+        self._store(op, hit)
+        with self._lock:
+            report.ops_from_cache += 1
+            report.sig_source[sig] = "cache"
+        return hit
+
+    def _run_ops_parallel(self, todo: list, selection: dict,
+                          report: RunReport) -> None:
+        """Execute mutually independent ops — on the bounded pool when the
+        plan allows, with cooperative-preemption polls between op
+        completions (wide waves can run for many seconds); queued ops are
+        cancelled on a yield, in-flight ones drained, and everything
+        finished goes into the salvage."""
+        pool = self._pool
+        if pool is not None and len(todo) > 1:
+            pending = {pool.submit(self._run_op, op, selection, report)
+                       for op in todo}
+            while pending:
+                done, pending = _fwait(pending,
+                                       return_when=FIRST_COMPLETED)
+                for f in done:
+                    f.result()
+                if pending and self._should_yield(report):
+                    running = [f for f in pending if not f.cancel()]
+                    for f in running:
+                        f.result()
+                    raise self._preempted(report)
+        else:
+            for i, op in enumerate(todo):
+                if i and self._should_yield(report):
+                    raise self._preempted(report)
+                self._run_op(op, selection, report)
+
     def _run_op(self, op: LazyOp, selection: dict, report: RunReport) -> None:
         sig = op.signature
         if sig in self.preloaded:
             # salvaged from a preempted run — completed work is never redone
             self._store(op, self.preloaded[sig])
-            with self._lock:
-                report.ops_salvaged += 1
-                report.sig_source[sig] = "salvage"
+            self._mark_salvaged(op, report)
             return
-        if self.cache is not None and op.cacheable:
-            hit = self.cache.get(sig, tenant=self.sig_tenant.get(sig))
-            if hit is not None:
-                self._store(op, hit)
-                with self._lock:
-                    report.ops_from_cache += 1
-                    report.sig_source[sig] = "cache"
-                return
+        if self._try_cache_hit(op, report) is not None:
+            return
         inputs = self._gather_inputs(op)
         fn = self._resolve_impl(op, selection)
         try:
@@ -184,10 +262,8 @@ class Runtime:
         for op in wave_ops:
             reg = vmap_group_for(op.op_name)
             impl = selection.get(op.signature)
-            cached = (self.cache is not None and op.cacheable
-                      and op.signature in self.cache)
             if reg is None or impl is None or impl.backend != "jax" \
-                    or not impl.vmappable or cached \
+                    or not impl.vmappable \
                     or op.signature in self.preloaded:
                 rest.append(op)
                 continue
@@ -197,20 +273,32 @@ class Runtime:
             if len(ops_) < 2:
                 rest.extend(ops_)
                 continue
+            todo = []
+            for op in ops_:
+                # ONE tenant-aware get, result used directly: a raw
+                # membership probe would skip cross-tenant hit attribution
+                # for vmap-grouped ops and could race an eviction between
+                # the probe and the use
+                if self._try_cache_hit(op, report) is not None:
+                    continue
+                todo.append(op)
+            if len(todo) < 2:
+                rest.extend(todo)   # no group left worth one vmapped call
+                continue
             _, batch_fn = vmap_group_for(op_name)
-            inputs = self._gather_inputs(ops_[0])
-            outs = batch_fn(ops_, inputs)
-            for op, out in zip(ops_, outs):
+            inputs = self._gather_inputs(todo[0])
+            outs = batch_fn(todo, inputs)
+            for op, out in zip(todo, outs):
                 self._store(op, out)
                 if (self.cache is not None and op.cacheable
                         and op.signature in self.cache_candidates):
                     self.cache.put(op.signature, out,
                                    tenant=self.sig_tenant.get(op.signature))
             with self._lock:
-                report.ops_executed += len(ops_)
+                report.ops_executed += len(todo)
                 report.per_backend["jax-vmap"] = \
-                    report.per_backend.get("jax-vmap", 0) + len(ops_)
-                for op in ops_:
+                    report.per_backend.get("jax-vmap", 0) + len(todo)
+                for op in todo:
                     report.sig_source[op.signature] = "jax-vmap"
         return rest
 
@@ -260,63 +348,33 @@ class Runtime:
     def execute(self, sinks: Sequence[LazyRef], plan: Plan,
                 selection: dict[str, PhysicalImpl]) -> tuple[list, RunReport]:
         report = RunReport()
-        skips = self._resume_skips(plan, sinks) if self.preloaded else set()
+        self._skips = (self._resume_skips(plan, sinks)
+                       if self.preloaded else set())
         t0 = time.perf_counter()
-        pool: Optional[ThreadPoolExecutor] = None
+        self._pool = None
         if self.parallel and plan.inter_op_parallelism > 1:
-            pool = ThreadPoolExecutor(max_workers=plan.inter_op_parallelism)
+            self._pool = ThreadPoolExecutor(
+                max_workers=plan.inter_op_parallelism)
+        # plans from older callers (or hand-built tests) may predate
+        # segmentation — treat the whole wave list as one per-op segment
+        segments = plan.segments or [Segment(kind="python",
+                                             waves=list(plan.waves))]
+        python_backend = self.backends["python"]
         try:
-            for wave in plan.waves:
-                # cooperative yield point at the wave boundary — the salvage
-                # carries every completed intermediate to the requeued re-run
+            for seg in segments:
+                # cooperative yield point at the segment boundary — the
+                # salvage carries every completed intermediate to the
+                # requeued re-run (python segments add wave/op-level polls)
                 if self._should_yield(report):
                     raise self._preempted(report)
-                report.waves += 1
-                wave_ops = []
-                for op in wave.ops:
-                    if op.signature in skips:
-                        # completed before the preempting yield; its output
-                        # is dead on this resume — never re-executed
-                        with self._lock:
-                            report.ops_salvaged += 1
-                            report.sig_source[op.signature] = "salvage"
-                        continue
-                    wave_ops.append(op)
-                todo = self._batch_variants(wave_ops, selection, report)
-                if pool is not None and len(todo) > 1:
-                    # intra-wave yield points: wide waves (e.g. 16 model
-                    # fits) can run for many seconds, so also poll between
-                    # op completions — queued ops are cancelled, in-flight
-                    # ones drained, everything finished goes into salvage
-                    pending = {pool.submit(self._run_op, op, selection,
-                                           report) for op in todo}
-                    while pending:
-                        done, pending = _fwait(pending,
-                                               return_when=FIRST_COMPLETED)
-                        for f in done:
-                            f.result()
-                        if pending and self._should_yield(report):
-                            running = [f for f in pending if not f.cancel()]
-                            for f in running:
-                                f.result()
-                            raise self._preempted(report)
-                else:
-                    for i, op in enumerate(todo):
-                        if i and self._should_yield(report):
-                            raise self._preempted(report)
-                        self._run_op(op, selection, report)
-                # free dead intermediates — exact per-signature key lists
-                # (prefix/equality scans can collide and never matched the
-                # "sig" form, which is never stored)
-                with self._lock:
-                    for sig in wave.free_after:
-                        for key in self._keys_by_sig.pop(sig, ()):
-                            self._values.pop(key, None)
+                backend = self.backends.get(seg.kind, python_backend)
+                backend.execute_segment(self, seg, selection, report)
         finally:
-            if pool is not None:
+            if self._pool is not None:
                 # cancel queued work and wait for in-flight ops so an error
                 # mid-wave can't leak threads still mutating self._values
-                pool.shutdown(wait=True, cancel_futures=True)
+                self._pool.shutdown(wait=True, cancel_futures=True)
+                self._pool = None
         with self._lock:
             results = [self._values[r.signature] for r in sinks]
         report.wall_time_s = time.perf_counter() - t0

@@ -18,6 +18,15 @@ and letting the XLA scheduler overlap it.
 Liveness-based freeing: the planner emits, per wave, the set of intermediate
 signatures whose last consumer has now run, so the runtime can drop them
 (memory management, paper §3).
+
+Segment partitioning: after waves are laid out, contiguous runs of waves
+whose every op selected a *traceable* jax-tier implementation are grouped
+into maximal backend-homogeneous :class:`Segment`\\ s.  A ``"jax"`` segment
+is executed by the JaxSegmentBackend as ONE jitted program (per-op python
+dispatch disappears inside it); everything else stays a ``"python"``
+segment executed by the per-op threaded backend.  Cache probes, liveness
+freeing and preemption yields happen at segment boundaries, so segmenting
+changes dispatch granularity, never semantics.
 """
 
 from __future__ import annotations
@@ -39,12 +48,25 @@ class Wave:
 
 
 @dataclass
+class Segment:
+    """A contiguous run of waves homogeneous in execution backend."""
+    kind: str            # "jax" (whole-segment jit) | "python" (per-op)
+    waves: list          # contiguous slice of Plan.waves
+    start: int = 0       # index of the first wave within the plan
+
+    @property
+    def n_ops(self) -> int:
+        return sum(len(w.ops) for w in self.waves)
+
+
+@dataclass
 class Plan:
     waves: list          # list[Wave]
     order: list          # full topo order (for sequential modes)
     inter_op_parallelism: int = 1
     intra_op_threads: int = 1
     est_peak_mem: int = 0
+    segments: list = field(default_factory=list)   # list[Segment]
 
     @property
     def n_ops(self) -> int:
@@ -57,6 +79,10 @@ class SchedulerConfig:
     hardware_threads: int = 0           # 0 → os.cpu_count()
     max_wave_ops: int = 64
     enable_inter_op: bool = True
+    # whether jax segments will execute as ONE jitted program (the caller's
+    # runtime setting): affects only the est_peak_mem the memory gate
+    # reserves — a compiled segment defers per-wave freeing to its boundary
+    compiled_segments: bool = True
 
 
 def plan(sinks: Sequence[LazyRef],
@@ -163,5 +189,57 @@ def plan(sinks: Sequence[LazyRef],
     inter = min(widest, threads) if config.enable_inter_op else 1
     intra = max(1, threads // max(inter, 1))
 
+    segments = partition_segments(waves, selection)
+    # a compiled jax segment returns every op's outputs at once and only
+    # applies per-wave liveness freeing at the segment boundary, so its
+    # true peak is the sum of ALL its output bytes — raise the estimate
+    # the service memory gate reserves accordingly.  Per-op runtimes
+    # (compiled_segments=False) keep per-wave freeing, where the bump
+    # would over-reserve and needlessly serialize concurrent super-batches
+    if config.compiled_segments:
+        for seg in segments:
+            if seg.kind != "jax":
+                continue
+            seg_bytes = sum(op.meta.out_bytes if op.meta else 0
+                            for w in seg.waves for op in w.ops)
+            peak = max(peak, seg_bytes)
+
     return Plan(waves=waves, order=order, inter_op_parallelism=inter,
-                intra_op_threads=intra, est_peak_mem=peak)
+                intra_op_threads=intra, est_peak_mem=peak,
+                segments=segments)
+
+
+def partition_segments(waves: Sequence[Wave],
+                       selection: dict[str, PhysicalImpl]) -> list[Segment]:
+    """Group contiguous waves into maximal backend-homogeneous segments.
+
+    A wave is jit-compilable iff every op in it selected a traceable
+    jax-tier implementation; contiguous compilable waves merge into one
+    ``"jax"`` segment.  One-op jax runs are demoted to ``"python"`` —
+    a single op gains nothing from whole-segment tracing (its impl is
+    typically already jitted) but would still occupy a plan-cache entry."""
+
+    def wave_kind(wave: Wave) -> str:
+        for op in wave.ops:
+            impl = selection.get(op.signature)
+            if impl is None or impl.backend != "jax" or not impl.traceable:
+                return "python"
+        return "jax" if wave.ops else "python"
+
+    segments: list[Segment] = []
+    for i, wave in enumerate(waves):
+        kind = wave_kind(wave)
+        if segments and segments[-1].kind == kind:
+            segments[-1].waves.append(wave)
+        else:
+            segments.append(Segment(kind=kind, waves=[wave], start=i))
+    # demote trivial jax segments, then re-merge adjacent python runs
+    merged: list[Segment] = []
+    for seg in segments:
+        if seg.kind == "jax" and seg.n_ops < 2:
+            seg.kind = "python"
+        if merged and merged[-1].kind == seg.kind:
+            merged[-1].waves.extend(seg.waves)
+        else:
+            merged.append(seg)
+    return merged

@@ -67,6 +67,10 @@ class PhysicalImpl:
     fidelity: str = "exact"      # "exact" | "approx"
     platforms: tuple = ("cpu", "tpu", "gpu")
     vmappable: bool = False      # homogeneous variants can batch via vmap
+    # pure jnp function of (traced inputs, spec): safe to trace into a
+    # whole-segment jit program by the JaxSegmentBackend.  False for impls
+    # doing IO, host-side numpy, or data-dependent control flow.
+    traceable: bool = False
 
     def est_time(self, op: LazyOp) -> float:
         prof = BACKENDS[self.backend]
@@ -88,12 +92,12 @@ _REGISTRY: dict[str, list[PhysicalImpl]] = {}
 
 def register_impl(op_name: str, backend: str, *, flops_fn=None, bytes_fn=None,
                   fidelity: str = "exact", platforms=("cpu", "tpu", "gpu"),
-                  vmappable: bool = False):
+                  vmappable: bool = False, traceable: bool = False):
     def deco(fn):
         _REGISTRY.setdefault(op_name, []).append(PhysicalImpl(
             op_name=op_name, backend=backend, fn=fn, flops_fn=flops_fn,
             bytes_fn=bytes_fn, fidelity=fidelity, platforms=platforms,
-            vmappable=vmappable))
+            vmappable=vmappable, traceable=traceable))
         return fn
     return deco
 

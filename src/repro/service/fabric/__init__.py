@@ -15,8 +15,9 @@ successors, and fabric-level telemetry aggregation.  See
         results, report = fabric.session("agent-0").submit(batch).result()
 """
 
-from .envelope import (CodecError, FabricJobReport, JobEnvelope,
-                       ResultEnvelope, decode_job, decode_result, encode_job,
+from .envelope import (CancelEnvelope, CodecError, FabricJobReport,
+                       JobEnvelope, ResultEnvelope, decode_cancel,
+                       decode_job, decode_result, encode_cancel, encode_job,
                        encode_result, routing_key_for)
 from .fabric import ShardedStratum, StratumFabric
 from .ring import ConsistentHashRing
@@ -25,9 +26,10 @@ from .telemetry import FabricTelemetry
 from .transport import LocalTransport, Transport, TransportError
 
 __all__ = [
-    "CodecError", "ConsistentHashRing", "FabricJobReport", "FabricTelemetry",
-    "JobEnvelope", "LocalTransport", "NoShardsError", "ResultEnvelope",
-    "ShardRouter", "ShardedStratum", "StratumFabric", "Transport",
-    "TransportError", "decode_job", "decode_result", "encode_job",
-    "encode_result", "routing_key_for",
+    "CancelEnvelope", "CodecError", "ConsistentHashRing", "FabricJobReport",
+    "FabricTelemetry", "JobEnvelope", "LocalTransport", "NoShardsError",
+    "ResultEnvelope", "ShardRouter", "ShardedStratum", "StratumFabric",
+    "Transport", "TransportError", "decode_cancel", "decode_job",
+    "decode_result", "encode_cancel", "encode_job", "encode_result",
+    "routing_key_for",
 ]

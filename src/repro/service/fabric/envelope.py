@@ -48,6 +48,7 @@ _MAGIC = b"STRF"
 _VERSION = 1
 _JOB_KIND = 0x01
 _RESULT_KIND = 0x02
+_CANCEL_KIND = 0x03
 
 ROUTING_POLICIES = ("sources", "batch")
 
@@ -76,6 +77,20 @@ class JobEnvelope:
     routing_key: str
     batch: PipelineBatch
     attempt: int = 0              # bumped by failover requeues
+
+
+@dataclass
+class CancelEnvelope:
+    """Client-side request to remove a still-queued job from its shard.
+
+    Crossing the wire (rather than only abandoning the local future) is
+    what makes cancellation *shard-aware*: the owning shard's fair queue
+    drops the job, freeing its admission slot and dispatch capacity.  A
+    job already dispatched is not preempted — the shard simply ignores
+    the cancel and the ordinary ResultEnvelope resolves the future."""
+    envelope_id: str
+    tenant: str
+    attempt: int = 0              # must match the in-flight attempt
 
 
 @dataclass
@@ -186,6 +201,24 @@ def decode_job(data: bytes) -> JobEnvelope:
                        priority=d["priority"], routing_key=d["routing_key"],
                        batch=PipelineBatch(sinks, d["names"]),
                        attempt=d["attempt"])
+
+
+def encode_cancel(env: CancelEnvelope) -> bytes:
+    payload = pickle.dumps(
+        {"envelope_id": env.envelope_id, "tenant": env.tenant,
+         "attempt": env.attempt},
+        protocol=pickle.HIGHEST_PROTOCOL)
+    return _frame(_CANCEL_KIND, payload)
+
+
+def decode_cancel(data: bytes) -> CancelEnvelope:
+    payload = _unframe(data, _CANCEL_KIND)
+    try:
+        d = pickle.loads(payload)
+    except Exception as e:  # noqa: BLE001
+        raise CodecError(f"cancel payload does not deserialize: {e!r}") from e
+    return CancelEnvelope(envelope_id=d["envelope_id"], tenant=d["tenant"],
+                          attempt=d.get("attempt", 0))
 
 
 def encode_result(env: ResultEnvelope) -> bytes:

@@ -10,7 +10,14 @@ arrived.  Three flows meet here:
   :class:`~.transport.TransportError` marks the shard dead and retries on
   the ring successor, so a submission never observes a half-dead fabric;
 * **result** — decode the frame, pop the pending entry (first reply wins;
-  duplicates from failover races are dropped), resolve the future;
+  duplicates from failover races are dropped), resolve the future —
+  a ``CancelledError`` reply (the shard honored a CancelEnvelope)
+  resolves it as *cancelled*, not failed;
+* **cancel** — ``cancel(envelope_id)`` encodes a
+  :class:`~.envelope.CancelEnvelope` to the owning shard, whose transport
+  removes the still-queued job from the shard's fair queue (shard-aware
+  cancellation: the admission slot and dispatch capacity free up, instead
+  of only abandoning the local future);
 * **membership** — ``add_shard`` extends the ring (only ~K/N keys remap,
   see ``ring.py``), ``drain_shard`` removes a shard from the ring, waits
   for its in-flight replies, then closes it; ``fail_shard`` removes it
@@ -39,8 +46,11 @@ from typing import Optional
 # routing key ever seen
 _LOCALITY_KEYS_MAX = 65536
 
+from concurrent.futures import CancelledError
+
 from ..session import PipelineFuture
-from .envelope import (JobEnvelope, decode_result, encode_job)
+from .envelope import (CancelEnvelope, JobEnvelope, decode_result,
+                       encode_cancel, encode_job)
 from .ring import ConsistentHashRing
 from .transport import Transport, TransportError
 
@@ -76,6 +86,8 @@ class ShardRouter:
         self.shards_added = 0
         self.shards_drained = 0
         self.reply_codec_errors = 0
+        self.cancels_sent = 0
+        self.cancels_confirmed = 0
 
     # -- membership --------------------------------------------------------
     def add_shard(self, shard_id: str, transport: Transport) -> None:
@@ -145,9 +157,42 @@ class ShardRouter:
         if future is None:
             future = PipelineFuture(envelope.envelope_id, envelope.tenant,
                                     envelope.priority)
+            # shard-aware cancellation: future.cancel() sends a
+            # CancelEnvelope to the owning shard instead of only
+            # abandoning the local handle
+            eid = envelope.envelope_id
+            future._cancel_hook = lambda _jid: self.cancel(eid)
         pending = _Pending(envelope, future, shard_id="")
         self._route(pending, is_requeue=False)
         return future
+
+    def cancel(self, envelope_id: str) -> bool:
+        """Ask the shard owning ``envelope_id`` to drop the still-queued
+        job.  Returns True when the shard synchronously confirmed removal
+        (in-process transports); the future itself resolves as cancelled
+        via the CancelledError reply either way.  False when the job is
+        unknown, already dispatched, or the transport cannot cancel."""
+        with self._lock:
+            pending = self._pending.get(envelope_id)
+            if pending is None:
+                return False
+            transport = self._transports.get(pending.shard_id)
+            if transport is None:
+                return False
+            data = encode_cancel(CancelEnvelope(
+                envelope_id=envelope_id, tenant=pending.envelope.tenant,
+                attempt=pending.envelope.attempt))
+            self.cancels_sent += 1
+        # outside the lock: an in-process shard replies synchronously and
+        # the reply path (_on_result) re-enters the router lock
+        try:
+            confirmed = bool(transport.send_cancel(data))
+        except (TransportError, NotImplementedError):
+            return False
+        if confirmed:
+            with self._lock:
+                self.cancels_confirmed += 1
+        return confirmed
 
     def _route(self, pending: _Pending, is_requeue: bool) -> None:
         env = pending.envelope
@@ -249,6 +294,11 @@ class ShardRouter:
             return
         if env.ok:
             pending.future._set_result(env.results, env.report)
+        elif isinstance(env.error, CancelledError):
+            # the shard honored a CancelEnvelope: resolve as *cancelled*
+            # (result() raises CancelledError, cancelled() is True) rather
+            # than as a job failure
+            pending.future._set_cancelled()
         else:
             pending.future._set_exception(env.error)
 

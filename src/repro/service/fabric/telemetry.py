@@ -52,6 +52,8 @@ class FabricTelemetry:
             "ops_deduped_cross_agent": g["ops_deduped_cross_agent"],
             "preemptions": g["preemptions"],
         }
+        if "plan_cache" in g:
+            row["plan_cache"] = g["plan_cache"]
         self._retired[shard_id] = (svc.telemetry.snapshot(), row)
 
     # -- per-tenant view (Session.telemetry compatibility) -----------------
@@ -81,6 +83,8 @@ class FabricTelemetry:
             if "cache_cross_tenant_hits" in g:
                 out[shard_id]["cache_cross_tenant_hits"] = \
                     g["cache_cross_tenant_hits"]
+            if "plan_cache" in g:
+                out[shard_id]["plan_cache"] = g["plan_cache"]
         return out
 
     def global_snapshot(self) -> dict:
@@ -97,6 +101,8 @@ class FabricTelemetry:
             "shards_added": r.shards_added,
             "shards_drained": r.shards_drained,
             "reply_codec_errors": r.reply_codec_errors,
+            "cancels_sent": r.cancels_sent,
+            "cancels_confirmed": r.cancels_confirmed,
             "super_batches": sum(s["super_batches"]
                                  for s in per_shard.values()),
             "jobs_coalesced": sum(s["jobs_coalesced"]
@@ -106,6 +112,19 @@ class FabricTelemetry:
             "preemptions": sum(s["preemptions"]
                                for s in per_shard.values()),
         }
+        # compiled-plan reuse fabric-wide: signature-locality routing means
+        # repeat structures land on the shard already holding the compile,
+        # so this rate is the fabric's compiled-plan locality measure
+        pc_rows = [s["plan_cache"] for s in per_shard.values()
+                   if "plan_cache" in s]
+        if pc_rows:
+            hits = sum(r["hits"] for r in pc_rows)
+            misses = sum(r["misses"] for r in pc_rows)
+            totals["plan_cache_hits"] = hits
+            totals["plan_cache_misses"] = misses
+            totals["plan_cache_entries"] = sum(r["entries"] for r in pc_rows)
+            totals["plan_cache_hit_rate"] = (
+                hits / (hits + misses) if hits + misses else 0.0)
         totals["per_shard"] = per_shard
         return totals
 

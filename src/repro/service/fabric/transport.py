@@ -29,8 +29,8 @@ from abc import ABC, abstractmethod
 from typing import Callable, Optional
 
 from ..queue import AdmissionError
-from .envelope import (ResultEnvelope, decode_job, encode_result,
-                       FabricJobReport)
+from .envelope import (ResultEnvelope, decode_cancel, decode_job,
+                       encode_result, FabricJobReport)
 
 
 class TransportError(ConnectionError):
@@ -53,6 +53,17 @@ class Transport(ABC):
     def set_on_result(self, cb: Callable[[bytes], None]) -> None:
         """Register the callback receiving encoded ResultEnvelope frames."""
 
+    def send_cancel(self, data: bytes) -> bool:
+        """Deliver one encoded CancelEnvelope frame to the shard.
+
+        Returns True when the shard *synchronously* confirmed removal of
+        the still-queued job (possible in-process); a remote transport
+        returns False and delivers the confirmation — a ResultEnvelope
+        carrying ``CancelledError`` — asynchronously like any reply.
+        Transports predating cancellation simply don't override this, and
+        the router degrades to abandoning the local future only."""
+        raise NotImplementedError("transport does not support cancellation")
+
     @abstractmethod
     def close(self) -> None:
         """Orderly shutdown (drain-friendly); further sends raise."""
@@ -73,8 +84,14 @@ class LocalTransport(Transport):
         self._lock = threading.Lock()
         self._dead = False
         self._closed = False
+        # envelope_id -> (shard-local PipelineFuture, attempt), kept so a
+        # CancelEnvelope can reach into the shard's queue; entries leave
+        # on the terminal reply
+        self._inflight: dict[str, tuple] = {}
         self.jobs_received = 0
         self.results_sent = 0
+        self.cancels_received = 0
+        self.cancels_honored = 0
         self.bytes_in = 0
         self.bytes_out = 0
 
@@ -105,8 +122,35 @@ class LocalTransport(Transport):
                 attempt=env.attempt))
             return
         envelope_id, tenant, attempt = env.envelope_id, env.tenant, env.attempt
+        with self._lock:
+            self._inflight[envelope_id] = (future, attempt)
         future.add_done_callback(
             lambda f: self._complete(f, envelope_id, tenant, attempt))
+
+    def send_cancel(self, data: bytes) -> bool:
+        """Shard-aware cancellation: decode, find the local future, remove
+        the job from this shard's fair queue if still queued.  The queue
+        removal fires the future's done callback with ``CancelledError``,
+        which travels back as an ordinary ResultEnvelope — the client-side
+        router resolves the fabric future as *cancelled* on receipt."""
+        with self._lock:
+            if self._dead or self._closed:
+                raise TransportError(f"shard {self.shard_id!r} unreachable")
+            self.cancels_received += 1
+            self.bytes_in += len(data)
+        env = decode_cancel(data)      # the serialization seam, server side
+        with self._lock:
+            entry = self._inflight.get(env.envelope_id)
+        if entry is None:
+            return False               # already answered (or never arrived)
+        future, attempt = entry
+        if env.attempt != attempt:
+            return False               # stale cancel for a superseded try
+        honored = bool(future.cancel())
+        if honored:
+            with self._lock:
+                self.cancels_honored += 1
+        return honored
 
     def close(self) -> None:
         with self._lock:
@@ -122,6 +166,8 @@ class LocalTransport(Transport):
     # -- shard-side completion path ---------------------------------------
     def _complete(self, future, envelope_id: str, tenant: str,
                   attempt: int) -> None:
+        with self._lock:
+            self._inflight.pop(envelope_id, None)
         try:
             results, report = future.result(timeout=0)
             wire_report = FabricJobReport(

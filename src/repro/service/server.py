@@ -43,8 +43,10 @@ from dataclasses import dataclass
 from typing import Optional, Sequence
 
 from ..core.api import ALL_FEATURES, Stratum
+from ..core.backends import make_backends
 from ..core.cache import IntermediateCache
 from ..core.fusion import PipelineBatch
+from ..core.plan_cache import PlanCache
 from ..core.runtime import ExecutionError, ExecutionPreempted, Runtime
 from .coalesce import SuperBatch, coalesce, cross_agent_dedup, reachable_sigs
 from .priority import Priority
@@ -81,6 +83,12 @@ class ServiceConfig:
     # shared-cache cross-tenant arbitration
     cache_arbitration: str = "quota"     # "quota" | "lru"
     cache_tenant_quota_fraction: float = 0.5
+    # compiled plan-segment backends: jax-homogeneous segments execute as
+    # one jitted program, cached per shard by structural signature — so
+    # the thousands of structurally identical DAGs an agentic search
+    # emits compile once; False → per-op dispatch only (bench baseline)
+    compiled_segments: bool = True
+    plan_cache_entries: int = 256
     # concurrency
     n_executors: int = 2
     # identity when the service runs as one shard of a sharded fabric
@@ -124,6 +132,14 @@ class StratumService:
                 spill_dir=config.spill_dir,
                 arbitration=config.cache_arbitration,
                 tenant_quota_fraction=config.cache_tenant_quota_fraction)
+        # compiled-plan cache, one per shard: every tenant's structurally
+        # identical plans share compiled segments, and signature-locality
+        # routing on the fabric turns into compiled-plan locality
+        self.plan_cache: Optional[PlanCache] = None
+        if config.compiled_segments:
+            self.plan_cache = PlanCache(capacity=config.plan_cache_entries)
+        self._backends = make_backends(self.plan_cache,
+                                       compiled=config.compiled_segments)
         # the optimizer: compile-only use of the existing session object,
         # sharing the service cache (Stratum(cache=...) injection)
         self._optimizer = Stratum(
@@ -132,14 +148,17 @@ class StratumService:
             enable=config.enable,
             hardware_threads=config.hardware_threads,
             jit_cache_dir=config.jit_cache_dir,
-            cache=self.cache)
+            cache=self.cache,
+            compiled_segments=config.compiled_segments,
+            plan_cache=self.plan_cache)
         self.queue = FairQueue(
             max_queued_total=config.max_queued_total,
             max_queued_per_tenant=config.max_queued_per_tenant,
             weights=config.priority_weights,
             aging_s=config.aging_s,
             priority_aware=config.priority_aware)
-        self.telemetry = ServiceTelemetry(cache=self.cache)
+        self.telemetry = ServiceTelemetry(cache=self.cache,
+                                          plan_cache=self.plan_cache)
         self._job_ids = itertools.count()
         self._running = False
         self._dispatcher: Optional[threading.Thread] = None
@@ -395,7 +414,8 @@ class StratumService:
                          parallel="parallel" in self.config.enable,
                          preloaded=preloaded,
                          preempt_check=self._preempt_check_for(live, band),
-                         sig_tenant=sig_tenant)
+                         sig_tenant=sig_tenant,
+                         backends=self._backends)
             results, run = rt.execute(sinks, plan, sel)
         except ExecutionPreempted as p:
             self._release_mem(need)

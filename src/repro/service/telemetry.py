@@ -90,10 +90,11 @@ def merge_tenant_snapshots(snapshots) -> dict:
 
 
 class ServiceTelemetry:
-    def __init__(self, cache=None) -> None:
+    def __init__(self, cache=None, plan_cache=None) -> None:
         self._lock = threading.Lock()
         self._tenants: dict[str, TenantStats] = {}
         self._cache = cache            # shared IntermediateCache (optional)
+        self._plan_cache = plan_cache  # shared PlanCache (optional)
         self.ops_deduped_cross_agent = 0   # global executions saved
         self.super_batches = 0
         self.jobs_coalesced = 0
@@ -182,6 +183,10 @@ class ServiceTelemetry:
                 str(k): v for k, v in arb["bytes_by_tenant"].items()}
             out["cache_evictions_by_tenant"] = {
                 str(k): v for k, v in arb["evictions_by_tenant"].items()}
+        if self._plan_cache is not None:
+            # compiled-plan reuse across the shard's tenants: hit rate is
+            # the fraction of segment executions that skipped tracing
+            out["plan_cache"] = self._plan_cache.snapshot()
         return out
 
     def report(self) -> str:
@@ -197,6 +202,12 @@ class ServiceTelemetry:
                 f"shared cache: cross-tenant hits="
                 f"{g['cache_cross_tenant_hits']} "
                 f"bytes_by_tenant={g['cache_bytes_by_tenant']}")
+        if "plan_cache" in g:
+            pc = g["plan_cache"]
+            lines.append(
+                f"plan cache: {pc['entries']} compiled segment(s) "
+                f"hit_rate={pc['hit_rate']:.2f} "
+                f"(compiles {pc['compiles']}, evictions {pc['evictions']})")
         for tenant, s in sorted(self.snapshot().items()):
             lines.append(
                 f"  {tenant}: jobs={s['jobs_completed']}/"

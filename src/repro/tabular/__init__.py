@@ -10,16 +10,16 @@ Importing this package registers all implementations with repro.core.
 
 from . import impls  # noqa: F401  (registration side effects)
 from . import lowerings  # noqa: F401
-from .ops import (concat, cv_score, elasticnet_fit, gbt_fit, grid_search,
-                  join, kfold_split, mean_of, metric, onehot, predict, project,
-                  read, ridge_fit, scale, string_encode, table_vectorizer,
-                  target_encode, datetime_encode, impute, svd_reduce,
-                  train_test_split)
+from .ops import (clip_outliers, concat, cv_score, elasticnet_fit, gbt_fit,
+                  grid_search, join, kfold_split, log1p, mean_of, metric,
+                  onehot, predict, project, read, ridge_fit, scale,
+                  string_encode, table_vectorizer, target_encode,
+                  datetime_encode, impute, svd_reduce, train_test_split)
 
 __all__ = [
     "read", "project", "concat", "join", "impute", "scale", "onehot",
     "string_encode", "target_encode", "datetime_encode", "table_vectorizer",
     "svd_reduce", "ridge_fit", "elasticnet_fit", "gbt_fit", "predict",
     "metric", "kfold_split", "train_test_split", "cv_score", "grid_search",
-    "mean_of",
+    "mean_of", "log1p", "clip_outliers",
 ]

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.dag import LazyOp
+from ..core.dag import LazyOp, declare_tunable
 from ..core.metadata import OpMetadata, TensorInfo, register_meta
 from ..core.rewrites import declare_columnwise
 from ..core.selection import register_impl
@@ -79,7 +79,7 @@ def project_py(op, ins):
     return (X[:, list(op.spec["cols"])].copy(),)
 
 
-@register_impl("project", "jax")
+@register_impl("project", "jax", traceable=True)
 def project_jax(op, ins):
     return (jnp.asarray(ins[0])[:, list(op.spec["cols"])],)
 
@@ -97,7 +97,7 @@ def concat_py(op, ins):
     return (np.hstack(arrs),)
 
 
-@register_impl("concat", "jax")
+@register_impl("concat", "jax", traceable=True)
 def concat_jax(op, ins):
     arrs = [jnp.asarray(x) if jnp.ndim(x) == 2 else
             jnp.asarray(x).reshape(len(x), -1) for x in ins]
@@ -145,7 +145,7 @@ def log1p_py(op, ins):
     return (np.log1p(np.maximum(X, 0.0)),)
 
 
-@register_impl("log1p", "jax")
+@register_impl("log1p", "jax", traceable=True)
 def log1p_jax(op, ins):
     X = jnp.asarray(ins[0], dtype=jnp.float32)
     return (jnp.log1p(jnp.maximum(X, 0.0)),)
@@ -160,7 +160,7 @@ def clip_py(op, ins):
     return (np.clip(X, lo, hi),)
 
 
-@register_impl("clip_outliers", "jax")
+@register_impl("clip_outliers", "jax", traceable=True)
 def clip_jax(op, ins):
     X = jnp.asarray(ins[0], dtype=jnp.float32)
     q = op.spec.get("q", 0.01)
@@ -193,7 +193,7 @@ def impute_fit_py(op, ins):
     return (np.nan_to_num(stats),)
 
 
-@register_impl("impute_fit", "jax")
+@register_impl("impute_fit", "jax", traceable=True)
 def impute_fit_jax(op, ins):
     X = jnp.asarray(ins[0], dtype=jnp.float32)
     stats = jnp.nanmean(X, axis=0)
@@ -208,7 +208,7 @@ def impute_apply_py(op, ins):
     return (X,)
 
 
-@register_impl("impute_apply", "jax")
+@register_impl("impute_apply", "jax", traceable=True)
 def impute_apply_jax(op, ins):
     stats = jnp.asarray(ins[0], dtype=jnp.float32)
     X = jnp.asarray(ins[1], dtype=jnp.float32)
@@ -238,7 +238,7 @@ def scaler_fit_py(op, ins):
     return (np.stack([mu, sd]),)
 
 
-@register_impl("scaler_fit", "jax")
+@register_impl("scaler_fit", "jax", traceable=True)
 def scaler_fit_jax(op, ins):
     X = jnp.asarray(ins[0], dtype=jnp.float32)
     mu = jnp.nanmean(X, axis=0)
@@ -254,7 +254,7 @@ def scaler_apply_py(op, ins):
     return (centered / stats[1],)    # second temporary
 
 
-@register_impl("scaler_apply", "jax")
+@register_impl("scaler_apply", "jax", traceable=True)
 def scaler_apply_jax(op, ins):
     stats = jnp.asarray(ins[0], dtype=jnp.float32)
     X = jnp.asarray(ins[1], dtype=jnp.float32)
@@ -294,7 +294,7 @@ def onehot_py(op, ins):
     return (np.hstack(pieces),)
 
 
-@register_impl("onehot", "jax")
+@register_impl("onehot", "jax", traceable=True)
 def onehot_jax(op, ins):
     X = jnp.nan_to_num(jnp.asarray(ins[0]))
     cards = op.spec["cards"]
@@ -372,7 +372,7 @@ def te_fit_py(op, ins):
     return ((sums + sm * prior) / (counts + sm),)
 
 
-@register_impl("target_encode_fit", "jax")
+@register_impl("target_encode_fit", "jax", traceable=True)
 def te_fit_jax(op, ins):
     x = jnp.nan_to_num(jnp.asarray(ins[0]).ravel())
     y = jnp.asarray(ins[1], dtype=jnp.float32).ravel()
@@ -392,7 +392,7 @@ def te_apply_py(op, ins):
     return (table[ids].reshape(-1, 1),)
 
 
-@register_impl("target_encode_apply", "jax")
+@register_impl("target_encode_apply", "jax", traceable=True)
 def te_apply_jax(op, ins):
     table = jnp.asarray(ins[0], dtype=jnp.float32)
     x = jnp.nan_to_num(jnp.asarray(ins[1]).ravel())
@@ -424,7 +424,7 @@ def dt_py(op, ins):
     return (np.stack([days, year, np.floor(month), dow], axis=1),)
 
 
-@register_impl("datetime_encode", "jax")
+@register_impl("datetime_encode", "jax", traceable=True)
 def dt_jax(op, ins):
     days = jnp.asarray(ins[0], dtype=jnp.float32).ravel()
     year = days / 365.25
@@ -447,7 +447,7 @@ def cleaner_py(op, ins):
     return (X,)
 
 
-@register_impl("cleaner", "jax")
+@register_impl("cleaner", "jax", traceable=True)
 def cleaner_jax(op, ins):
     X = jnp.asarray(ins[0], dtype=jnp.float32)
     return (jnp.where(jnp.isfinite(X), X, jnp.nan),)
@@ -478,13 +478,13 @@ def _svd_jax(X, k: int):
     return U[:, :k] * s[:k]
 
 
-@register_impl("svd_reduce", "jax")
+@register_impl("svd_reduce", "jax", traceable=True)
 def svd_jax(op, ins):
     X = jnp.asarray(ins[0], dtype=jnp.float32)
     return (_svd_jax(X, op.spec["k"]),)
 
 
-@register_impl("svd_reduce", "jax", fidelity="approx")
+@register_impl("svd_reduce", "jax", fidelity="approx", traceable=True)
 def svd_fd_jax(op, ins):
     """Frequent-Directions sketch (paper cites Huang'19) — approximate,
     selectable under stage=explore."""
@@ -592,7 +592,7 @@ def _ridge_solve(X, y, alpha):
     return jax.scipy.linalg.solve(XtX, Xty, assume_a="pos")
 
 
-@register_impl("ridge_fit", "jax", vmappable=True)
+@register_impl("ridge_fit", "jax", vmappable=True, traceable=True)
 def ridge_jax(op, ins):
     X = jnp.asarray(ins[0], dtype=jnp.float32)
     y = jnp.asarray(ins[1], dtype=jnp.float32).ravel()
@@ -666,7 +666,7 @@ def _enet_fista(X, y, alpha, l1r, iters: int):
     return jnp.concatenate([w / sd, bias[None]])
 
 
-@register_impl("elasticnet_fit", "jax", vmappable=True)
+@register_impl("elasticnet_fit", "jax", vmappable=True, traceable=True)
 def enet_jax(op, ins):
     X = jnp.asarray(ins[0], dtype=jnp.float32)
     y = jnp.asarray(ins[1], dtype=jnp.float32).ravel()
@@ -722,7 +722,7 @@ def linpred_py(op, ins):
     return (X @ w[:-1] + w[-1],)
 
 
-@register_impl("linear_predict", "jax")
+@register_impl("linear_predict", "jax", traceable=True)
 def linpred_jax(op, ins):
     w = jnp.asarray(ins[0], dtype=jnp.float32)
     X = jnp.asarray(ins[1], dtype=jnp.float32)
@@ -831,6 +831,15 @@ def gbt_prefix_meta(op, ins):
 # ===========================================================================
 
 from ..core.selection import register_vmap_group  # noqa: E402
+
+# tunable hyperparameters: scalar spec fields safe to trace as runtime
+# arguments of a compiled segment (never shapes, static loop bounds or
+# branch selectors) — excluded from structural signatures, so structurally
+# identical hyperparameter variants share one compiled program
+declare_tunable("ridge_fit", "alpha")
+declare_tunable("elasticnet_fit", "alpha", "l1_ratio")
+declare_tunable("clip_outliers", "q")
+declare_tunable("target_encode_fit", "smoothing")
 
 
 def _inputs_key(op):

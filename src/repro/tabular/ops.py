@@ -97,6 +97,17 @@ def datetime_encode(x: LazyRef) -> LazyRef:
     return LazyOp("datetime_encode", TRANSFORM, inputs=(x,)).out()
 
 
+def log1p(x: LazyRef) -> LazyRef:
+    return LazyOp("log1p", TRANSFORM, inputs=(x,)).out()
+
+
+def clip_outliers(x: LazyRef, q: float = 0.01) -> LazyRef:
+    """Quantile clipping; ``q`` is a tunable constant (declared in
+    impls.py), so refinements sweeping it share one compiled segment."""
+    return LazyOp("clip_outliers", TRANSFORM, spec={"q": float(q)},
+                  inputs=(x,)).out()
+
+
 def svd_reduce(x: LazyRef, k: int = 16, seed: int = 0) -> LazyRef:
     """Dimensionality reduction; has an 'approx' Frequent-Directions-style
     physical impl selectable under stage=explore annotations (paper §4.2)."""

@@ -96,11 +96,17 @@ def test_committed_baseline_contains_gated_smoke_metrics():
         baseline = json.load(f)
     assert baseline["sharded_smoke"]["speedup"] > 0
     assert baseline["service_smoke"]["speedup"] > 0
+    assert baseline["compiled_smoke"]["speedup"] > 0
     # the tentpole acceptance datapoint: >=2x aggregate throughput at
     # 4 shards / 16 agents with identical pipeline scores
     assert baseline["sharded"]["speedup"] >= 2.0
     assert baseline["sharded"]["scores_identical"] is True
     assert baseline["sharded"]["agents"] == 16
+    # compiled plan-segment acceptance: >=2x over per-op dispatch on the
+    # repeated-structure workload, identical scores, warm plan cache
+    assert baseline["compiled"]["speedup"] >= 2.0
+    assert baseline["compiled"]["scores_identical"] is True
+    assert baseline["compiled"]["plan_cache_hit_rate"] > 0.5
 
 
 @pytest.mark.parametrize("argv_exit", [(["--sections", "nope"], 1)])

@@ -467,3 +467,62 @@ def test_async_aide_search_on_fabric_with_shard_affinity():
         assert fab.telemetry.snapshot()["aide"]["jobs_completed"] == 2
     finally:
         fab.stop()
+
+
+# ---------------------------------------------------------------------------
+# shard-aware cancellation (CancelEnvelope through the codec)
+# ---------------------------------------------------------------------------
+
+def test_cancel_envelope_codec_round_trip():
+    from repro.service.fabric import (CancelEnvelope, decode_cancel,
+                                      encode_cancel)
+    env = CancelEnvelope(envelope_id="c-7", tenant="t", attempt=2)
+    out = decode_cancel(encode_cancel(env))
+    assert (out.envelope_id, out.tenant, out.attempt) == ("c-7", "t", 2)
+    with pytest.raises(CodecError):           # wrong kind
+        decode_cancel(encode_job(JobEnvelope(
+            envelope_id="x", tenant="t", priority=1, routing_key="k",
+            batch=_batch())))
+
+
+def test_fabric_cancel_removes_queued_work_on_owning_shard():
+    from concurrent.futures import CancelledError
+    fab = _fabric(n_shards=2, autostart=False)
+    try:
+        ses = fab.session("t")
+        futs = [ses.submit(_batch(name=f"p{i}", data_seed=i),
+                           affinity="pin") for i in range(3)]
+        shard_depths = {sid: row["queue_depth"] for sid, row in
+                        fab.telemetry.per_shard().items()}
+        owner = max(shard_depths, key=shard_depths.get)
+        assert shard_depths[owner] == 3       # all pinned to one shard
+        assert futs[1].cancel() is True       # still queued: removed
+        assert futs[1].cancelled()
+        with pytest.raises(CancelledError):
+            futs[1].result(timeout=5)
+        # the job is gone from the OWNING SHARD's queue, not just local
+        assert fab.telemetry.per_shard()[owner]["queue_depth"] == 2
+        assert fab.router.pending_count() == 2   # no leaked pending entry
+        g = fab.telemetry.global_snapshot()
+        assert g["cancels_sent"] == 1 and g["cancels_confirmed"] == 1
+        assert fab.telemetry.snapshot()["t"]["jobs_cancelled"] == 1
+        fab.start()
+        for f in (futs[0], futs[2]):          # survivors run to completion
+            res, _ = f.result(timeout=120)
+            assert all(np.isfinite(float(np.asarray(v)))
+                       for v in res.values())
+    finally:
+        fab.start()
+        fab.stop()
+
+
+def test_fabric_cancel_after_completion_returns_false():
+    fab = _fabric(n_shards=1)
+    try:
+        fut = fab.session("t").submit(_batch())
+        fut.result(timeout=120)
+        assert fut.cancel() is False          # nothing queued to remove
+        assert not fut.cancelled()
+        assert fab.router.cancel("no-such-envelope") is False
+    finally:
+        fab.stop()

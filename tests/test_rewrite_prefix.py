@@ -72,7 +72,9 @@ def test_moe_equal_groups_matches_ref():
 
 def test_variant_batching_exact():
     """H3.4: vmapped hyperparameter groups produce identical results to
-    individual execution."""
+    individual execution.  Variant vmap-batching lives on the per-op
+    python backend, so both runs pin ``compiled_segments=False``; a third
+    run through the compiled segment backend must agree too."""
     import repro.core.selection as sel
     x = T.read("uk_housing", 4000, seed=0)
     y = T.project(x, [0])
@@ -84,14 +86,23 @@ def test_variant_batching_exact():
     saved = dict(sel._VMAP_GROUPS)
     try:
         sel._VMAP_GROUPS.clear()
-        r0, rep0 = Stratum(memory_budget_bytes=1 << 30).run_batch(
+        r0, rep0 = Stratum(memory_budget_bytes=1 << 30,
+                           compiled_segments=False).run_batch(
             PipelineBatch([score, idx], ["s", "i"]))
         assert "jax-vmap" not in rep0.run.per_backend
     finally:
         sel._VMAP_GROUPS.update(saved)
-    r1, rep1 = Stratum(memory_budget_bytes=1 << 30).run_batch(
+    r1, rep1 = Stratum(memory_budget_bytes=1 << 30,
+                       compiled_segments=False).run_batch(
         PipelineBatch([score, idx], ["s", "i"]))
     assert rep1.run.per_backend.get("jax-vmap", 0) >= 6
     np.testing.assert_allclose(float(np.asarray(r0["s"])),
                                float(np.asarray(r1["s"])), atol=1e-5)
     assert int(np.asarray(r0["i"])) == int(np.asarray(r1["i"]))
+
+    r2, rep2 = Stratum(memory_budget_bytes=1 << 30).run_batch(
+        PipelineBatch([score, idx], ["s", "i"]))
+    assert rep2.run.per_backend.get("jax-seg", 0) > 0
+    np.testing.assert_allclose(float(np.asarray(r0["s"])),
+                               float(np.asarray(r2["s"])), atol=1e-5)
+    assert int(np.asarray(r0["i"])) == int(np.asarray(r2["i"]))
