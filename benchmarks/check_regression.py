@@ -15,7 +15,10 @@ Gated metrics (checked when present in the baseline):
   1 shard;
 * ``compiled_smoke.speedup`` — compiled plan-segment backends (warm
   structural plan cache) vs per-op dispatch on the repeated-structure
-  workload.
+  workload;
+* ``deadline_smoke.attainment_aware`` — fraction of deadline-carrying
+  probes meeting their SLO under mixed load with the deadline-aware
+  scheduler (a dimensionless rate, gated like the speedups).
 
 A metric present in the baseline but missing from the fresh artifact is a
 failure (the bench crashed or was skipped); a metric missing from the
@@ -35,6 +38,7 @@ GATES = (
     ("service_smoke", "speedup"),
     ("sharded_smoke", "speedup"),
     ("compiled_smoke", "speedup"),
+    ("deadline_smoke", "attainment_aware"),
 )
 
 

@@ -20,11 +20,16 @@ Sections:
                    backends (whole-segment jit + warm structural plan
                    cache) vs per-op dispatch (merged into
                    BENCH_service.json)
+  * deadline     — SLO attainment under mixed load: deadline-aware
+                   scheduling (EDF + tight-slack solo dispatch +
+                   shedding) vs deadline-blind, same priority band
+                   (merged into BENCH_service.json)
 
-``--smoke`` runs CI-sized variants of the ``service``, ``sharded`` and
-``compiled`` sections (smaller rows / agents / rounds) and records them
-under ``*_smoke`` keys, which ``benchmarks/check_regression.py`` gates
-against the committed baseline; the other sections ignore the flag.
+``--smoke`` runs CI-sized variants of the ``service``, ``sharded``,
+``compiled`` and ``deadline`` sections (smaller rows / agents / rounds)
+and records them under ``*_smoke`` keys, which
+``benchmarks/check_regression.py`` gates against the committed baseline;
+the other sections ignore the flag.
 
 Exit code: nonzero iff any requested section failed.  Failures include a
 section raising ``SystemExit`` mid-run (even ``SystemExit(0)`` — a section
@@ -94,6 +99,11 @@ def _sharded(args):
     return sharded_rows(smoke=args.smoke, out=args.out)
 
 
+def _deadline(args):
+    from .e2e_agentic import deadline_rows
+    return deadline_rows(smoke=args.smoke, out=args.out)
+
+
 def _compiled(args):
     from .e2e_agentic import compiled_rows
     return compiled_rows(smoke=args.smoke, out=args.out)
@@ -109,6 +119,7 @@ SECTIONS = {
     "priority": _priority,
     "sharded": _sharded,
     "compiled": _compiled,
+    "deadline": _deadline,
 }
 
 

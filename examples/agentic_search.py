@@ -3,23 +3,32 @@
 A deterministic AIDE-like agent explores preprocessing × model combinations
 and then fine-tunes the winner with a grid search.
 
-Two modes:
+All modes drive the SAME unified submission surface
+(:class:`repro.client.StratumClient`): pick a target with ``--target``.
 
-* default — the original synchronous path: one ``Stratum`` session, the
-  agent blocks on each ``run_batch``.
-* ``--service`` — the multi-tenant execution service: ``--agents N``
-  concurrent AIDE agents connect via non-blocking ``Session`` handles and
+* ``local`` (default) — the original synchronous path: one in-process
+  optimizing session; the agent blocks on each batch.
+* ``service`` — the multi-tenant execution service: ``--agents N``
+  concurrent AIDE agents connect via tenant-scoped client sessions and
   run :class:`AsyncAIDESearch`, which keeps drafting the next tree nodes
   while earlier batches are still executing.  Concurrent submissions are
   coalesced, cross-agent duplicates execute once, and all agents share one
-  intermediate cache.  Add ``--shards K`` to run the agents against the
-  sharded fabric instead (``ShardedStratum``): submissions cross the
-  serializable envelope boundary and each search tree is pinned to one
-  consistent-hash shard via ``shard_affinity``.
+  intermediate cache.
+* ``fabric`` — the same agents against the sharded fabric (``--shards K``
+  consistent-hash shards): submissions cross the serializable envelope
+  boundary and each search tree is pinned to one shard via
+  ``shard_affinity``.
+
+``--deadline-ms D`` attaches a deadline SLO to every *refinement*
+submission (the work the search frontier is blocked on): on a
+deadline-aware backend, refinements are scheduled EDF within their band
+and shed with ``DeadlineExceeded`` if the SLO expires — the run prints
+the attainment rate from telemetry afterwards.
 
     PYTHONPATH=src python examples/agentic_search.py [--rows 20000]
-    PYTHONPATH=src python examples/agentic_search.py --service --agents 4
-    PYTHONPATH=src python examples/agentic_search.py --service --shards 2
+    PYTHONPATH=src python examples/agentic_search.py --target service --agents 4
+    PYTHONPATH=src python examples/agentic_search.py --target fabric --shards 2 \
+        --deadline-ms 2000
 """
 
 import argparse
@@ -30,18 +39,18 @@ import numpy as np
 
 from repro.agents import AIDEAgent, AsyncAIDESearch, paper_workload_batches
 from repro.agents.aide import second_iteration_batch
-from repro.core import Stratum
-from repro.service import ShardedStratum, StratumService
+from repro.client import StratumConfig, connect
 
 
 def run_sync(args) -> None:
-    session = Stratum(memory_budget_bytes=4 << 30)
+    client = connect("local", StratumConfig.make(
+        memory_budget_bytes=4 << 30))
 
     # ---- iteration 1: 2 preprocessing strategies × 4 models --------------
     name, batch, ctx = next(iter(paper_workload_batches(
         n_rows=args.rows, cv_k=args.cv)))
     t0 = time.time()
-    results, report = session.run_batch(batch)
+    results, report = client.run_batch(batch)
     t1 = time.time() - t0
     print(f"iteration 1 ({len(results)} pipelines) in {t1:.2f}s")
     for k, v in sorted(results.items(), key=lambda kv: float(kv[1])):
@@ -54,7 +63,7 @@ def run_sync(args) -> None:
     print(f"\nbest: {best} → grid search")
     batch2, specs2 = second_iteration_batch(ctx["specs"][best])
     t0 = time.time()
-    results2, report2 = session.run_batch(batch2)
+    results2, report2 = client.run_batch(batch2)
     t2 = time.time() - t0
     best2 = min(results2, key=lambda k: float(np.asarray(results2[k])))
     print(f"iteration 2 ({len(results2)} grid points) in {t2:.2f}s "
@@ -63,23 +72,22 @@ def run_sync(args) -> None:
           f" (params {specs2[int(best2.split('_')[1])].params_dict()})")
 
 
-def run_service(args) -> None:
+def run_async(args) -> None:
     t0 = time.time()
-    if args.shards:
-        svc = ShardedStratum(n_shards=args.shards,
-                             memory_budget_bytes=4 << 30,
-                             coalesce_window_s=0.05)
-    else:
-        svc = StratumService(memory_budget_bytes=4 << 30,
-                             coalesce_window_s=0.05)
-    with svc:
+    cfg = StratumConfig.make(memory_budget_bytes=4 << 30,
+                             coalesce_window_s=0.05,
+                             n_shards=args.shards)
+    deadline_s = args.deadline_ms / 1000 if args.deadline_ms else None
+    with connect(args.target, cfg) as client:
         bests = [None] * args.agents
 
         def agent_main(i: int) -> None:
             agent = AIDEAgent(n_rows=args.rows, cv_k=args.cv, seed=i)
-            search = AsyncAIDESearch(svc.session(f"agent-{i}"), agent,
-                                     batch_size=4, max_inflight=2,
-                                     shard_affinity=bool(args.shards))
+            search = AsyncAIDESearch(
+                client.session(f"agent-{i}"), agent,
+                batch_size=4, max_inflight=2,
+                shard_affinity=args.target == "fabric",
+                deadline_s=deadline_s)
             bests[i] = search.run(n_rounds=args.rounds)
 
         threads = [threading.Thread(target=agent_main, args=(i,))
@@ -96,26 +104,45 @@ def run_service(args) -> None:
             if node is not None:
                 print(f"   agent-{i}: best rmse={node.score:.4f} "
                       f"({node.spec.preproc}+{node.spec.model})")
-        print(svc.telemetry.report())
+        if deadline_s is not None:
+            d = client.telemetry.global_snapshot()["deadline"]
+            print(f"refinement SLO ({args.deadline_ms}ms): "
+                  f"{d['met']}/{d['jobs']} met "
+                  f"(attainment {d['attainment']:.2f}, shed {d['shed']})")
+        print(client.telemetry.report())
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--rows", type=int, default=20_000)
     ap.add_argument("--cv", type=int, default=3)
-    ap.add_argument("--service", action="store_true",
-                    help="run N concurrent agents through StratumService")
+    ap.add_argument("--target", choices=("local", "service", "fabric"),
+                    default="local",
+                    help="which StratumClient target runs the search")
     ap.add_argument("--agents", type=int, default=4)
     ap.add_argument("--rounds", type=int, default=3,
-                    help="AIDE search rounds per agent (service mode)")
+                    help="AIDE search rounds per agent (async targets)")
     ap.add_argument("--shards", type=int, default=0,
-                    help="service mode: run agents against a ShardedStratum"
-                         " fabric with this many shards")
+                    help="shard count (implies --target fabric; "
+                         "default 2 when --target fabric is given alone)")
+    ap.add_argument("--deadline-ms", type=int, default=0,
+                    help="SLO for refinement submissions (async targets); "
+                         "late refinements are shed with DeadlineExceeded")
+    # legacy spelling kept working: --service == --target service, and
+    # --service --shards K (the PR-3 invocation) still means the fabric
+    ap.add_argument("--service", action="store_true",
+                    help=argparse.SUPPRESS)
     args = ap.parse_args()
-    if args.service:
-        run_service(args)
-    else:
+    if args.target == "local" and (args.service or args.shards):
+        args.target = "fabric" if args.shards else "service"
+    if args.shards and args.target != "fabric":
+        args.target = "fabric"
+    if args.target == "fabric" and not args.shards:
+        args.shards = 2
+    if args.target == "local":
         run_sync(args)
+    else:
+        run_async(args)
 
 
 if __name__ == "__main__":

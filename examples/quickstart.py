@@ -1,38 +1,49 @@
 """Quickstart: stratum in ~40 lines.
 
-Build two agent-style ML pipelines against the same table, hand the batch to
-stratum, and watch fusion + CSE + operator selection + caching do their job.
+Build two agent-style ML pipelines against the same table, hand the batch
+to a :class:`repro.client.StratumClient`, and watch fusion + CSE +
+operator selection + caching do their job.  Swap ``"local"`` for
+``"service"`` or ``"fabric"`` and nothing else changes — that is the
+point of the unified surface.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--rows 20000]
 """
+
+import argparse
 
 import numpy as np
 
-from repro.core import PipelineBatch, Stratum
+from repro.client import StratumConfig, SubmitOptions, connect
+from repro.core import PipelineBatch
 import repro.tabular as T
 from repro.data.tabular import feature_target_indices, schema_dict
+
+args = argparse.ArgumentParser()
+args.add_argument("--rows", type=int, default=20_000)
+args = args.parse_args()
 
 feats, tgt = feature_target_indices()
 
 # --- two pipelines an agent might emit (shared preprocessing prefix) -----
-raw = T.read("uk_housing", n_rows=20_000, seed=0)
+raw = T.read("uk_housing", n_rows=args.rows, seed=0)
 y = T.project(raw, [tgt])
 X = T.table_vectorizer(T.project(raw, feats), schema_dict(), feats)
 
 ridge = T.cv_score(X, y, {"name": "ridge_fit", "alpha": 1.0}, k=3, seed=7)
 gbt = T.cv_score(X, y, {"name": "gbt_fit", "n_trees": 20}, k=3, seed=7)
 
-# --- run the batch through stratum ----------------------------------------
-session = Stratum(memory_budget_bytes=4 << 30)
-results, report = session.run_batch(
-    PipelineBatch([ridge, gbt], ["ridge", "gbt"]))
+# --- run the batch through a stratum client -------------------------------
+client = connect("local", StratumConfig.make(memory_budget_bytes=4 << 30))
+results, report = client.run_batch(
+    PipelineBatch([ridge, gbt], ["ridge", "gbt"]),
+    SubmitOptions(deadline_s=600, tags=("quickstart",)))
 
 print("scores:", {k: round(float(np.asarray(v)), 4)
                   for k, v in results.items()})
 print(report.summary())
 
 # --- run it again: the intermediate cache kicks in -------------------------
-results2, report2 = session.run_batch(
+results2, report2 = client.run_batch(
     PipelineBatch([ridge, gbt], ["ridge", "gbt"]))
 print(f"\nsecond run: {report2.run.ops_from_cache} ops served from cache, "
       f"wall {report2.run.wall_time_s:.3f}s "

@@ -1,0 +1,75 @@
+#!/usr/bin/env python
+"""Examples smoke runner (run by the CI ``examples`` job).
+
+Runs every ``examples/*.py`` in a CI-sized smoke configuration and fails
+(exit 1) when any exits nonzero — examples that only render in docs rot
+silently.  An example without an entry in ``SMOKE_ARGS`` is a failure
+too: adding an example means deciding how CI exercises it.
+
+    PYTHONPATH=src python scripts_run_examples.py [--only quickstart.py]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import time
+
+ROOT = os.path.dirname(os.path.abspath(__file__))
+
+#: example file -> smoke-mode argv (small rows/steps so the whole matrix
+#: stays a few minutes on a CI runner)
+SMOKE_ARGS: dict = {
+    "quickstart.py": ["--rows", "4000"],
+    "agentic_search.py": ["--rows", "2000", "--cv", "2",
+                          "--target", "service", "--agents", "2",
+                          "--rounds", "2", "--deadline-ms", "30000"],
+    "train_lm.py": ["--steps", "40", "--seq", "32", "--batch", "4",
+                    "--ckpt-dir", "/tmp/repro_examples_smoke_ckpt"],
+    "serve_lm.py": ["--requests", "4", "--lanes", "2"],
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="run a single example (file name)")
+    args = ap.parse_args(argv)
+
+    ex_dir = os.path.join(ROOT, "examples")
+    names = sorted(n for n in os.listdir(ex_dir)
+                   if n.endswith(".py") and not n.startswith("_"))
+    if args.only:
+        names = [n for n in names if n == args.only]
+        if not names:
+            print(f"FAIL no example named {args.only!r}")
+            return 1
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(ROOT, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    failures = 0
+    for name in names:
+        smoke = SMOKE_ARGS.get(name)
+        if smoke is None:
+            print(f"FAIL examples/{name}: no SMOKE_ARGS entry — decide "
+                  f"how CI exercises it")
+            failures += 1
+            continue
+        cmd = [sys.executable, os.path.join(ex_dir, name), *smoke]
+        print(f"== examples/{name} {' '.join(smoke)}", flush=True)
+        t0 = time.time()
+        proc = subprocess.run(cmd, env=env, cwd=ROOT)
+        status = "ok" if proc.returncode == 0 else "FAIL"
+        print(f"== examples/{name}: {status} "
+              f"({time.time() - t0:.1f}s, exit {proc.returncode})",
+              flush=True)
+        if proc.returncode != 0:
+            failures += 1
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

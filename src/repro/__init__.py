@@ -1,0 +1,61 @@
+"""repro — a reproduction of stratum, grown toward production scale.
+
+The supported entry point is the unified client surface::
+
+    from repro import StratumClient, StratumConfig, SubmitOptions, connect
+
+    with connect("service", StratumConfig.make(n_executors=2)) as client:
+        future = client.submit(batch, SubmitOptions(deadline_s=2.0))
+
+Everything re-exported here resolves lazily (PEP 562): importing a
+subpackage (``repro.kernels``, ``repro.models``, ...) never pays for the
+client/service stack, and ``import repro`` alone imports nothing heavy.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+#: public name -> defining module (resolved on first attribute access)
+_EXPORTS = {
+    # unified client surface (src/repro/client.py)
+    "StratumClient": "repro.client",
+    "SubmitOptions": "repro.client",
+    "StratumConfig": "repro.client",
+    "OptimizerConfig": "repro.client",
+    "RuntimeConfig": "repro.client",
+    "CacheConfig": "repro.client",
+    "ServiceTuning": "repro.client",
+    "LocalTarget": "repro.client",
+    "ServiceTarget": "repro.client",
+    "FabricTarget": "repro.client",
+    "connect": "repro.client",
+    "DeadlineExceeded": "repro.client",
+    # core building blocks
+    "Stratum": "repro.core",
+    "PipelineBatch": "repro.core",
+    # service layer (legacy-compatible entry points)
+    "Priority": "repro.service",
+    "StratumService": "repro.service",
+    "ServiceConfig": "repro.service",
+    "Session": "repro.service",
+    "PipelineFuture": "repro.service",
+    "ShardedStratum": "repro.service",
+    "StratumFabric": "repro.service",
+    "AdmissionError": "repro.service",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    module_name = _EXPORTS.get(name)
+    if module_name is None:
+        raise AttributeError(f"module 'repro' has no attribute {name!r}")
+    value = getattr(importlib.import_module(module_name), name)
+    globals()[name] = value        # cache: next access skips the import
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

@@ -296,15 +296,24 @@ class AsyncAIDESearch:
     paper's "decouples pipeline execution from planning and reasoning".
 
     ``session`` is anything with ``submit(batch) -> future`` whose future's
-    ``result()`` returns ``(name→value, report)`` — i.e. a
-    :class:`repro.service.Session`.
+    ``result()`` returns ``(name→value, report)`` — preferably a
+    :class:`repro.client.StratumClient` (or one of its tenant-scoped
+    sessions), which makes the driver fully **target-agnostic**: the same
+    search runs unchanged against a local session, a multi-tenant service
+    or the sharded fabric.  A legacy :class:`repro.service.Session` (or
+    any object with the old keyword surface) still works.
 
-    When the session supports priorities (``submit(batch, priority=...)``),
-    the driver stratifies its own traffic: initial *drafts* are exploratory
+    When the session accepts :class:`repro.client.SubmitOptions` (an
+    ``options=`` parameter), the driver submits one options object per
+    round; otherwise it falls back to the legacy keyword probes.  Either
+    way it stratifies its own traffic: initial *drafts* are exploratory
     bulk work and go in at ``draft_priority`` (default BATCH), while
     *refinements* of the current best node — the work the agent's search
     frontier is actually blocked on — go in at ``refine_priority`` (default
-    INTERACTIVE).  Sessions without priority support still work unchanged.
+    INTERACTIVE).  ``deadline_s`` (optional) attaches an SLO to every
+    refinement submission: on a deadline-aware backend late refinements are
+    shed with :class:`~repro.service.queue.DeadlineExceeded` instead of
+    silently stalling the search frontier.
 
     Against a sharded fabric (:class:`repro.service.fabric.ShardedStratum`),
     ``shard_affinity=True`` tags every submission of this search with one
@@ -318,7 +327,8 @@ class AsyncAIDESearch:
     def __init__(self, session, agent: AIDEAgent, batch_size: int = 4,
                  max_inflight: int = 2,
                  draft_priority=None, refine_priority=None,
-                 shard_affinity: bool = False):
+                 shard_affinity: bool = False,
+                 deadline_s: Optional[float] = None):
         if max_inflight < 1:
             raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
         from ..service.priority import Priority
@@ -326,19 +336,33 @@ class AsyncAIDESearch:
         self.agent = agent
         self.batch_size = batch_size
         self.max_inflight = max_inflight
+        self.deadline_s = deadline_s
         # capability probe up front — catching TypeError around submit()
         # itself would mask real errors and could double-enqueue a batch
         self._supports_priority = False
         self._supports_affinity = False
+        self._supports_options = False
         try:
             import inspect
             params = inspect.signature(session.submit).parameters
             var_kw = any(p.kind is inspect.Parameter.VAR_KEYWORD
                          for p in params.values())
-            self._supports_priority = "priority" in params or var_kw
-            self._supports_affinity = "affinity" in params or var_kw
+            # the unified surface: one SubmitOptions instead of kwargs —
+            # it carries priority/affinity/deadline, so supporting options
+            # implies supporting all three
+            self._supports_options = "options" in params
+            self._supports_priority = ("priority" in params or var_kw
+                                       or self._supports_options)
+            self._supports_affinity = ("affinity" in params or var_kw
+                                       or self._supports_options)
         except (AttributeError, TypeError, ValueError):
             pass
+        if deadline_s is not None and not (
+                self._supports_options or self._supports_priority):
+            raise ValueError(
+                "deadline_s requires a session accepting SubmitOptions "
+                "or the deadline_s keyword (a StratumClient target or a "
+                "repro.service Session)")
         self._affinity = None
         if shard_affinity and self._supports_affinity:
             # one stable key per search (NOT drawn from agent.rng — that
@@ -351,6 +375,7 @@ class AsyncAIDESearch:
                                 if refine_priority is None
                                 else refine_priority)
         self.reports: list = []
+        self.deadlines_missed = 0   # refinement rounds shed past their SLO
 
     def _submit(self, round_idx: int):
         specs = self.agent.propose(self.batch_size)
@@ -360,16 +385,35 @@ class AsyncAIDESearch:
         # is mutating its best node, the search is latency-bound on results
         refining = any(n.score is not None for n in self.agent.nodes)
         prio = self.refine_priority if refining else self.draft_priority
+        deadline = self.deadline_s if refining else None
+        if self._supports_options:
+            from ..client import SubmitOptions
+            future = self.session.submit(batch, options=SubmitOptions(
+                priority=prio, affinity=self._affinity,
+                deadline_s=deadline))
+            return specs, names, future
         kwargs: dict = {}
         if self._supports_priority:
             kwargs["priority"] = prio
+            if deadline is not None:
+                kwargs["deadline_s"] = deadline
         if self._affinity is not None:
             kwargs["affinity"] = self._affinity
         future = self.session.submit(batch, **kwargs)
         return specs, names, future
 
     def _harvest(self, specs, names, future) -> None:
-        results, report = future.result()
+        try:
+            results, report = future.result()
+        except Exception as e:  # noqa: BLE001 — narrow re-raise below
+            from ..service.queue import DeadlineExceeded
+            if not isinstance(e, DeadlineExceeded):
+                raise
+            # a refinement missed its SLO and was shed: the search simply
+            # proceeds without those observations (stale refinements are
+            # worth less than the frontier's time)
+            self.deadlines_missed += 1
+            return
         self.reports.append(report)
         scores = [float(np.asarray(results[n])) for n in names]
         self.agent.observe(specs, scores)

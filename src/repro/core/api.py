@@ -15,6 +15,7 @@ from __future__ import annotations
 import os
 import tempfile
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Optional, Sequence
 
@@ -66,12 +67,31 @@ class StratumReport:
         return "\n".join(lines)
 
 
+_DEFAULT_CACHE_FRACTION = 0.10      # paper default
+_DEFAULT_PLAN_CACHE_ENTRIES = 256
+_warned_once: set = set()
+
+
+def _warn_once(message: str) -> None:
+    """Emit each distinct config warning once per process — a service
+    constructing thousands of sessions must not spam the log."""
+    if message in _warned_once:
+        return
+    _warned_once.add(message)
+    warnings.warn(message, UserWarning, stacklevel=3)
+
+
 class Stratum:
-    """A stratum execution session (one per agent / tenant)."""
+    """A stratum execution session (one per agent / tenant).
+
+    Prefer constructing through :class:`repro.client.StratumConfig` and a
+    :class:`repro.client.StratumClient` target — this constructor's flat
+    keyword surface is retained as a stable shim for existing callers.
+    """
 
     def __init__(self,
                  memory_budget_bytes: int = 8 << 30,
-                 cache_fraction: float = 0.10,   # paper default
+                 cache_fraction: Optional[float] = None,
                  spill_dir: Optional[str] = None,
                  platform: str = "",
                  enable: Sequence[str] = ALL_FEATURES,
@@ -80,10 +100,32 @@ class Stratum:
                  cache: Optional[IntermediateCache] = None,
                  compiled_segments: bool = True,
                  plan_cache: Optional[PlanCache] = None,
-                 plan_cache_entries: int = 256):
+                 plan_cache_entries: Optional[int] = None,
+                 segment_time_budget_s: Optional[float] = None):
         unknown = set(enable) - set(ALL_FEATURES)
         if unknown:
             raise ValueError(f"unknown features {unknown}")
+        # validate cross-feature kwargs instead of silently accepting them:
+        # a tuned cache_fraction with "cache" disabled (or a plan-cache
+        # size with compiled segments off) is a config bug, not a no-op
+        if "cache" not in enable:
+            if cache_fraction is not None:
+                _warn_once("Stratum(cache_fraction=...) has no effect: the "
+                           "'cache' feature is disabled in enable=")
+            if spill_dir is not None:
+                _warn_once("Stratum(spill_dir=...) has no effect: the "
+                           "'cache' feature is disabled in enable=")
+        if not compiled_segments:
+            if plan_cache_entries is not None:
+                _warn_once("Stratum(plan_cache_entries=...) has no effect "
+                           "with compiled_segments=False")
+            if plan_cache is not None:
+                _warn_once("Stratum(plan_cache=...) has no effect with "
+                           "compiled_segments=False")
+        if cache_fraction is None:
+            cache_fraction = _DEFAULT_CACHE_FRACTION
+        if plan_cache_entries is None:
+            plan_cache_entries = _DEFAULT_PLAN_CACHE_ENTRIES
         if jit_cache_dir:
             # persistent XLA compilation cache: a long-lived stratum service
             # compiles each (op, shape) once across sessions/processes —
@@ -96,6 +138,7 @@ class Stratum:
         self.memory_budget_bytes = memory_budget_bytes
         self.platform = platform
         self.hardware_threads = hardware_threads
+        self.segment_time_budget_s = segment_time_budget_s
         # an injected cache is shared infrastructure (the multi-tenant
         # service hands every session the same thread-safe instance)
         self.cache: Optional[IntermediateCache] = None
@@ -149,7 +192,8 @@ class Stratum:
             memory_budget_bytes=self.memory_budget_bytes,
             hardware_threads=self.hardware_threads,
             enable_inter_op="parallel" in self.enable,
-            compiled_segments=self.compiled_segments))
+            compiled_segments=self.compiled_segments,
+            segment_time_budget_s=self.segment_time_budget_s))
 
         opt_time = time.perf_counter() - t0
         return sinks, sel, p, candidates, rw, ops_submitted, opt_time

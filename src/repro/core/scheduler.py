@@ -83,6 +83,12 @@ class SchedulerConfig:
     # runtime setting): affects only the est_peak_mem the memory gate
     # reserves — a compiled segment defers per-wave freeing to its boundary
     compiled_segments: bool = True
+    # cap on a compiled segment's summed est_time: a jitted program has no
+    # internal yield points, so an unbounded super-batch segment delays an
+    # interactive/deadline preempt by its whole wall time.  Splitting past
+    # the budget bounds that latency to one slice (preemption polls run at
+    # segment boundaries).  None = maximal segments (no cap)
+    segment_time_budget_s: Optional[float] = None
 
 
 def plan(sinks: Sequence[LazyRef],
@@ -189,7 +195,8 @@ def plan(sinks: Sequence[LazyRef],
     inter = min(widest, threads) if config.enable_inter_op else 1
     intra = max(1, threads // max(inter, 1))
 
-    segments = partition_segments(waves, selection)
+    segments = partition_segments(waves, selection,
+                                  time_budget_s=config.segment_time_budget_s)
     # a compiled jax segment returns every op's outputs at once and only
     # applies per-wave liveness freeing at the segment boundary, so its
     # true peak is the sum of ALL its output bytes — raise the estimate
@@ -210,21 +217,47 @@ def plan(sinks: Sequence[LazyRef],
 
 
 def partition_segments(waves: Sequence[Wave],
-                       selection: dict[str, PhysicalImpl]) -> list[Segment]:
+                       selection: dict[str, PhysicalImpl],
+                       time_budget_s: Optional[float] = None
+                       ) -> list[Segment]:
     """Group contiguous waves into maximal backend-homogeneous segments.
 
     A wave is jit-compilable iff every op in it selected a traceable
     jax-tier implementation; contiguous compilable waves merge into one
     ``"jax"`` segment.  One-op jax runs are demoted to ``"python"`` —
     a single op gains nothing from whole-segment tracing (its impl is
-    typically already jitted) but would still occupy a plan-cache entry."""
+    typically already jitted) but would still occupy a plan-cache entry.
+
+    Waves whose every op selected one *custom-registered* backend kind
+    (``repro.core.backends.register_backend``) form segments of that kind
+    the same way, so an out-of-process/Rust backend receives whole
+    segments instead of being flattened onto the python path.
+
+    ``time_budget_s`` caps a non-python segment's summed wave ``est_time``:
+    compiled programs have no internal yield points, so the cap bounds how
+    long a running segment can delay a cooperative preempt (the runtime
+    polls at segment boundaries).  Splits happen at wave boundaries, so
+    segmentation still never changes semantics."""
+    # custom backend kinds are registered at runtime; resolve lazily to
+    # keep core.scheduler importable before core.backends finishes loading
+    from .backends.base import available_backends
+    custom_kinds = set(available_backends()) - {"python", "jax"}
 
     def wave_kind(wave: Wave) -> str:
+        kinds: set[str] = set()
         for op in wave.ops:
             impl = selection.get(op.signature)
-            if impl is None or impl.backend != "jax" or not impl.traceable:
+            if impl is None:
                 return "python"
-        return "jax" if wave.ops else "python"
+            if impl.backend == "jax" and impl.traceable:
+                kinds.add("jax")
+            elif impl.backend in custom_kinds:
+                kinds.add(impl.backend)
+            else:
+                return "python"
+        if len(kinds) == 1:
+            return kinds.pop()
+        return "python"
 
     segments: list[Segment] = []
     for i, wave in enumerate(waves):
@@ -233,7 +266,7 @@ def partition_segments(waves: Sequence[Wave],
             segments[-1].waves.append(wave)
         else:
             segments.append(Segment(kind=kind, waves=[wave], start=i))
-    # demote trivial jax segments, then re-merge adjacent python runs
+    # demote trivial jax segments, then re-merge adjacent same-kind runs
     merged: list[Segment] = []
     for seg in segments:
         if seg.kind == "jax" and seg.n_ops < 2:
@@ -242,4 +275,26 @@ def partition_segments(waves: Sequence[Wave],
             merged[-1].waves.extend(seg.waves)
         else:
             merged.append(seg)
-    return merged
+    if time_budget_s is None:
+        return merged
+    # bound compiled-segment preempt latency: split past the est_time
+    # budget (AFTER merging — adjacent same-kind segments would otherwise
+    # re-coalesce and undo the cap)
+    capped: list[Segment] = []
+    for seg in merged:
+        if seg.kind == "python":
+            capped.append(seg)      # per-op path polls inside the segment
+            continue
+        cur: list[Wave] = []
+        cur_t = 0.0
+        start = seg.start
+        for w in seg.waves:
+            if cur and cur_t + w.est_time > time_budget_s:
+                capped.append(Segment(kind=seg.kind, waves=cur,
+                                      start=start))
+                start += len(cur)
+                cur, cur_t = [], 0.0
+            cur.append(w)
+            cur_t += w.est_time
+        capped.append(Segment(kind=seg.kind, waves=cur, start=start))
+    return capped

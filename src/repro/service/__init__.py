@@ -20,16 +20,16 @@ telemetry.  See ``docs/ARCHITECTURE.md`` and ``docs/SCHEDULING.md``.
 
 from .coalesce import SuperBatch, coalesce, cross_agent_dedup
 from .priority import DEFAULT_WEIGHTS, Priority
-from .queue import AdmissionError, FairQueue, Job
+from .queue import AdmissionError, DeadlineExceeded, FairQueue, Job
 from .server import JobReport, ServiceConfig, StratumService
 from .session import PipelineFuture, Session
 from .telemetry import ServiceTelemetry, TenantStats, merge_tenant_snapshots
 from .fabric import ShardedStratum, StratumFabric
 
 __all__ = [
-    "AdmissionError", "DEFAULT_WEIGHTS", "FairQueue", "Job", "JobReport",
-    "PipelineFuture", "Priority", "ServiceConfig", "ServiceTelemetry",
-    "Session", "ShardedStratum", "StratumFabric", "StratumService",
-    "SuperBatch", "TenantStats", "coalesce", "cross_agent_dedup",
-    "merge_tenant_snapshots",
+    "AdmissionError", "DEFAULT_WEIGHTS", "DeadlineExceeded", "FairQueue",
+    "Job", "JobReport", "PipelineFuture", "Priority", "ServiceConfig",
+    "ServiceTelemetry", "Session", "ShardedStratum", "StratumFabric",
+    "StratumService", "SuperBatch", "TenantStats", "coalesce",
+    "cross_agent_dedup", "merge_tenant_snapshots",
 ]

@@ -4,7 +4,8 @@ Everything that crosses from a :class:`~repro.service.session.Session` into
 the fabric — and back — is a *message*, not a shared object graph:
 
 * :class:`JobEnvelope` — one submitted :class:`PipelineBatch` plus its
-  routing metadata (tenant, priority, routing key, envelope id);
+  routing metadata (tenant, priority, routing key, envelope id) and
+  submission options (remaining ``deadline_s``, opaque ``tags``);
 * :class:`ResultEnvelope` — the terminal reply: either ``results`` (host
   numpy arrays keyed by the batch's sink names) plus a plain-field
   :class:`FabricJobReport`, or a transported error.
@@ -77,6 +78,14 @@ class JobEnvelope:
     routing_key: str
     batch: PipelineBatch
     attempt: int = 0              # bumped by failover requeues
+    # deadline SLO: ``deadline_s`` is the REMAINING budget at encode time
+    # (absolute clocks don't cross process boundaries); ``deadline_t`` is
+    # the client-local absolute instant — it never crosses the wire, the
+    # router uses it to re-derive a shrunken deadline_s when a failover
+    # re-encodes the envelope
+    deadline_s: Optional[float] = None
+    deadline_t: Optional[float] = None
+    tags: tuple = ()
 
 
 @dataclass
@@ -107,6 +116,9 @@ class FabricJobReport:
     ops_salvaged: int = 0
     preemptions: int = 0
     attempt: int = 0
+    deadline_s: Optional[float] = None
+    deadline_met: Optional[bool] = None
+    tags: tuple = ()
     per_backend: dict = field(default_factory=dict)
 
 
@@ -183,6 +195,7 @@ def encode_job(env: JobEnvelope) -> bytes:
         {"envelope_id": env.envelope_id, "tenant": env.tenant,
          "priority": int(env.priority), "routing_key": env.routing_key,
          "attempt": env.attempt,
+         "deadline_s": env.deadline_s, "tags": list(env.tags),
          "sinks": list(env.batch.sinks), "names": list(env.batch.names)},
         protocol=pickle.HIGHEST_PROTOCOL)
     return _frame(_JOB_KIND, payload)
@@ -200,7 +213,9 @@ def decode_job(data: bytes) -> JobEnvelope:
     return JobEnvelope(envelope_id=d["envelope_id"], tenant=d["tenant"],
                        priority=d["priority"], routing_key=d["routing_key"],
                        batch=PipelineBatch(sinks, d["names"]),
-                       attempt=d["attempt"])
+                       attempt=d["attempt"],
+                       deadline_s=d.get("deadline_s"),
+                       tags=tuple(d.get("tags", ())))
 
 
 def encode_cancel(env: CancelEnvelope) -> bytes:

@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import itertools
 import threading
+import time
 from dataclasses import replace
 from typing import Optional
 
@@ -135,10 +136,16 @@ class StratumFabric:
 
     def submit(self, tenant: str, batch,
                priority: Priority = Priority.BATCH,
-               affinity: Optional[str] = None) -> PipelineFuture:
+               affinity: Optional[str] = None,
+               deadline_s: Optional[float] = None,
+               tags=()) -> PipelineFuture:
         """Wrap ``batch`` in a :class:`JobEnvelope` and route it.  The
         routing key is derived from the batch's signature space unless
-        ``affinity`` overrides it (pinning related submissions together)."""
+        ``affinity`` overrides it (pinning related submissions together).
+        ``deadline_s``/``tags`` cross the wire with the envelope; the
+        owning shard schedules EDF within the band, sheds expired work
+        (the future then raises DeadlineExceeded) and echoes deadline
+        attainment in the FabricJobReport."""
         if self._stopped:
             raise RuntimeError("fabric is stopped")
         key = affinity if affinity is not None \
@@ -146,7 +153,11 @@ class StratumFabric:
         env = JobEnvelope(
             envelope_id=next_envelope_id(self._client_id),
             tenant=tenant, priority=int(Priority(priority)),
-            routing_key=key, batch=batch)
+            routing_key=key, batch=batch,
+            deadline_s=deadline_s,
+            deadline_t=(None if deadline_s is None
+                        else time.perf_counter() + deadline_s),
+            tags=tuple(tags))
         return self.router.submit(env)
 
     # -- lifecycle ---------------------------------------------------------

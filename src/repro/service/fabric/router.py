@@ -196,6 +196,13 @@ class ShardRouter:
 
     def _route(self, pending: _Pending, is_requeue: bool) -> None:
         env = pending.envelope
+        if env.deadline_t is not None:
+            # re-derive the REMAINING budget at every (re-)encode: queueing
+            # and failover time already spent must not extend the SLO on
+            # the shard that finally runs the job.  May go negative — the
+            # shard then sheds immediately and the DeadlineExceeded reply
+            # resolves the future
+            env.deadline_s = env.deadline_t - time.perf_counter()
         try:
             data = encode_job(env)     # before any pending registration:
         except Exception as e:         # an unencodable batch must not leak

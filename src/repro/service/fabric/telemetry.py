@@ -115,6 +115,19 @@ class FabricTelemetry:
         # compiled-plan reuse fabric-wide: signature-locality routing means
         # repeat structures land on the shard already holding the compile,
         # so this rate is the fabric's compiled-plan locality measure
+        # deadline attainment fabric-wide: derived from the merged tenant
+        # ledgers (which include retired shards' frozen snapshots), so the
+        # rate stays monotone across failover/rebalance
+        tenants = self.snapshot()
+        d_jobs = sum(s.get("deadline_jobs", 0) for s in tenants.values())
+        d_met = sum(s.get("deadline_met", 0) for s in tenants.values())
+        d_shed = sum(s.get("deadline_shed", 0) for s in tenants.values())
+        totals["deadline"] = {
+            "jobs": d_jobs,
+            "met": d_met,
+            "shed": d_shed,
+            "attainment": (d_met / d_jobs) if d_jobs else 1.0,
+        }
         pc_rows = [s["plan_cache"] for s in per_shard.values()
                    if "plan_cache" in s]
         if pc_rows:

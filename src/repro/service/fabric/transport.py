@@ -108,7 +108,9 @@ class LocalTransport(Transport):
         env = decode_job(data)     # the serialization seam, server side
         try:
             future = self.service.submit(env.tenant, env.batch,
-                                         priority=env.priority)
+                                         priority=env.priority,
+                                         deadline_s=env.deadline_s,
+                                         tags=env.tags)
         except AdmissionError:
             # in-process shard: backpressure propagates synchronously so
             # Session.submit keeps its documented raises-AdmissionError
@@ -181,6 +183,9 @@ class LocalTransport(Transport):
                 ops_salvaged=getattr(report, "ops_salvaged", 0),
                 preemptions=getattr(report, "preemptions", 0),
                 attempt=attempt,
+                deadline_s=getattr(report, "deadline_s", None),
+                deadline_met=getattr(report, "deadline_met", None),
+                tags=tuple(getattr(report, "tags", ()) or ()),
                 per_backend=dict(getattr(report, "per_backend", {}) or {}))
             out = ResultEnvelope(envelope_id=envelope_id, tenant=tenant,
                                  shard_id=self.shard_id, ok=True,

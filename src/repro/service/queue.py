@@ -1,6 +1,6 @@
 """Admission-controlled, priority-stratified, tenant-fair job queue.
 
-Three properties the service needs that a plain FIFO lacks:
+Four properties the service needs that a plain FIFO lacks:
 
 * **admission control** — ``push`` rejects (raises :class:`AdmissionError`)
   once global or per-tenant queue depth limits are hit, so a runaway agent
@@ -15,7 +15,21 @@ Three properties the service needs that a plain FIFO lacks:
   coherent preemption decisions);
 * **fairness within a band** — jobs live in per-tenant FIFOs and a round
   drains them round-robin with a per-tenant cap, so a tenant flooding the
-  queue cannot starve another tenant of the same priority.
+  queue cannot starve another tenant of the same priority;
+* **deadline awareness** — a job may carry ``deadline_s`` (an SLO relative
+  to submission).  Within the band WFQ selected, tenants holding
+  deadline-carrying work are served earliest-deadline-first (EDF) ahead of
+  deadline-free tenants, which keep their round-robin order — priorities
+  decide *which band* runs, deadlines only break ties *inside* it.  A job
+  whose deadline has already passed while queued is **shed** at the next
+  scheduling round: it is removed, its future fails with
+  :class:`DeadlineExceeded`, and the optional ``on_shed`` hook fires (the
+  service records attainment telemetry there) — late work stops consuming
+  the capacity that could still save an attainable deadline.  A job whose
+  remaining slack is below the caller's ``tight_slack_s`` is popped
+  *alone*, so the coalescer cannot weld it into a large super-batch whose
+  execution time it would inherit.  ``deadline_aware=False`` records
+  deadlines but schedules blind (the benchmark baseline).
 
 Starvation-proofing: a queued job is *aged* — promoted one band for every
 ``aging_s`` seconds it has waited — so even a SCAVENGER job under sustained
@@ -32,7 +46,7 @@ import threading
 import time
 from collections import OrderedDict, deque
 from dataclasses import dataclass, field
-from typing import Optional, Sequence
+from typing import Callable, Optional, Sequence
 
 from ..core.fusion import PipelineBatch
 from .priority import DEFAULT_WEIGHTS, Priority
@@ -43,6 +57,15 @@ class AdmissionError(RuntimeError):
     """Job rejected at submission time (queue depth / tenant quota)."""
 
 
+class DeadlineExceeded(RuntimeError):
+    """The job's ``deadline_s`` passed before a result could be produced.
+
+    Raised out of ``PipelineFuture.result()`` when a deadline-aware queue
+    sheds the expired job (service/fabric targets) or when a local run
+    finishes past the deadline.  Picklable with a plain message so it
+    crosses the fabric's wire codec like any other error."""
+
+
 @dataclass
 class Job:
     id: int
@@ -51,6 +74,11 @@ class Job:
     future: PipelineFuture
     priority: Priority = Priority.BATCH
     submit_t: float = field(default_factory=time.perf_counter)
+    # deadline SLO: relative seconds at submit; deadline_t is the absolute
+    # perf_counter instant (derived once, so waiting never moves the goal)
+    deadline_s: Optional[float] = None
+    deadline_t: Optional[float] = None
+    tags: tuple = ()
     # set at first dispatch; a failure-isolation retry must not re-measure
     # (the second measurement would include the failed run's execution time)
     dispatch_wait_s: Optional[float] = None
@@ -65,6 +93,14 @@ class Job:
     def __post_init__(self) -> None:
         if self.band < 0:
             self.band = int(self.priority)
+        if self.deadline_t is None and self.deadline_s is not None:
+            self.deadline_t = self.submit_t + self.deadline_s
+
+    def slack(self, now: float) -> float:
+        """Seconds until the deadline (+inf for deadline-free jobs)."""
+        if self.deadline_t is None:
+            return float("inf")
+        return self.deadline_t - now
 
 
 class FairQueue:
@@ -80,19 +116,28 @@ class FairQueue:
                  max_queued_per_tenant: int = 256,
                  weights: Optional[dict] = None,
                  aging_s: Optional[float] = 5.0,
-                 priority_aware: bool = True):
+                 priority_aware: bool = True,
+                 deadline_aware: bool = True):
         self.max_queued_total = max_queued_total
         self.max_queued_per_tenant = max_queued_per_tenant
         self.weights = {Priority(k): int(v)
                         for k, v in (weights or DEFAULT_WEIGHTS).items()}
         self.aging_s = aging_s
         self.priority_aware = priority_aware
+        self.deadline_aware = deadline_aware
+        # telemetry hook, called (outside the lock) per shed job AFTER its
+        # future already failed with DeadlineExceeded
+        self.on_shed: Optional[Callable[[Job], None]] = None
         # band → (tenant → FIFO); OrderedDict gives intra-band round-robin
         self._bands: dict[int, "OrderedDict[str, deque[Job]]"] = {
             int(p): OrderedDict() for p in Priority}
         self._credits: dict[int, float] = {int(p): 0.0 for p in Priority}
         self._tenant_total: dict[str, int] = {}
         self._total = 0
+        # deadline-carrying jobs currently queued: the shed scan and the
+        # EDF ordering are O(queued) per round, so with zero deadline jobs
+        # (the common case) both must cost nothing
+        self._deadline_total = 0
         self._lock = threading.Lock()
         self._not_empty = threading.Condition(self._lock)
         self._closed = False
@@ -116,6 +161,8 @@ class FairQueue:
             band.setdefault(job.tenant, deque()).append(job)
             self._tenant_total[job.tenant] = n_tenant + 1
             self._total += 1
+            if job.deadline_t is not None:
+                self._deadline_total += 1
             self._not_empty.notify()
 
     def requeue(self, jobs: Sequence[Job]) -> None:
@@ -136,6 +183,8 @@ class FairQueue:
                 self._tenant_total[job.tenant] = \
                     self._tenant_total.get(job.tenant, 0) + 1
                 self._total += 1
+                if job.deadline_t is not None:
+                    self._deadline_total += 1
             self._not_empty.notify_all()
 
     # ------------------------------------------------------------------
@@ -180,17 +229,98 @@ class FairQueue:
                                      for b in candidates)
         return chosen
 
+    def _shed_expired_locked(self, now: float) -> list[Job]:
+        """Remove every queued job whose deadline already passed.
+
+        Returns the shed jobs; the caller fails their futures OUTSIDE the
+        lock (future callbacks may re-enter the queue)."""
+        if not self.deadline_aware or not self._deadline_total:
+            return []
+        shed: list[Job] = []
+        for tenants in self._bands.values():
+            for tenant in list(tenants):
+                q = tenants[tenant]
+                keep: deque = deque()
+                expired: list[Job] = []
+                for job in q:
+                    if job.deadline_t is not None and job.deadline_t <= now:
+                        expired.append(job)
+                    else:
+                        keep.append(job)
+                if not expired:
+                    continue
+                shed.extend(expired)
+                self._total -= len(expired)
+                self._deadline_total -= len(expired)
+                self._tenant_total[tenant] -= len(expired)
+                if not self._tenant_total[tenant]:
+                    del self._tenant_total[tenant]
+                if keep:
+                    tenants[tenant] = keep
+                else:
+                    del tenants[tenant]
+        return shed
+
+    def _resolve_shed(self, shed: Sequence[Job]) -> None:
+        for job in shed:
+            job.future._set_exception(DeadlineExceeded(
+                f"job {job.id} (tenant {job.tenant!r}) shed: deadline of "
+                f"{job.deadline_s}s expired while queued"))
+            if self.on_shed is not None:
+                try:
+                    self.on_shed(job)
+                except Exception:   # noqa: BLE001 — telemetry must not kill
+                    pass            # the dispatcher
+
+    def _take_locked(self, tenants, tenant: str, q: deque, n: int,
+                     now: float,
+                     exclude_tight_s: Optional[float] = None) -> list[Job]:
+        """Remove up to ``n`` jobs from one tenant FIFO — earliest-deadline
+        first when any queued job carries one, plain FIFO otherwise.  With
+        ``exclude_tight_s`` set (a coalescing-window extension), jobs whose
+        slack is at or below it are left queued: a tight-deadline job must
+        dispatch alone, never inside a growing merge."""
+        edf = self.deadline_aware and self._deadline_total > 0
+        idxs = range(len(q))
+        if exclude_tight_s is not None and edf:
+            idxs = [i for i in idxs if q[i].slack(now) > exclude_tight_s]
+        if edf and any(j.deadline_t is not None for j in q):
+            picked = sorted(idxs, key=lambda i: (q[i].slack(now), i))[:n]
+        else:
+            picked = list(idxs)[:n]
+        out = [q[i] for i in picked]    # EDF order, not FIFO position
+        for job in out:
+            q.remove(job)
+        if out:
+            self._total -= len(out)
+            self._deadline_total -= sum(1 for j in out
+                                        if j.deadline_t is not None)
+            self._tenant_total[tenant] -= len(out)
+            if not self._tenant_total[tenant]:
+                del self._tenant_total[tenant]
+        if not q:
+            del tenants[tenant]
+        return out
+
     def pop_round(self, max_jobs: int, max_per_tenant: int = 1,
                   timeout: Optional[float] = None,
-                  band: Optional[int] = None) -> list[Job]:
+                  band: Optional[int] = None,
+                  tight_slack_s: Optional[float] = None) -> list[Job]:
         """One fair scheduling round, confined to a single priority band.
 
-        Blocks up to ``timeout`` for work, ages waiting jobs, selects a band
-        by weighted fair queuing (or uses ``band`` when the caller is
-        extending an in-progress coalescing window — super-batches must stay
-        priority-homogeneous), then takes ≤ ``max_per_tenant`` jobs from
-        each of the band's tenants in round-robin order (tenants rotate to
-        the back after being served) until ``max_jobs`` or the band drains.
+        Blocks up to ``timeout`` for work, sheds deadline-expired jobs,
+        ages waiting jobs, selects a band by weighted fair queuing (or uses
+        ``band`` when the caller is extending an in-progress coalescing
+        window — super-batches must stay priority-homogeneous), then takes
+        ≤ ``max_per_tenant`` jobs from each of the band's tenants until
+        ``max_jobs`` or the band drains.  Deadline-carrying tenants are
+        served earliest-deadline-first ahead of the round-robin order
+        (tenants rotate to the back after being served).
+
+        When the band's most urgent job has less than ``tight_slack_s``
+        of slack left, that job is returned ALONE: coalescing it into a
+        large super-batch would make it inherit the merge's execution time
+        and miss a deadline it could still meet.
         """
         deadline = (time.perf_counter() + timeout) if timeout else None
 
@@ -199,39 +329,64 @@ class FairQueue:
                 return bool(self._total)
             return bool(self._bands[band])
 
-        with self._lock:
-            while not _has_work():
-                if deadline is None:
+        shed: list[Job] = []
+        try:
+            with self._lock:
+                while not _has_work():
+                    if deadline is None:
+                        return []
+                    left = deadline - time.perf_counter()
+                    if left <= 0 or self._closed:
+                        return []
+                    self._not_empty.wait(left)
+                now = time.perf_counter()
+                shed = self._shed_expired_locked(now)
+                self._age_locked(now)
+                chosen = (band if band is not None
+                          else self._select_band_locked())
+                if chosen is None or not self._bands[chosen]:
                     return []
-                left = deadline - time.perf_counter()
-                if left <= 0 or self._closed:
-                    return []
-                self._not_empty.wait(left)
-            now = time.perf_counter()
-            self._age_locked(now)
-            chosen = band if band is not None else self._select_band_locked()
-            if chosen is None or not self._bands[chosen]:
-                return []
-            tenants = self._bands[chosen]
-            out: list[Job] = []
-            served = 0
-            n_tenants = len(tenants)
-            while served < n_tenants and len(out) < max_jobs and tenants:
-                tenant, q = next(iter(tenants.items()))
-                take = min(max_per_tenant, len(q), max_jobs - len(out))
-                for _ in range(take):
-                    job = q.popleft()
-                    out.append(job)
-                    self._total -= 1
-                    self._tenant_total[tenant] -= 1
-                    if not self._tenant_total[tenant]:
-                        del self._tenant_total[tenant]
-                # rotate: served tenant goes to the back; drop empty queues
-                tenants.move_to_end(tenant)
-                if not q:
-                    del tenants[tenant]
-                served += 1
-            return out
+                tenants = self._bands[chosen]
+
+                # EDF tie-break inside the WFQ-chosen band: serve tenants
+                # by their most urgent queued deadline; deadline-free
+                # tenants keep their round-robin order (sort is stable and
+                # their key is +inf)
+                order = list(tenants)
+                if self.deadline_aware and self._deadline_total:
+                    order.sort(key=lambda t: min(
+                        (j.slack(now) for j in tenants[t]),
+                        default=float("inf")))
+                    head = tenants.get(order[0])
+                    most_urgent = min(
+                        (j.slack(now) for j in head), default=float("inf")
+                        ) if head else float("inf")
+                    if (tight_slack_s is not None and band is None
+                            and most_urgent <= tight_slack_s):
+                        # pop the tight job alone — never into a merge
+                        return self._take_locked(tenants, order[0], head, 1,
+                                                 now)
+                # extension pops must leave tight jobs queued (they will
+                # pop alone at the NEXT round's tight check instead)
+                exclude = tight_slack_s if band is not None else None
+
+                out: list[Job] = []
+                for tenant in order:
+                    if len(out) >= max_jobs:
+                        break
+                    q = tenants.get(tenant)
+                    if not q:
+                        continue
+                    take = min(max_per_tenant, len(q), max_jobs - len(out))
+                    got = self._take_locked(tenants, tenant, q, take, now,
+                                            exclude_tight_s=exclude)
+                    out.extend(got)
+                    # rotate: a served tenant still queued goes to the back
+                    if got and tenant in tenants:
+                        tenants.move_to_end(tenant)
+                return out
+        finally:
+            self._resolve_shed(shed)
 
     def cancel(self, job_id: int) -> bool:
         """Remove a still-queued job; returns False once dispatched."""
@@ -242,6 +397,8 @@ class FairQueue:
                         if job.id == job_id:
                             q.remove(job)
                             self._total -= 1
+                            if job.deadline_t is not None:
+                                self._deadline_total -= 1
                             self._tenant_total[tenant] -= 1
                             if not self._tenant_total[tenant]:
                                 del self._tenant_total[tenant]
@@ -277,6 +434,7 @@ class FairQueue:
                 tenants.clear()
             self._tenant_total.clear()
             self._total = 0
+            self._deadline_total = 0
             self._not_empty.notify_all()
             return rest
 

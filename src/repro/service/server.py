@@ -20,6 +20,12 @@ Key properties:
   jobs are requeued at the front of their band carrying every completed
   intermediate (*salvage*), so the re-run redoes no finished work.  A job
   yields at most ``max_preemptions_per_job`` times, then runs to completion;
+* **deadline-aware scheduling** — jobs may carry ``deadline_s``: inside the
+  WFQ-chosen band, earliest-deadline-first breaks ties, jobs whose slack
+  fell below ``deadline_tight_slack_s`` dispatch alone (never coalesced
+  into a large super-batch), and jobs already past their deadline are shed
+  with :class:`~repro.service.queue.DeadlineExceeded`; attainment is
+  tracked per tenant in telemetry;
 * **cross-agent work sharing** — jobs gathered in one round are merged into
   a super-batch before optimization, so CSE dedups identical sub-DAGs
   emitted by *different* agents, and all tenants share one thread-safe
@@ -80,6 +86,17 @@ class ServiceConfig:
     # so even a generous cap cannot livelock a low-priority job — the cap
     # only bounds resume overhead (re-optimize + salvage replay per yield)
     max_preemptions_per_job: int = 8
+    # deadline-aware scheduling (docs/SCHEDULING.md): EDF tie-break inside
+    # priority bands, shedding of expired jobs (futures fail with
+    # DeadlineExceeded), and tight-deadline jobs dispatched alone instead
+    # of coalesced; False records deadlines but schedules blind
+    deadline_aware: bool = True
+    # slack below which a deadline job refuses coalescing and runs alone
+    deadline_tight_slack_s: float = 0.25
+    # cap a compiled segment's summed est_time so a jitted program (which
+    # has no internal yield points) can delay an interactive/deadline
+    # preempt by at most one bounded slice; None = unbounded segments
+    segment_time_budget_s: Optional[float] = None
     # shared-cache cross-tenant arbitration
     cache_arbitration: str = "quota"     # "quota" | "lru"
     cache_tenant_quota_fraction: float = 0.5
@@ -111,6 +128,9 @@ class JobReport:
     priority: Priority = Priority.BATCH
     preemptions: int = 0         # times this job's super-batch yielded
     ops_salvaged: int = 0        # ops restored from preemption salvage
+    deadline_s: object = None    # the job's SLO (None = no deadline)
+    deadline_met: object = None  # None without a deadline, else bool
+    tags: tuple = ()             # opaque caller tags, echoed back
 
 
 class StratumService:
@@ -150,15 +170,18 @@ class StratumService:
             jit_cache_dir=config.jit_cache_dir,
             cache=self.cache,
             compiled_segments=config.compiled_segments,
-            plan_cache=self.plan_cache)
+            plan_cache=self.plan_cache,
+            segment_time_budget_s=config.segment_time_budget_s)
         self.queue = FairQueue(
             max_queued_total=config.max_queued_total,
             max_queued_per_tenant=config.max_queued_per_tenant,
             weights=config.priority_weights,
             aging_s=config.aging_s,
-            priority_aware=config.priority_aware)
+            priority_aware=config.priority_aware,
+            deadline_aware=config.deadline_aware)
         self.telemetry = ServiceTelemetry(cache=self.cache,
                                           plan_cache=self.plan_cache)
+        self.queue.on_shed = self._on_deadline_shed
         self._job_ids = itertools.count()
         self._running = False
         self._dispatcher: Optional[threading.Thread] = None
@@ -239,7 +262,9 @@ class StratumService:
 
     def submit(self, tenant: str, batch: PipelineBatch,
                priority: Priority = Priority.BATCH,
-               affinity: Optional[str] = None) -> PipelineFuture:
+               affinity: Optional[str] = None,
+               deadline_s: Optional[float] = None,
+               tags: Sequence[str] = ()) -> PipelineFuture:
         # ``affinity`` is a sharded-fabric routing hint; a standalone
         # service has exactly one place to run the job, so it is accepted
         # (keeping Session portable across backends) and ignored
@@ -256,10 +281,17 @@ class StratumService:
 
         future._cancel_hook = _cancel
         job = Job(id=job_id, tenant=tenant, batch=batch, future=future,
-                  priority=priority)
+                  priority=priority, deadline_s=deadline_s,
+                  tags=tuple(tags))
         self.queue.push(job)               # may raise AdmissionError
         self.telemetry.record_submit(tenant, priority)
         return future
+
+    def _on_deadline_shed(self, job: Job) -> None:
+        """Queue hook: a deadline-expired job was shed (its future already
+        failed with DeadlineExceeded)."""
+        self.telemetry.record_deadline_shed(job.tenant)
+        self.telemetry.record_job_failed(job.tenant)
 
     # -- dispatch ----------------------------------------------------------
     def _dispatch_loop(self) -> None:
@@ -270,27 +302,42 @@ class StratumService:
             if not self._slots.acquire(timeout=0.1):
                 continue
             self._adjust_free_slots(-1)
+            tight = (cfg.deadline_tight_slack_s if cfg.deadline_aware
+                     else None)
             jobs = self.queue.pop_round(
                 max_jobs=cfg.coalesce_max_jobs,
                 max_per_tenant=cfg.max_jobs_per_tenant_per_round,
-                timeout=0.1)
+                timeout=0.1, tight_slack_s=tight)
             if not jobs:
                 self._adjust_free_slots(+1)
                 self._slots.release()
                 continue
             # coalescing window: briefly gather more concurrent submissions
             # from the SAME band — super-batches stay priority-homogeneous,
-            # so a cheap interactive probe is never welded to a bulk sweep
-            deadline = time.perf_counter() + cfg.coalesce_window_s
-            while len(jobs) < cfg.coalesce_max_jobs:
-                left = deadline - time.perf_counter()
-                if left <= 0:
-                    break
-                more = self.queue.pop_round(
-                    max_jobs=cfg.coalesce_max_jobs - len(jobs),
-                    max_per_tenant=cfg.max_jobs_per_tenant_per_round,
-                    timeout=left, band=jobs[0].band)
-                jobs.extend(more)
+            # so a cheap interactive probe is never welded to a bulk sweep.
+            # A tight-deadline job skips the window entirely: it was popped
+            # alone and every waited millisecond is deadline slack spent
+            now = time.perf_counter()
+            if not (cfg.deadline_aware
+                    and any(j.slack(now) <= cfg.deadline_tight_slack_s
+                            for j in jobs)):
+                deadline = now + cfg.coalesce_window_s
+                while len(jobs) < cfg.coalesce_max_jobs:
+                    left = deadline - time.perf_counter()
+                    if left <= 0:
+                        break
+                    more = self.queue.pop_round(
+                        max_jobs=cfg.coalesce_max_jobs - len(jobs),
+                        max_per_tenant=cfg.max_jobs_per_tenant_per_round,
+                        timeout=left, band=jobs[0].band,
+                        tight_slack_s=tight)
+                    if not more:
+                        # nothing mergeable: the window timed out, or the
+                        # band holds only tight-slack jobs the extension
+                        # excludes — looping again would busy-spin on the
+                        # queue lock until the window closes
+                        break
+                    jobs.extend(more)
             with self._inflight_cond:
                 self._inflight_jobs += len(jobs)
             self._pool.submit(self._execute_guarded, jobs)
@@ -456,6 +503,11 @@ class StratumService:
                 src = run.sig_source.get(s)
                 if src and src not in ("cache", "salvage"):
                     backends[src] = backends.get(src, 0) + 1
+            deadline_met = None
+            if job.deadline_t is not None:
+                deadline_met = time.perf_counter() <= job.deadline_t
+                self.telemetry.record_deadline_outcome(job.tenant,
+                                                       deadline_met)
             report = JobReport(
                 tenant=job.tenant, job_id=job.id,
                 queue_wait_s=job.dispatch_wait_s or 0.0,
@@ -464,7 +516,8 @@ class StratumService:
                 cache_hits=hits, per_backend=backends,
                 stratum=rw, run=run,
                 priority=job.priority, preemptions=job.preemptions,
-                ops_salvaged=salvaged)
+                ops_salvaged=salvaged, deadline_s=job.deadline_s,
+                deadline_met=deadline_met, tags=job.tags)
             self.telemetry.record_job_done(job.tenant, job_sigs[j],
                                            run.sig_source)
             job.salvage = {}    # release pinned intermediates

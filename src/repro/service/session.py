@@ -163,25 +163,57 @@ class Session:
     # -- non-blocking path (the point of the subsystem) --------------------
     def submit(self, batch: PipelineBatch,
                priority: Priority = Priority.BATCH,
-               affinity: Optional[str] = None) -> PipelineFuture:
-        """Enqueue ``batch`` at ``priority``; returns immediately.
+               affinity: Optional[str] = None,
+               deadline_s: Optional[float] = None,
+               tags=(),
+               options=None) -> PipelineFuture:
+        """Enqueue ``batch``; returns immediately.
+
+        Prefer passing one :class:`repro.client.SubmitOptions` as
+        ``options`` — it carries priority, deadline, affinity and tags in
+        one frozen object and is the surface every
+        :class:`~repro.client.StratumClient` target shares; when given it
+        takes precedence over the individual keyword shims.
 
         ``affinity`` pins the job to the shard owning that key on a sharded
-        backend (ignored by a standalone service).  Raises
+        backend (ignored by a standalone service); ``deadline_s`` is an SLO
+        relative to now — a deadline-aware backend schedules EDF within the
+        priority band and sheds expired work, failing the future with
+        :class:`~repro.service.queue.DeadlineExceeded`.  Raises
         :class:`~repro.service.queue.AdmissionError` when admission control
         rejects the job (queue depth / tenant quota)."""
         if self._closed:
             raise RuntimeError(f"session {self.tenant!r} is closed")
-        return self._service.submit(self.tenant, batch, priority=priority,
-                                    affinity=affinity)
+        tenant = self.tenant
+        if options is not None:
+            priority = options.priority
+            affinity = options.affinity
+            deadline_s = options.deadline_s
+            tags = options.tags
+            # SubmitOptions.tenant is documented as an override — honor it
+            # (quotas/telemetry attribute to the tenant that asked)
+            if options.tenant is not None:
+                tenant = options.tenant
+        kwargs: dict = {"priority": priority, "affinity": affinity}
+        # only pass the newer options to backends that predate them, so a
+        # Session still fronts any object with the original submit shape
+        if deadline_s is not None:
+            kwargs["deadline_s"] = deadline_s
+        if tags:
+            kwargs["tags"] = tuple(tags)
+        return self._service.submit(tenant, batch, **kwargs)
 
     # -- drop-in synchronous compatibility with Stratum.run_batch ----------
     def run_batch(self, batch: PipelineBatch,
                   timeout: Optional[float] = None,
                   priority: Priority = Priority.BATCH,
-                  affinity: Optional[str] = None):
-        return self.submit(batch, priority=priority,
-                           affinity=affinity).result(timeout)
+                  affinity: Optional[str] = None,
+                  deadline_s: Optional[float] = None,
+                  tags=(),
+                  options=None):
+        return self.submit(batch, priority=priority, affinity=affinity,
+                           deadline_s=deadline_s, tags=tags,
+                           options=options).result(timeout)
 
     @property
     def telemetry(self) -> dict:

@@ -38,6 +38,11 @@ class TenantStats:
     ops_salvaged: int = 0
     preemptions: int = 0
     ops_attributed: int = 0
+    # deadline attainment: jobs that carried a deadline_s, how many
+    # completed within it, and how many were shed after it expired
+    deadline_jobs: int = 0
+    deadline_met: int = 0
+    deadline_shed: int = 0
     per_backend: dict = field(default_factory=dict)
     submitted_by_priority: dict = field(default_factory=dict)
     queue_wait_by_priority: dict = field(default_factory=dict)
@@ -55,6 +60,9 @@ class TenantStats:
             "ops_salvaged": self.ops_salvaged,
             "preemptions": self.preemptions,
             "ops_attributed": self.ops_attributed,
+            "deadline_jobs": self.deadline_jobs,
+            "deadline_met": self.deadline_met,
+            "deadline_shed": self.deadline_shed,
             "per_backend": dict(self.per_backend),
             "submitted_by_priority": {k.name: v for k, v
                                       in self.submitted_by_priority.items()},
@@ -154,6 +162,21 @@ class ServiceTelemetry:
                 else:
                     t.per_backend[src] = t.per_backend.get(src, 0) + 1
 
+    def record_deadline_outcome(self, tenant: str, met: bool) -> None:
+        """A deadline-carrying job completed; ``met`` = within its SLO."""
+        with self._lock:
+            t = self._t(tenant)
+            t.deadline_jobs += 1
+            if met:
+                t.deadline_met += 1
+
+    def record_deadline_shed(self, tenant: str) -> None:
+        """A job expired while queued and was shed (DeadlineExceeded)."""
+        with self._lock:
+            t = self._t(tenant)
+            t.deadline_jobs += 1
+            t.deadline_shed += 1
+
     def record_job_failed(self, tenant: str) -> None:
         with self._lock:
             self._t(tenant).jobs_failed += 1
@@ -170,11 +193,21 @@ class ServiceTelemetry:
 
     def global_snapshot(self) -> dict:
         with self._lock:
+            d_jobs = sum(t.deadline_jobs for t in self._tenants.values())
+            d_met = sum(t.deadline_met for t in self._tenants.values())
+            d_shed = sum(t.deadline_shed for t in self._tenants.values())
             out = {
                 "super_batches": self.super_batches,
                 "jobs_coalesced": self.jobs_coalesced,
                 "ops_deduped_cross_agent": self.ops_deduped_cross_agent,
                 "preemptions": self.preemptions,
+                # deadline attainment across every tenant of this shard
+                "deadline": {
+                    "jobs": d_jobs,
+                    "met": d_met,
+                    "shed": d_shed,
+                    "attainment": (d_met / d_jobs) if d_jobs else 1.0,
+                },
             }
         if self._cache is not None:
             arb = self._cache.arbitration_snapshot()   # copied under lock
@@ -197,6 +230,11 @@ class ServiceTelemetry:
             f"cross-agent ops deduped: {g['ops_deduped_cross_agent']}, "
             f"preemptions: {g['preemptions']})"
         ]
+        if g["deadline"]["jobs"]:
+            d = g["deadline"]
+            lines.append(
+                f"deadlines: {d['met']}/{d['jobs']} met "
+                f"(attainment {d['attainment']:.2f}, shed {d['shed']})")
         if "cache_cross_tenant_hits" in g:
             lines.append(
                 f"shared cache: cross-tenant hits="

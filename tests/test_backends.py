@@ -309,3 +309,150 @@ def test_plan_cache_hit_rate_in_service_and_fabric_snapshots():
         assert any("plan_cache" in row for row in g["per_shard"].values())
     finally:
         fab.stop()
+
+
+# ---------------------------------------------------------------------------
+# custom register_backend kinds get their own segments (ROADMAP item)
+# ---------------------------------------------------------------------------
+
+class _ToyBackend:
+    """Minimal custom ExecutionBackend: executes per-op through the
+    runtime helpers and stamps its own name into sig_source."""
+
+    name = "toy"
+
+    def __init__(self, plan_cache=None):
+        self.plan_cache = plan_cache
+        self.segments_executed = 0
+
+    def execute_segment(self, rt, segment, selection, report):
+        self.segments_executed += 1
+        report.waves += len(segment.waves)
+        for wave in segment.waves:
+            for op in wave.ops:
+                rt._run_op(op, selection, report)
+            rt._free_wave(wave)
+
+
+def test_partition_emits_segments_for_registered_custom_kind(monkeypatch):
+    from repro.core.backends.base import _FACTORIES
+    from repro.core.scheduler import Wave
+    from repro.core.selection import PhysicalImpl
+    monkeypatch.setitem(_FACTORIES, "toy", _ToyBackend)
+
+    def _ident(op, inputs):
+        return (inputs[0],)
+
+    toy_impl = PhysicalImpl(op_name="noop", backend="toy", fn=_ident)
+    x = T.read("uk_housing", 500, seed=0)
+    a, b = T.project(x, [1, 2]).op, T.project(x, [3, 4]).op
+    sel = {a.signature: toy_impl, b.signature: toy_impl}
+    segs = partition_segments([Wave(ops=[a]), Wave(ops=[b])], sel)
+    assert [s.kind for s in segs] == ["toy"]
+    # unregistered custom backends still flatten onto the python path
+    monkeypatch.delitem(_FACTORIES, "toy")
+    segs = partition_segments([Wave(ops=[a]), Wave(ops=[b])], sel)
+    assert [s.kind for s in segs] == ["python"]
+
+
+def test_custom_backend_executes_its_segments_end_to_end(monkeypatch):
+    """register_backend("toy") + a selection picking backend="toy" runs
+    the toy backend for whole segments through the ordinary Runtime."""
+    from repro.core import GENERIC, LazyOp
+    from repro.core.backends.base import _FACTORIES, make_backends
+    from repro.core.scheduler import SchedulerConfig, plan as make_plan
+    from repro.core.selection import BACKENDS, BackendProfile, PhysicalImpl
+    monkeypatch.setitem(_FACTORIES, "toy", _ToyBackend)
+    monkeypatch.setitem(BACKENDS, "toy",
+                        BackendProfile("toy", 1e9, 1e9, 1e-6, 1.0))
+
+    def _add_one(op, inputs):
+        return (np.asarray(inputs[0]) + 1.0,)
+
+    a = LazyOp("toy_add", GENERIC, spec={"fn": lambda v: v + 1.0},
+               inputs=(LazyOp("const0", GENERIC,
+                              spec={"fn": lambda: np.zeros(4)}).out(),))
+    sink = LazyOp("toy_add2", GENERIC, spec={"fn": lambda v: v + 1.0},
+                  inputs=(a.out(),)).out()
+    toy = PhysicalImpl(op_name="toy_add", backend="toy", fn=_add_one)
+    sel = {a.signature: toy, sink.op.signature: toy}
+    p = make_plan([sink], sel, SchedulerConfig())
+    assert "toy" in {seg.kind for seg in p.segments}
+    backends = make_backends(None, compiled=True)
+    assert "toy" in backends            # registry factory picked up
+    rt = Runtime(backends=backends)
+    results, report = rt.execute([sink], p, sel)
+    np.testing.assert_allclose(np.asarray(results[0]), np.full(4, 2.0))
+    assert backends["toy"].segments_executed >= 1
+    assert report.per_backend.get("toy", 0) == 2
+
+
+# ---------------------------------------------------------------------------
+# segment est_time budget bounds compiled-segment preempt latency
+# ---------------------------------------------------------------------------
+
+def test_segment_time_budget_splits_jax_segments():
+    budget = 1e-9           # below any wave's est_time → one wave each
+    s_nb = Stratum(memory_budget_bytes=1 << 30)
+    s_b = Stratum(memory_budget_bytes=1 << 30,
+                  segment_time_budget_s=budget)
+    batch = PipelineBatch([_variant_sink(1.0)], ["p"])
+    _, _, plan_nb, *_ = s_nb.compile_batch(batch)
+    _, _, plan_b, *_ = s_b.compile_batch(batch)
+    n_jax_nb = sum(1 for seg in plan_nb.segments if seg.kind == "jax")
+    n_jax_b = sum(1 for seg in plan_b.segments if seg.kind == "jax")
+    assert n_jax_b > n_jax_nb          # the cap split the big segment
+    for seg in plan_b.segments:
+        if seg.kind == "jax":
+            assert len(seg.waves) == 1
+    # splitting changes dispatch granularity, never results
+    r_b, _ = s_b.run_batch(batch)
+    r_nb, _ = s_nb.run_batch(batch)
+    np.testing.assert_allclose(float(np.asarray(r_b["p"])),
+                               float(np.asarray(r_nb["p"])), rtol=1e-6)
+
+
+def test_segment_pieces_respect_the_budget():
+    from repro.core.scheduler import partition_segments as ps
+    s = Stratum(memory_budget_bytes=1 << 30)
+    sinks, sel, plan, *_ = s.compile_batch(
+        PipelineBatch([_variant_sink(1.0)], ["p"]))
+    base = [seg for seg in ps(plan.waves, sel) if seg.kind == "jax"]
+    assert base, "workload must produce a jax segment"
+    times = [w.est_time for seg in base for w in seg.waves]
+    budget = max(times) * 1.5          # forces a split mid-segment
+    for seg in ps(plan.waves, sel, time_budget_s=budget):
+        if seg.kind != "jax" or len(seg.waves) == 1:
+            continue                   # single waves may overshoot alone
+        assert sum(w.est_time for w in seg.waves) <= budget
+
+
+def test_budget_bounds_preempt_latency_at_segment_boundaries():
+    """With the cap, a preempt check fires BETWEEN pieces of what would
+    have been one monolithic compiled segment: the yield arrives with
+    partial salvage instead of after the whole segment."""
+    s = Stratum(memory_budget_bytes=1 << 30, segment_time_budget_s=1e-9)
+    batch = PipelineBatch([_variant_sink(1.0)], ["p"])
+    sinks, sel, plan, candidates, *_ = s.compile_batch(batch)
+    n_ops = sum(len(w.ops) for w in plan.waves)
+    fired = {"n": 0}
+
+    def preempt_after_first_progress():
+        fired["n"] += 1
+        return fired["n"] > 2          # let the first segments run
+
+    rt = Runtime(preempt_check=preempt_after_first_progress,
+                 backends=s._backends)
+    with pytest.raises(ExecutionPreempted) as exc:
+        rt.execute(sinks, plan, sel)
+    salvage = exc.value.salvage
+    assert 0 < len(salvage) < n_ops    # a bounded slice ran, not the lot
+    # the salvage resumes losslessly (preemption semantics preserved)
+    rt2 = Runtime(preloaded=salvage, backends=s._backends)
+    results, report = rt2.execute(sinks, plan, sel)
+    ref, _ = Stratum(memory_budget_bytes=1 << 30).run_batch(batch)
+    np.testing.assert_allclose(float(np.asarray(results[0])),
+                               float(np.asarray(ref["p"])), rtol=1e-6)
+    # every salvaged value is honored; completed-then-freed ops the
+    # reverse-topo sweep skips count as salvaged too, hence >=
+    assert report.ops_salvaged >= len(salvage)

@@ -1,0 +1,238 @@
+"""The unified submission surface: StratumClient targets, SubmitOptions,
+StratumConfig, and deadline semantics uniform across local/service/fabric.
+
+The parametrized suite runs the SAME submission code (priority + affinity
++ deadline + tags via SubmitOptions) against all three targets and
+requires identical results — the api_redesign acceptance criterion.
+"""
+
+import warnings
+
+import numpy as np
+import pytest
+
+import repro
+from repro.client import (CacheConfig, FabricTarget, LocalTarget,
+                          OptimizerConfig, RuntimeConfig, ServiceTarget,
+                          ServiceTuning, StratumConfig, SubmitOptions,
+                          connect)
+from repro.core import PipelineBatch, Stratum
+from repro.service import DeadlineExceeded, Priority
+import repro.tabular as T
+
+
+def _pipeline(n_rows=3000, cols=(10, 11, 12), kind="mae"):
+    x = T.read("uk_housing", n_rows, seed=0)
+    xs = T.scale(T.impute(T.project(x, list(cols))))
+    y = T.project(x, [0])
+    return T.metric(T.project(xs, [0]), y, kind=kind)
+
+
+def _batch(name="p", **kw):
+    return PipelineBatch([_pipeline(**kw)], [name])
+
+
+def _config(**overrides):
+    base = dict(memory_budget_bytes=1 << 30, n_executors=1, n_shards=2,
+                coalesce_window_s=0.01)
+    base.update(overrides)
+    return StratumConfig.make(**base)
+
+
+@pytest.fixture(params=["local", "service", "fabric"])
+def client(request):
+    with connect(request.param, _config()) as c:
+        yield c
+
+
+# ---------------------------------------------------------------------------
+# the acceptance suite: one submission path, three targets, same answers
+# ---------------------------------------------------------------------------
+
+def test_same_submission_code_identical_results(client):
+    """priority + affinity + deadline + tags via SubmitOptions against
+    every target; values must match the bare-Stratum reference."""
+    ref, _ = Stratum(memory_budget_bytes=1 << 30).run_batch(_batch())
+    opts = SubmitOptions(priority=Priority.INTERACTIVE, affinity="pin",
+                         deadline_s=120, tenant="agent-0",
+                         tags=("probe", "r0"))
+    results, report = client.submit(_batch(), opts).result(timeout=120)
+    assert set(results) == {"p"}
+    np.testing.assert_allclose(np.asarray(results["p"]),
+                               np.asarray(ref["p"]), rtol=1e-9)
+    # the submitting tenant is attributed in telemetry on every target
+    assert "agent-0" in client.telemetry.snapshot()
+
+
+def test_run_single_sink(client):
+    value, _ = client.run(_pipeline(), options=SubmitOptions(deadline_s=120))
+    ref, _ = Stratum(memory_budget_bytes=1 << 30).run_batch(_batch())
+    np.testing.assert_allclose(np.asarray(value), np.asarray(ref["p"]),
+                               rtol=1e-9)
+
+
+def test_expired_deadline_resolves_deadline_exceeded(client):
+    """A hopeless deadline fails with DeadlineExceeded on EVERY target —
+    queued targets shed, the local target detects the late finish —
+    and attainment telemetry records the miss uniformly."""
+    with pytest.raises(DeadlineExceeded):
+        client.submit(_batch(), SubmitOptions(deadline_s=1e-9)
+                      ).result(timeout=60)
+    d = client.telemetry.global_snapshot()["deadline"]
+    assert d["jobs"] >= 1 and d["met"] < d["jobs"]
+
+
+def test_met_deadline_counts_in_attainment(client):
+    client.submit(_batch(), SubmitOptions(deadline_s=120)).result(timeout=120)
+    d = client.telemetry.global_snapshot()["deadline"]
+    assert d["jobs"] == d["met"] == 1
+    assert d["attainment"] == 1.0
+
+
+def test_tenant_scoped_session(client):
+    ses = client.session("agent-7")
+    results, _ = ses.submit(_batch()).result(timeout=120)
+    assert set(results) == {"p"}
+    assert "agent-7" in client.telemetry.snapshot()
+
+
+def test_closed_client_rejects_submissions(client):
+    client.close()
+    with pytest.raises(RuntimeError):
+        client.submit(_batch())
+
+
+# ---------------------------------------------------------------------------
+# SubmitOptions semantics
+# ---------------------------------------------------------------------------
+
+def test_submit_options_validation():
+    with pytest.raises(ValueError):
+        SubmitOptions(deadline_s=0)
+    with pytest.raises(ValueError):
+        SubmitOptions(deadline_s=-1.0)
+    opts = SubmitOptions(priority=1, tags=["a", "b"])   # coercions
+    assert opts.priority is Priority.BATCH
+    assert opts.tags == ("a", "b")
+    assert opts.with_(deadline_s=2.0).deadline_s == 2.0
+    assert opts.deadline_s is None                      # frozen original
+
+
+def test_tags_echoed_on_service_and_fabric_reports():
+    for target in ("service", "fabric"):
+        with connect(target, _config()) as c:
+            _, report = c.submit(
+                _batch(), SubmitOptions(deadline_s=120, tags=("x", "y"))
+                ).result(timeout=120)
+            assert tuple(report.tags) == ("x", "y")
+            assert report.deadline_met is True
+
+
+# ---------------------------------------------------------------------------
+# StratumConfig: layered sections, flat constructor, bridges
+# ---------------------------------------------------------------------------
+
+def test_config_make_routes_flat_kwargs_to_sections():
+    cfg = StratumConfig.make(memory_budget_bytes=123, enable=("logical",),
+                             fraction=0.2, n_shards=5, aging_s=None)
+    assert cfg.runtime.memory_budget_bytes == 123
+    assert cfg.optimizer.enable == ("logical",)
+    assert cfg.cache.fraction == 0.2
+    assert cfg.service.n_shards == 5
+    assert cfg.service.aging_s is None
+    with pytest.raises(TypeError):
+        StratumConfig.make(not_a_field=1)
+
+
+def test_config_accepts_section_objects():
+    cfg = StratumConfig.make(
+        optimizer=OptimizerConfig(enable=("logical",)),
+        runtime=RuntimeConfig(memory_budget_bytes=77),
+        cache=CacheConfig(fraction=0.3),
+        service=ServiceTuning(n_executors=3))
+    assert cfg.runtime.memory_budget_bytes == 77
+    assert cfg.service.n_executors == 3
+
+
+def test_config_bridges_to_legacy_constructors():
+    cfg = StratumConfig.make(memory_budget_bytes=1 << 28, n_executors=3,
+                             deadline_tight_slack_s=0.5,
+                             segment_time_budget_s=0.1)
+    sc = cfg.service_config()
+    assert sc.memory_budget_bytes == 1 << 28
+    assert sc.n_executors == 3
+    assert sc.deadline_tight_slack_s == 0.5
+    assert sc.segment_time_budget_s == 0.1
+    s = Stratum(**cfg.stratum_kwargs())
+    assert s.memory_budget_bytes == 1 << 28
+    assert s.segment_time_budget_s == 0.1
+
+
+def test_connect_rejects_unknown_target():
+    with pytest.raises(ValueError):
+        connect("cloud")
+
+
+def test_package_level_lazy_exports():
+    assert repro.StratumClient is not None
+    assert repro.SubmitOptions is SubmitOptions
+    assert repro.connect is connect
+    with pytest.raises(AttributeError):
+        repro.not_a_thing        # noqa: B018
+
+
+# ---------------------------------------------------------------------------
+# Stratum constructor validation (satellite: no silently-dead kwargs)
+# ---------------------------------------------------------------------------
+
+def test_stratum_warns_on_cache_kwargs_with_cache_disabled():
+    import repro.core.api as api
+    api._warned_once.clear()
+    with pytest.warns(UserWarning, match="cache_fraction"):
+        Stratum(enable=("logical",), cache_fraction=0.2)
+    with pytest.warns(UserWarning, match="spill_dir"):
+        Stratum(enable=("logical",), spill_dir="/tmp/nowhere")
+
+
+def test_stratum_warns_on_plan_cache_kwargs_without_compiled_segments():
+    import repro.core.api as api
+    api._warned_once.clear()
+    with pytest.warns(UserWarning, match="plan_cache_entries"):
+        Stratum(compiled_segments=False, plan_cache_entries=7)
+
+
+def test_stratum_warns_once_per_process():
+    import repro.core.api as api
+    api._warned_once.clear()
+    with pytest.warns(UserWarning):
+        Stratum(enable=("logical",), cache_fraction=0.2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")       # a repeat would now raise
+        Stratum(enable=("logical",), cache_fraction=0.2)
+
+
+def test_stratum_defaults_unchanged_without_warned_kwargs():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        s = Stratum(memory_budget_bytes=1 << 30)
+    assert s.cache is not None               # default cache still built
+    assert s.plan_cache is not None
+
+
+# ---------------------------------------------------------------------------
+# target-agnostic AsyncAIDESearch (tentpole: the driver over a client)
+# ---------------------------------------------------------------------------
+
+def test_async_aide_search_runs_on_every_client_target():
+    from repro.agents import AIDEAgent, AsyncAIDESearch
+    bests = {}
+    for target in ("service", "fabric"):
+        with connect(target, _config()) as c:
+            agent = AIDEAgent(n_rows=1500, cv_k=2, seed=3)
+            search = AsyncAIDESearch(c.session("agent-0"), agent,
+                                     batch_size=2, max_inflight=2,
+                                     shard_affinity=True, deadline_s=300)
+            node = search.run(n_rounds=2)
+            assert node is not None and node.score is not None
+            bests[target] = node.score
+    assert bests["service"] == pytest.approx(bests["fabric"], rel=1e-9)

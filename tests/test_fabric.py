@@ -526,3 +526,102 @@ def test_fabric_cancel_after_completion_returns_false():
         assert fab.router.cancel("no-such-envelope") is False
     finally:
         fab.stop()
+
+
+# ---------------------------------------------------------------------------
+# SubmitOptions on the wire: deadline/tags through the envelope codec
+# ---------------------------------------------------------------------------
+
+def test_job_envelope_carries_deadline_and_tags_through_the_codec():
+    batch = _batch()
+    env = JobEnvelope(envelope_id="e-1", tenant="t", priority=1,
+                      routing_key=routing_key_for(batch), batch=batch,
+                      deadline_s=1.5, tags=("probe", "r3"))
+    out = decode_job(encode_job(env))
+    assert out.deadline_s == 1.5
+    assert out.tags == ("probe", "r3")
+    # deadline_t is client-local state and must NOT cross the wire
+    assert out.deadline_t is None
+    # deadline-free envelopes stay deadline-free
+    bare = decode_job(encode_job(JobEnvelope(
+        envelope_id="e-2", tenant="t", priority=1,
+        routing_key=env.routing_key, batch=batch)))
+    assert bare.deadline_s is None and bare.tags == ()
+
+
+def test_deadline_envelope_corruption_still_raises_codec_error():
+    env = JobEnvelope("e", "t", 1, "rk", _batch(), deadline_s=2.0,
+                      tags=("x",))
+    data = encode_job(env)
+    flipped = data[:40] + bytes([data[40] ^ 0xFF]) + data[41:]
+    with pytest.raises(CodecError):
+        decode_job(flipped)
+
+
+def test_stale_attempt_reply_dropped_for_deadline_job():
+    """A failover bumps the attempt; a stale reply from the dead shard
+    must not resolve a deadline-carrying future."""
+    from concurrent.futures import TimeoutError as FTimeout
+    from repro.service.fabric.envelope import FabricJobReport
+    fab = _fabric(n_shards=1, autostart=False)
+    try:
+        fut = fab.session("t").submit(_batch(), deadline_s=300.0,
+                                      tags=("slo",))
+        (eid, pending), = fab.router._pending.items()
+        assert pending.envelope.deadline_s is not None
+        pending.envelope.attempt += 1            # as a failover would
+        stale = encode_result(ResultEnvelope(
+            envelope_id=eid, tenant="t", shard_id="s", ok=True,
+            results={"p": np.zeros(1)},
+            report=FabricJobReport(tenant="t", envelope_id=eid,
+                                   shard_id="s"),
+            attempt=0))                          # pre-failover attempt
+        fab.router._on_result(stale)
+        assert not fut.done()                    # stale reply dropped
+        assert fab.router.pending_count() == 1   # still owed an answer
+    finally:
+        fab.stop()
+
+
+def test_fabric_future_resolves_deadline_exceeded_like_an_error():
+    """An expired deadline sheds ON THE SHARD; the DeadlineExceeded
+    travels back through the result codec and resolves the future."""
+    from repro.service import DeadlineExceeded
+    fab = _fabric(n_shards=2)
+    try:
+        ses = fab.session("t")
+        with pytest.raises(DeadlineExceeded):
+            ses.submit(_batch(), deadline_s=1e-9).result(timeout=60)
+        # ... exactly like a normal error: done, not cancelled, and the
+        # exception is also readable without raising
+        fut = ses.submit(_batch(), deadline_s=1e-9)
+        assert isinstance(fut.exception(timeout=60), DeadlineExceeded)
+        assert fut.done() and not fut.cancelled()
+        # attainment aggregates fabric-wide from the shard ledgers
+        d = fab.telemetry.global_snapshot()["deadline"]
+        assert d["jobs"] == 2 and d["shed"] == 2 and d["met"] == 0
+    finally:
+        fab.stop()
+
+
+def test_remaining_deadline_shrinks_at_reencode_on_failover():
+    """Failover re-encodes the envelope; the deadline budget that crossed
+    the wire must be the REMAINING budget, not the original SLO."""
+    import time as _time
+    fab = _fabric(n_shards=2, autostart=False)
+    try:
+        victim = fab.shard_ids()[0]
+        fut = fab.session("t").submit(
+            _batch(), deadline_s=300.0,
+            affinity=_key_for_shard(fab, victim))
+        (eid, pending), = fab.router._pending.items()
+        sent_first = pending.envelope.deadline_s
+        _time.sleep(0.05)
+        assert fab.fail_shard(victim) == 1       # re-routes + re-encodes
+        sent_second = fab.router._pending[eid].envelope.deadline_s
+        assert sent_second < sent_first <= 300.0
+        fab.start()
+        results, report = fut.result(timeout=180)
+        assert "p" in results and report.deadline_met is True
+    finally:
+        fab.stop()

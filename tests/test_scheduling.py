@@ -378,3 +378,164 @@ def test_telemetry_reports_priority_and_cache_state():
         json.dumps(snap), json.dumps(g)   # JSON-serializable surfaces
     finally:
         svc.stop()
+
+
+# ---------------------------------------------------------------------------
+# deadline-aware scheduling: EDF tie-break, shedding, tight-slack dispatch
+# ---------------------------------------------------------------------------
+
+def _djob(i, tenant="t", deadline_s=None, priority=Priority.BATCH):
+    return QJob(id=i, tenant=tenant, batch=None,
+                future=PipelineFuture(i, tenant, priority),
+                priority=priority, deadline_s=deadline_s)
+
+
+def test_edf_serves_deadline_tenant_before_round_robin():
+    """Within the WFQ-chosen band, the tenant holding the earliest
+    deadline is served first; deadline-free tenants keep RR order."""
+    q = FairQueue()
+    q.push(_djob(0, "bulk-a"))
+    q.push(_djob(1, "bulk-b"))
+    q.push(_djob(2, "slo-loose", deadline_s=60.0))
+    q.push(_djob(3, "slo-tight", deadline_s=10.0))
+    out = q.pop_round(max_jobs=4, max_per_tenant=1)
+    assert [j.tenant for j in out] == \
+        ["slo-tight", "slo-loose", "bulk-a", "bulk-b"]
+
+
+def test_edf_orders_within_one_tenant_fifo():
+    q = FairQueue()
+    q.push(_djob(0, "t", deadline_s=60.0))
+    q.push(_djob(1, "t", deadline_s=5.0))
+    q.push(_djob(2, "t"))
+    out = q.pop_round(max_jobs=3, max_per_tenant=3)
+    assert [j.id for j in out] == [1, 0, 2]
+
+
+def test_expired_job_is_shed_with_deadline_exceeded():
+    from repro.service import DeadlineExceeded
+    q = FairQueue()
+    shed_seen = []
+    q.on_shed = shed_seen.append
+    job = _djob(0, "t", deadline_s=1e-9)
+    q.push(_djob(1, "t"))
+    q.push(job)
+    time.sleep(0.002)
+    out = q.pop_round(max_jobs=4, max_per_tenant=4)
+    assert [j.id for j in out] == [1]          # survivor still served
+    assert [j.id for j in shed_seen] == [0]
+    assert q.pending() == 0
+    with pytest.raises(DeadlineExceeded):
+        job.future.result(timeout=0)
+
+
+def test_tight_slack_job_pops_alone_never_into_a_merge():
+    q = FairQueue()
+    q.push(_djob(0, "bulk-a"))
+    q.push(_djob(1, "bulk-b"))
+    q.push(_djob(2, "slo", deadline_s=0.2))
+    out = q.pop_round(max_jobs=4, max_per_tenant=1, tight_slack_s=1.0)
+    assert [j.tenant for j in out] == ["slo"]  # solo: refuses the merge
+    assert q.pending() == 2
+    # an extension pop (band=...) must leave a tight job queued
+    q.push(_djob(3, "slo", deadline_s=0.2))
+    more = q.pop_round(max_jobs=4, max_per_tenant=1,
+                       band=int(Priority.BATCH), tight_slack_s=1.0)
+    assert all(j.deadline_s is None for j in more)
+    assert q.pending() == 1
+
+
+def test_deadline_blind_queue_records_but_ignores_deadlines():
+    q = FairQueue(deadline_aware=False)
+    q.push(_djob(0, "bulk"))
+    q.push(_djob(1, "slo", deadline_s=1e-9))
+    time.sleep(0.002)
+    out = q.pop_round(max_jobs=4, max_per_tenant=1, tight_slack_s=1.0)
+    assert [j.id for j in out] == [0, 1]       # RR order, nothing shed
+    assert out[1].deadline_t is not None       # deadline still recorded
+
+
+def test_deadline_free_jobs_schedule_exactly_as_before():
+    q = FairQueue()
+    for i, tenant in enumerate(("a", "b", "a", "c")):
+        q.push(_djob(i, tenant))
+    out = q.pop_round(max_jobs=3, max_per_tenant=1, tight_slack_s=0.25)
+    assert [j.tenant for j in out] == ["a", "b", "c"]
+    assert q.pending() == 1
+
+
+def test_service_deadline_attainment_telemetry_and_shed():
+    from repro.service import DeadlineExceeded
+    svc = StratumService(memory_budget_bytes=1 << 30, n_executors=1,
+                         coalesce_window_s=0.0)
+    try:
+        ses = svc.session("t")
+        _, rep = ses.submit(_batch(n_rows=1000), deadline_s=120,
+                            tags=("probe",)).result(timeout=60)
+        assert rep.deadline_met is True
+        assert rep.deadline_s == 120
+        assert rep.tags == ("probe",)
+        with pytest.raises(DeadlineExceeded):
+            ses.submit(_batch(n_rows=1000), deadline_s=1e-9
+                       ).result(timeout=60)
+        snap = svc.telemetry.snapshot()["t"]
+        assert snap["deadline_jobs"] == 2
+        assert snap["deadline_met"] == 1
+        assert snap["deadline_shed"] == 1
+        g = svc.telemetry.global_snapshot()
+        assert g["deadline"] == {"jobs": 2, "met": 1, "shed": 1,
+                                 "attainment": 0.5}
+        assert "deadlines:" in svc.telemetry.report()
+    finally:
+        svc.stop()
+
+
+def test_jobs_without_deadlines_leave_attainment_at_one():
+    svc = StratumService(memory_budget_bytes=1 << 30, n_executors=1,
+                         coalesce_window_s=0.0)
+    try:
+        svc.session("t").submit(_batch(n_rows=1000)).result(timeout=60)
+        g = svc.telemetry.global_snapshot()
+        assert g["deadline"]["jobs"] == 0
+        assert g["deadline"]["attainment"] == 1.0
+    finally:
+        svc.stop()
+
+
+def test_deadline_total_accounting_across_operations():
+    """The O(0)-when-unused fast path depends on the deadline-job counter
+    staying exact across push/pop/cancel/shed/requeue/close."""
+    q = FairQueue()
+    assert q._deadline_total == 0
+    jobs = [_djob(0, "t", deadline_s=60.0), _djob(1, "t"),
+            _djob(2, "u", deadline_s=1e-9), _djob(3, "u", deadline_s=60.0)]
+    for j in jobs:
+        q.push(j)
+    assert q._deadline_total == 3
+    time.sleep(0.002)
+    out = q.pop_round(max_jobs=1, max_per_tenant=1)   # sheds #2, takes #0
+    assert [j.id for j in out] == [0]
+    assert q._deadline_total == 1
+    q.requeue(out)
+    assert q._deadline_total == 2
+    assert q.cancel(3) is True
+    assert q._deadline_total == 1
+    q.close()
+    assert q._deadline_total == 0
+    q.reopen()
+
+
+def test_session_options_tenant_override_attributes_correctly():
+    from repro.client import SubmitOptions
+    svc = StratumService(memory_budget_bytes=1 << 30, n_executors=1,
+                         coalesce_window_s=0.0)
+    try:
+        ses = svc.session("default-tenant")
+        ses.submit(_batch(n_rows=1000),
+                   options=SubmitOptions(tenant="override-tenant")
+                   ).result(timeout=60)
+        snap = svc.telemetry.snapshot()
+        assert "override-tenant" in snap
+        assert "default-tenant" not in snap
+    finally:
+        svc.stop()
