@@ -39,6 +39,7 @@ GATES = (
     ("sharded_smoke", "speedup"),
     ("compiled_smoke", "speedup"),
     ("deadline_smoke", "attainment_aware"),
+    ("fabric_proc_smoke", "completed_frac"),
 )
 
 

@@ -24,9 +24,14 @@ Sections:
                    scheduling (EDF + tight-slack solo dispatch +
                    shedding) vs deadline-blind, same priority band
                    (merged into BENCH_service.json)
+  * fabric_proc  — CPU-bound cohort flood through 1 vs K out-of-process
+                   worker shards (ProcStratumFabric); records speedup,
+                   n_cpus and zero-loss completed_frac (merged into
+                   BENCH_service.json)
 
 ``--smoke`` runs CI-sized variants of the ``service``, ``sharded``,
-``compiled`` and ``deadline`` sections (smaller rows / agents / rounds)
+``compiled``, ``deadline`` and ``fabric_proc`` sections (smaller rows /
+agents / rounds)
 and records them under ``*_smoke`` keys, which
 ``benchmarks/check_regression.py`` gates against the committed baseline;
 the other sections ignore the flag.
@@ -109,6 +114,11 @@ def _compiled(args):
     return compiled_rows(smoke=args.smoke, out=args.out)
 
 
+def _fabric_proc(args):
+    from .e2e_agentic import proc_fabric_rows
+    return proc_fabric_rows(smoke=args.smoke, out=args.out)
+
+
 SECTIONS = {
     "characterize": _characterize,
     "micro": _micro,
@@ -120,6 +130,7 @@ SECTIONS = {
     "sharded": _sharded,
     "compiled": _compiled,
     "deadline": _deadline,
+    "fabric_proc": _fabric_proc,
 }
 
 

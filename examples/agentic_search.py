@@ -29,6 +29,7 @@ the attainment rate from telemetry afterwards.
     PYTHONPATH=src python examples/agentic_search.py --target service --agents 4
     PYTHONPATH=src python examples/agentic_search.py --target fabric --shards 2 \
         --deadline-ms 2000
+    PYTHONPATH=src python examples/agentic_search.py --processes --shards 2
 """
 
 import argparse
@@ -76,7 +77,8 @@ def run_async(args) -> None:
     t0 = time.time()
     cfg = StratumConfig.make(memory_budget_bytes=4 << 30,
                              coalesce_window_s=0.05,
-                             n_shards=args.shards)
+                             n_shards=args.shards,
+                             processes=args.processes)
     deadline_s = args.deadline_ms / 1000 if args.deadline_ms else None
     with connect(args.target, cfg) as client:
         bests = [None] * args.agents
@@ -125,6 +127,9 @@ def main():
     ap.add_argument("--shards", type=int, default=0,
                     help="shard count (implies --target fabric; "
                          "default 2 when --target fabric is given alone)")
+    ap.add_argument("--processes", action="store_true",
+                    help="run each fabric shard in its own OS process "
+                         "(implies --target fabric)")
     ap.add_argument("--deadline-ms", type=int, default=0,
                     help="SLO for refinement submissions (async targets); "
                          "late refinements are shed with DeadlineExceeded")
@@ -135,7 +140,7 @@ def main():
     args = ap.parse_args()
     if args.target == "local" and (args.service or args.shards):
         args.target = "fabric" if args.shards else "service"
-    if args.shards and args.target != "fabric":
+    if (args.shards or args.processes) and args.target != "fabric":
         args.target = "fabric"
     if args.target == "fabric" and not args.shards:
         args.shards = 2

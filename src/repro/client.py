@@ -164,6 +164,16 @@ class ServiceTuning:
     n_shards: int = 2
     routing: str = "sources"
     vnodes: int = 64
+    # out-of-process fabric: host each shard in its own worker process
+    # (real cores, real crash isolation) behind the same Session API
+    processes: bool = False
+    # elastic shard bounds (min, max); None = fixed n_shards.  Only
+    # meaningful with processes=True — shards are spawned under
+    # queue/deadline pressure and drained (with a warm cache hand-off to
+    # the ring successor) when idle
+    autoscale: Optional[Tuple[int, int]] = None
+    worker_heartbeat_s: float = 0.25
+    worker_heartbeat_timeout_s: float = 5.0
 
 
 @dataclass(frozen=True)
@@ -516,9 +526,27 @@ class FabricTarget(StratumClient):
         self._owned = fabric is None
         if fabric is None:
             s = self.config.service
-            fabric = StratumFabric(n_shards=s.n_shards,
-                                   config=self.config.service_config(),
-                                   routing=s.routing, vnodes=s.vnodes)
+            if s.processes:
+                # out-of-process shards: same router/ring/Session surface,
+                # each shard a supervised worker process
+                from .service.fabric.proc import (ProcConfig,
+                                                  ProcStratumFabric)
+                fabric = ProcStratumFabric(
+                    n_shards=s.n_shards,
+                    config=self.config.service_config(),
+                    routing=s.routing, vnodes=s.vnodes,
+                    autoscale=s.autoscale,
+                    proc=ProcConfig(
+                        heartbeat_s=s.worker_heartbeat_s,
+                        heartbeat_timeout_s=s.worker_heartbeat_timeout_s))
+            else:
+                if s.autoscale is not None:
+                    raise ValueError(
+                        "autoscale requires processes=True (only the "
+                        "out-of-process fabric can grow and shrink)")
+                fabric = StratumFabric(n_shards=s.n_shards,
+                                       config=self.config.service_config(),
+                                       routing=s.routing, vnodes=s.vnodes)
         self._fabric = fabric
 
     def submit(self, batch: PipelineBatch,

@@ -237,6 +237,42 @@ class IntermediateCache:
             if os.path.exists(tmp):
                 os.unlink(tmp)
 
+    # -- warm hand-off (elastic fabric: draining shard → ring successor) -----
+    def export_hot_entries(self, max_entries: int = 64
+                           ) -> list[tuple[str, bytes]]:
+        """The hottest RAM entries as ``(sig, spill_bytes)`` pairs, most
+        recently used first.  ``spill_bytes`` is exactly what ``_spill``
+        writes to disk (a pickled host-array tuple), so the receiving side
+        ingests them with the same code path that reloads a spill file —
+        this is the wire form of a draining shard's warm cache hand-off."""
+        with self._lock:
+            sigs = list(self._ram)[-max_entries:][::-1]   # MRU first
+            values = [self._ram[s] for s in sigs]
+        out: list[tuple[str, bytes]] = []
+        for sig, outputs in zip(sigs, values):
+            host = tuple(np.asarray(o) if hasattr(o, "shape") else o
+                         for o in outputs)
+            try:
+                out.append((sig, pickle.dumps(
+                    host, protocol=pickle.HIGHEST_PROTOCOL)))
+            except Exception:  # noqa: BLE001 — skip unpicklable payloads
+                continue
+        return out
+
+    def import_spilled(self, entries) -> int:
+        """Ingest ``(sig, spill_bytes)`` pairs produced by
+        :meth:`export_hot_entries` (or read from spill files).  Corrupt
+        entries are skipped; returns how many were inserted."""
+        n = 0
+        for sig, blob in entries:
+            try:
+                outputs = pickle.loads(blob)
+            except Exception:  # noqa: BLE001 — corrupt hand-off entry
+                continue
+            self.put(sig, outputs, spill=False)
+            n += 1
+        return n
+
     # -- introspection -------------------------------------------------------
     def tenant_bytes(self) -> dict:
         """Bytes currently charged per tenant (RAM entries only)."""

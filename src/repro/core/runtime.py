@@ -87,6 +87,14 @@ class ExecutionPreempted(Exception):
         self.salvage = salvage
         self.waves_done = waves_done
 
+    def __reduce__(self):
+        # default exception pickling replays __init__ with ``args`` (the
+        # formatted message) — a TypeError at *unpickle* time on the far
+        # side of a process boundary.  Keep the (salvage, waves_done) form
+        # so a preemption yield crossing the proc-fabric wire (worker →
+        # supervisor diagnostics) survives with its payload intact.
+        return (ExecutionPreempted, (self.salvage, self.waves_done))
+
 
 def execute_reference(op: LazyOp, inputs: Sequence[Any]) -> tuple:
     """Reference evaluator (used by constant folding and as fallback)."""

@@ -20,6 +20,7 @@ from .envelope import (CancelEnvelope, CodecError, FabricJobReport,
                        decode_job, decode_result, encode_cancel, encode_job,
                        encode_result, routing_key_for)
 from .fabric import ShardedStratum, StratumFabric
+from .proc import ProcConfig, ProcStratumFabric
 from .ring import ConsistentHashRing
 from .router import NoShardsError, ShardRouter
 from .telemetry import FabricTelemetry
@@ -28,8 +29,8 @@ from .transport import LocalTransport, Transport, TransportError
 __all__ = [
     "CancelEnvelope", "CodecError", "ConsistentHashRing", "FabricJobReport",
     "FabricTelemetry", "JobEnvelope", "LocalTransport", "NoShardsError",
-    "ResultEnvelope", "ShardRouter", "ShardedStratum", "StratumFabric",
-    "Transport", "TransportError", "decode_cancel", "decode_job",
-    "decode_result", "encode_cancel", "encode_job", "encode_result",
-    "routing_key_for",
+    "ProcConfig", "ProcStratumFabric", "ResultEnvelope", "ShardRouter",
+    "ShardedStratum", "StratumFabric", "Transport", "TransportError",
+    "decode_cancel", "decode_job", "decode_result", "encode_cancel",
+    "encode_job", "encode_result", "routing_key_for",
 ]

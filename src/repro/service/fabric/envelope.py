@@ -179,6 +179,21 @@ def _unframe(data: bytes, kind: int) -> bytes:
     return payload
 
 
+def frame_kind(data: bytes) -> int:
+    """The kind byte of a wire frame, after validating magic + version.
+
+    Multiplexed byte channels (the out-of-process transport carries jobs,
+    results, cancels and control frames on one stream) peek this to
+    dispatch a frame without committing to a decoder; the per-kind
+    ``decode_*`` function still re-validates everything including the
+    checksum."""
+    if len(data) < 22 or data[:4] != _MAGIC:
+        raise CodecError("not a fabric wire frame")
+    if data[4] != _VERSION:
+        raise CodecError(f"wire version {data[4]} != {_VERSION}")
+    return data[5]
+
+
 def _host(value: Any) -> Any:
     """Device-independent representation: arrays to host numpy."""
     if isinstance(value, (tuple, list)):
@@ -236,16 +251,34 @@ def decode_cancel(data: bytes) -> CancelEnvelope:
                           attempt=d.get("attempt", 0))
 
 
+def _encode_error(error: BaseException) -> bytes:
+    """Pickle a wire-crossing error, degrading as little as possible.
+
+    An :class:`~repro.core.runtime.ExecutionError` whose *cause* (or an op
+    spec payload) doesn't pickle is re-raised with the cause stringified —
+    keeping ``.op``/``.cause`` attributes intact for the tenant — before
+    falling all the way back to an opaque ``RuntimeError``."""
+    try:
+        return pickle.dumps(error, protocol=pickle.HIGHEST_PROTOCOL)
+    except Exception:  # noqa: BLE001 — unpicklable cause/op payloads
+        pass
+    from ...core.runtime import ExecutionError
+    if isinstance(error, ExecutionError):
+        try:
+            return pickle.dumps(
+                ExecutionError(error.op, RuntimeError(repr(error.cause))),
+                protocol=pickle.HIGHEST_PROTOCOL)
+        except Exception:  # noqa: BLE001 — the op itself doesn't pickle
+            pass
+    return pickle.dumps(
+        RuntimeError(f"{type(error).__name__}: {error}"),
+        protocol=pickle.HIGHEST_PROTOCOL)
+
+
 def encode_result(env: ResultEnvelope) -> bytes:
     error: Optional[bytes] = None
     if env.error is not None:
-        try:
-            error = pickle.dumps(env.error,
-                                 protocol=pickle.HIGHEST_PROTOCOL)
-        except Exception:  # noqa: BLE001 — unpicklable cause/op payloads
-            error = pickle.dumps(
-                RuntimeError(f"{type(env.error).__name__}: {env.error}"),
-                protocol=pickle.HIGHEST_PROTOCOL)
+        error = _encode_error(env.error)
     payload = pickle.dumps(
         {"envelope_id": env.envelope_id, "tenant": env.tenant,
          "shard_id": env.shard_id, "ok": env.ok,

@@ -104,6 +104,16 @@ class ShardRouter:
         with self._lock:
             return self._ring.nodes()
 
+    def successor_of(self, shard_id: str) -> Optional[str]:
+        """The next distinct live shard clockwise of ``shard_id`` on the
+        ring — where the bulk of a departing shard's keys remap, and so
+        the right recipient for its warm cache entries on scale-down."""
+        with self._lock:
+            for node in self._ring.successors(shard_id,
+                                              exclude={shard_id}):
+                return node
+        return None
+
     def fail_shard(self, shard_id: str) -> int:
         """Declare ``shard_id`` dead: silence its transport, take it off
         the ring, requeue its pending work onto ring successors.  Returns

@@ -30,9 +30,14 @@ class FabricTelemetry:
     during failover/rebalance, and iterating it directly from a
     monitoring thread would race those membership changes."""
 
-    def __init__(self, router, shards) -> None:
+    def __init__(self, router, shards, extra=None) -> None:
         self._router = router
         self._shards = shards     # () -> dict shard_id -> StratumService
+        # optional zero-argument callable merged into global_snapshot():
+        # lets a fabric variant (the out-of-process fabric adds worker
+        # pids, autoscale and warm-hand-off counters under a "proc" key)
+        # extend the snapshot without subclassing the aggregation
+        self._extra = extra
         # final ledgers of failed/drained shards: fabric-wide counters must
         # stay monotone — a shard's history doesn't vanish with the shard
         self._retired: dict = {}  # shard_id -> (tenant_snap, per_shard row)
@@ -138,6 +143,11 @@ class FabricTelemetry:
             totals["plan_cache_entries"] = sum(r["entries"] for r in pc_rows)
             totals["plan_cache_hit_rate"] = (
                 hits / (hits + misses) if hits + misses else 0.0)
+        if self._extra is not None:
+            try:
+                totals.update(self._extra() or {})
+            except Exception:  # noqa: BLE001 — extras must never break obs
+                pass
         totals["per_shard"] = per_shard
         return totals
 

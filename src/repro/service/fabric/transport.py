@@ -37,6 +37,40 @@ class TransportError(ConnectionError):
     """The peer shard is unreachable (dead, draining or closed)."""
 
 
+def result_envelope_for(future, envelope_id: str, tenant: str,
+                        shard_id: str, attempt: int) -> ResultEnvelope:
+    """Terminal :class:`ResultEnvelope` for a *resolved* shard-local
+    future — the one reply shape every transport sends, whether the shard
+    lives in this process (:class:`LocalTransport`) or behind a socket
+    (the proc fabric's worker).  The shard-side ``JobReport`` is flattened
+    into the wire-safe :class:`FabricJobReport`."""
+    try:
+        results, report = future.result(timeout=0)
+        wire_report = FabricJobReport(
+            tenant=tenant, envelope_id=envelope_id,
+            shard_id=shard_id,
+            queue_wait_s=getattr(report, "queue_wait_s", 0.0),
+            coalesced_with=getattr(report, "coalesced_with", 0),
+            ops_shared_cross_agent=getattr(report,
+                                           "ops_shared_cross_agent", 0),
+            cache_hits=getattr(report, "cache_hits", 0),
+            ops_salvaged=getattr(report, "ops_salvaged", 0),
+            preemptions=getattr(report, "preemptions", 0),
+            attempt=attempt,
+            deadline_s=getattr(report, "deadline_s", None),
+            deadline_met=getattr(report, "deadline_met", None),
+            tags=tuple(getattr(report, "tags", ()) or ()),
+            per_backend=dict(getattr(report, "per_backend", {}) or {}))
+        return ResultEnvelope(envelope_id=envelope_id, tenant=tenant,
+                              shard_id=shard_id, ok=True,
+                              results=results, report=wire_report,
+                              attempt=attempt)
+    except BaseException as e:  # noqa: BLE001 — includes CancelledError
+        return ResultEnvelope(envelope_id=envelope_id, tenant=tenant,
+                              shard_id=shard_id, ok=False, error=e,
+                              attempt=attempt)
+
+
 class Transport(ABC):
     """One bidirectional byte channel between the router and one shard."""
 
@@ -170,32 +204,8 @@ class LocalTransport(Transport):
                   attempt: int) -> None:
         with self._lock:
             self._inflight.pop(envelope_id, None)
-        try:
-            results, report = future.result(timeout=0)
-            wire_report = FabricJobReport(
-                tenant=tenant, envelope_id=envelope_id,
-                shard_id=self.shard_id,
-                queue_wait_s=getattr(report, "queue_wait_s", 0.0),
-                coalesced_with=getattr(report, "coalesced_with", 0),
-                ops_shared_cross_agent=getattr(report,
-                                               "ops_shared_cross_agent", 0),
-                cache_hits=getattr(report, "cache_hits", 0),
-                ops_salvaged=getattr(report, "ops_salvaged", 0),
-                preemptions=getattr(report, "preemptions", 0),
-                attempt=attempt,
-                deadline_s=getattr(report, "deadline_s", None),
-                deadline_met=getattr(report, "deadline_met", None),
-                tags=tuple(getattr(report, "tags", ()) or ()),
-                per_backend=dict(getattr(report, "per_backend", {}) or {}))
-            out = ResultEnvelope(envelope_id=envelope_id, tenant=tenant,
-                                 shard_id=self.shard_id, ok=True,
-                                 results=results, report=wire_report,
-                                 attempt=attempt)
-        except BaseException as e:  # noqa: BLE001 — includes CancelledError
-            out = ResultEnvelope(envelope_id=envelope_id, tenant=tenant,
-                                 shard_id=self.shard_id, ok=False, error=e,
-                                 attempt=attempt)
-        self._reply(out)
+        self._reply(result_envelope_for(future, envelope_id, tenant,
+                                        self.shard_id, attempt))
 
     def _reply(self, env: ResultEnvelope) -> None:
         data = encode_result(env)  # the serialization seam, shard side
