@@ -18,7 +18,12 @@ Gated metrics (checked when present in the baseline):
   workload;
 * ``deadline_smoke.attainment_aware`` — fraction of deadline-carrying
   probes meeting their SLO under mixed load with the deadline-aware
-  scheduler (a dimensionless rate, gated like the speedups).
+  scheduler (a dimensionless rate, gated like the speedups);
+* ``observability_smoke.traced_over_untraced`` — throughput with full
+  lifecycle tracing + JSONL event log relative to tracing off.  Its
+  committed baseline is pinned at 1.0 (parity) and its gate carries a
+  per-gate 5% tolerance, so this is an absolute overhead budget: traced
+  throughput must stay within 5% of untraced.
 
 A metric present in the baseline but missing from the fresh artifact is a
 failure (the bench crashed or was skipped); a metric missing from the
@@ -34,12 +39,18 @@ import argparse
 import json
 import sys
 
+# (section, metric) or (section, metric, max_regression): an explicit
+# third element overrides the CLI-wide --max-regression for that gate.
+# observability_smoke's baseline pins traced_over_untraced at 1.0
+# (parity), so its 0.05 tolerance IS the tracing-overhead budget: the
+# traced run must stay within 5% of untraced throughput.
 GATES = (
     ("service_smoke", "speedup"),
     ("sharded_smoke", "speedup"),
     ("compiled_smoke", "speedup"),
     ("deadline_smoke", "attainment_aware"),
     ("fabric_proc_smoke", "completed_frac"),
+    ("observability_smoke", "traced_over_untraced", 0.05),
 )
 
 
@@ -47,7 +58,7 @@ def check(baseline: dict, fresh: dict, max_regression: float) -> list:
     """Returns a list of failure strings (empty = gate passes)."""
     failures = []
     gated = 0
-    for section, metric in GATES:
+    for section, metric, *tol in GATES:
         base = baseline.get(section, {}).get(metric)
         if base is None:
             continue                      # no committed baseline yet
@@ -57,12 +68,13 @@ def check(baseline: dict, fresh: dict, max_regression: float) -> list:
             failures.append(f"{section}.{metric}: missing from fresh "
                             f"artifact (bench crashed or skipped?)")
             continue
-        floor = base * (1.0 - max_regression)
+        allowed = tol[0] if tol else max_regression
+        floor = base * (1.0 - allowed)
         if new < floor:
             failures.append(
                 f"{section}.{metric}: {new:.2f} < allowed floor "
                 f"{floor:.2f} (baseline {base:.2f}, "
-                f"max regression {max_regression:.0%})")
+                f"max regression {allowed:.0%})")
     if not gated:
         failures.append("no gated metrics found in baseline — nothing "
                         "was checked; commit a *_smoke baseline first")
@@ -81,7 +93,7 @@ def main(argv=None) -> int:
     with open(args.fresh) as f:
         fresh = json.load(f)
     failures = check(baseline, fresh, args.max_regression)
-    for section, metric in GATES:
+    for section, metric, *_tol in GATES:
         base = baseline.get(section, {}).get(metric)
         new = fresh.get(section, {}).get(metric)
         if base is not None and new is not None:

@@ -28,10 +28,14 @@ Sections:
                    worker shards (ProcStratumFabric); records speedup,
                    n_cpus and zero-loss completed_frac (merged into
                    BENCH_service.json)
+  * observability— tracing overhead: the repeated-structure workload with
+                   per-job lifecycle traces + JSONL event log on vs off;
+                   records the traced/untraced throughput ratio (merged
+                   into BENCH_service.json, gated at ≤5% overhead)
 
 ``--smoke`` runs CI-sized variants of the ``service``, ``sharded``,
-``compiled``, ``deadline`` and ``fabric_proc`` sections (smaller rows /
-agents / rounds)
+``compiled``, ``deadline``, ``fabric_proc`` and ``observability``
+sections (smaller rows / agents / rounds)
 and records them under ``*_smoke`` keys, which
 ``benchmarks/check_regression.py`` gates against the committed baseline;
 the other sections ignore the flag.
@@ -119,6 +123,11 @@ def _fabric_proc(args):
     return proc_fabric_rows(smoke=args.smoke, out=args.out)
 
 
+def _observability(args):
+    from .e2e_agentic import observability_rows
+    return observability_rows(smoke=args.smoke, out=args.out)
+
+
 SECTIONS = {
     "characterize": _characterize,
     "micro": _micro,
@@ -131,6 +140,7 @@ SECTIONS = {
     "compiled": _compiled,
     "deadline": _deadline,
     "fabric_proc": _fabric_proc,
+    "observability": _observability,
 }
 
 

@@ -78,10 +78,24 @@ def run_async(args) -> None:
     cfg = StratumConfig.make(memory_budget_bytes=4 << 30,
                              coalesce_window_s=0.05,
                              n_shards=args.shards,
-                             processes=args.processes)
+                             processes=args.processes,
+                             trace=args.live)
     deadline_s = args.deadline_ms / 1000 if args.deadline_ms else None
     with connect(args.target, cfg) as client:
         bests = [None] * args.agents
+        live_stop = threading.Event()
+        if args.live:
+            # periodic text dashboard over the same telemetry snapshots
+            # `python -m repro.service.observability.top` renders offline
+            from repro.service.observability import top
+
+            def live_view() -> None:
+                while not live_stop.wait(1.0):
+                    frame = top.render(client.telemetry.global_snapshot())
+                    print(f"\n{frame}\n", flush=True)
+
+            threading.Thread(target=live_view, name="live-view",
+                             daemon=True).start()
 
         def agent_main(i: int) -> None:
             agent = AIDEAgent(n_rows=args.rows, cv_k=args.cv, seed=i)
@@ -99,6 +113,7 @@ def run_async(args) -> None:
         for t in threads:
             t.join()
 
+        live_stop.set()
         dt = time.time() - t0
         print(f"{args.agents} agents × {args.rounds} rounds in {dt:.2f}s "
               f"(async, overlapped planning/execution)")
@@ -133,6 +148,10 @@ def main():
     ap.add_argument("--deadline-ms", type=int, default=0,
                     help="SLO for refinement submissions (async targets); "
                          "late refinements are shed with DeadlineExceeded")
+    ap.add_argument("--live", action="store_true",
+                    help="render a live text dashboard (per-shard depth, "
+                         "plan-cache hit rate, windowed attainment) while "
+                         "the search runs; async targets only")
     # legacy spelling kept working: --service == --target service, and
     # --service --shards K (the PR-3 invocation) still means the fabric
     ap.add_argument("--service", action="store_true",

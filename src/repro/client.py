@@ -174,6 +174,15 @@ class ServiceTuning:
     autoscale: Optional[Tuple[int, int]] = None
     worker_heartbeat_s: float = 0.25
     worker_heartbeat_timeout_s: float = 5.0
+    # observability (docs/OBSERVABILITY.md): trace=True records per-job
+    # lifecycle hop logs (returned on reports); trace_dir additionally
+    # appends every hop to per-process JSONL event logs replayable with
+    # `python -m repro.service.observability.replay`
+    trace: bool = False
+    trace_dir: Optional[str] = None
+    # windowed throughput/attainment collector geometry
+    window_s: float = 1.0
+    n_windows: int = 32
 
 
 @dataclass(frozen=True)
@@ -268,7 +277,11 @@ class StratumConfig:
             cache_tenant_quota_fraction=self.cache.tenant_quota_fraction,
             compiled_segments=self.runtime.compiled_segments,
             plan_cache_entries=self.runtime.plan_cache_entries,
-            n_executors=s.n_executors)
+            n_executors=s.n_executors,
+            trace=s.trace,
+            trace_dir=s.trace_dir,
+            window_s=s.window_s,
+            n_windows=s.n_windows)
 
 
 # ---------------------------------------------------------------------------
@@ -322,6 +335,13 @@ class StratumClient(ABC):
     def telemetry(self):
         """Object with ``snapshot()`` / ``global_snapshot()`` /
         ``report()`` — uniform across targets."""
+
+    @property
+    def traces(self):
+        """The target's client-side
+        :class:`~repro.service.observability.TraceSink` when lifecycle
+        tracing is available (service/fabric targets), else ``None``."""
+        return None
 
     def close(self) -> None:
         self._closed = True
@@ -498,6 +518,10 @@ class ServiceTarget(StratumClient):
         return self._service.telemetry
 
     @property
+    def traces(self):
+        return self._service.traces
+
+    @property
     def service(self) -> StratumService:
         return self._service
 
@@ -560,6 +584,10 @@ class FabricTarget(StratumClient):
     @property
     def telemetry(self):
         return self._fabric.telemetry
+
+    @property
+    def traces(self):
+        return self._fabric.traces
 
     @property
     def fabric(self) -> StratumFabric:

@@ -191,6 +191,11 @@ class JaxSegmentBackend(ExecutionBackend):
                            for op, fs in zip(compute, hoists)
                            for f in fs)
         compiled = self.plan_cache.get(key)
+        with rt._lock:
+            if compiled is None:
+                report.plan_cache_misses += 1
+            else:
+                report.plan_cache_hits += 1
         if compiled is None:
             seg_fn, compiled = self._build(compute, in_specs, hoists,
                                            selection)

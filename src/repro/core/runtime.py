@@ -59,6 +59,11 @@ class RunReport:
     # op signature -> "cache" | "salvage" | backend name; lets multi-tenant
     # callers (service telemetry) attribute work per pipeline after merges
     sig_source: dict = field(default_factory=dict)
+    # compiled plan-segment cache outcomes for THIS run (incremented by the
+    # jax-seg backend): trace/jit skipped vs paid — surfaced on lifecycle
+    # trace hops so a per-job record shows whether it hit warm plans
+    plan_cache_hits: int = 0
+    plan_cache_misses: int = 0
 
 
 class ExecutionError(RuntimeError):

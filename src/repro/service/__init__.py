@@ -19,6 +19,8 @@ telemetry.  See ``docs/ARCHITECTURE.md`` and ``docs/SCHEDULING.md``.
 """
 
 from .coalesce import SuperBatch, coalesce, cross_agent_dedup
+from .observability import (JobTrace, ThroughputCollector, TraceSink,
+                            merge_window_snapshots)
 from .priority import DEFAULT_WEIGHTS, Priority
 from .queue import AdmissionError, DeadlineExceeded, FairQueue, Job
 from .server import JobReport, ServiceConfig, StratumService
@@ -28,8 +30,9 @@ from .fabric import ShardedStratum, StratumFabric
 
 __all__ = [
     "AdmissionError", "DEFAULT_WEIGHTS", "DeadlineExceeded", "FairQueue",
-    "Job", "JobReport", "PipelineFuture", "Priority", "ServiceConfig",
-    "ServiceTelemetry", "Session", "ShardedStratum", "StratumFabric",
-    "StratumService", "SuperBatch", "TenantStats", "coalesce",
-    "cross_agent_dedup", "merge_tenant_snapshots",
+    "Job", "JobReport", "JobTrace", "PipelineFuture", "Priority",
+    "ServiceConfig", "ServiceTelemetry", "Session", "ShardedStratum",
+    "StratumFabric", "StratumService", "SuperBatch", "TenantStats",
+    "ThroughputCollector", "TraceSink", "coalesce", "cross_agent_dedup",
+    "merge_tenant_snapshots", "merge_window_snapshots",
 ]

@@ -86,6 +86,11 @@ class JobEnvelope:
     deadline_s: Optional[float] = None
     deadline_t: Optional[float] = None
     tags: tuple = ()
+    # compact lifecycle hop log (observability/trace.py tuples) carried
+    # over the wire when tracing is on, so a trace survives failover and
+    # the owning shard can seed its JobTrace with the client-side history;
+    # () when tracing is off — costs nothing on the hot path
+    hops: tuple = ()
 
 
 @dataclass
@@ -120,6 +125,9 @@ class FabricJobReport:
     deadline_met: Optional[bool] = None
     tags: tuple = ()
     per_backend: dict = field(default_factory=dict)
+    # full reassembled lifecycle trace (client hops + shard hops) when the
+    # submission was traced; () otherwise
+    hops: tuple = ()
 
 
 @dataclass
@@ -211,6 +219,7 @@ def encode_job(env: JobEnvelope) -> bytes:
          "priority": int(env.priority), "routing_key": env.routing_key,
          "attempt": env.attempt,
          "deadline_s": env.deadline_s, "tags": list(env.tags),
+         "hops": [tuple(h) for h in env.hops],
          "sinks": list(env.batch.sinks), "names": list(env.batch.names)},
         protocol=pickle.HIGHEST_PROTOCOL)
     return _frame(_JOB_KIND, payload)
@@ -230,7 +239,8 @@ def decode_job(data: bytes) -> JobEnvelope:
                        batch=PipelineBatch(sinks, d["names"]),
                        attempt=d["attempt"],
                        deadline_s=d.get("deadline_s"),
-                       tags=tuple(d.get("tags", ())))
+                       tags=tuple(d.get("tags", ())),
+                       hops=tuple(tuple(h) for h in d.get("hops", ())))
 
 
 def encode_cancel(env: CancelEnvelope) -> bytes:

@@ -37,6 +37,7 @@ import time
 from dataclasses import replace
 from typing import Optional
 
+from ..observability import SUBMITTED, TraceSink, make_hop
 from ..priority import Priority
 from ..server import ServiceConfig, StratumService
 from ..session import PipelineFuture, Session
@@ -74,6 +75,13 @@ class StratumFabric:
         self._shards: dict[str, StratumService] = {}     # live shards
         self.router = ShardRouter(vnodes=vnodes)
         self.telemetry = FabricTelemetry(self.router, self._shards_snapshot)
+        # client-side trace sink: seeds every traced envelope's hop log and
+        # keeps the reassembled traces the shards send back
+        self.traces = TraceSink(
+            trace_dir=config.trace_dir,
+            component=f"client-{self._client_id}",
+            enabled=config.trace)
+        self.router.trace_sink = self.traces
         self._stopped = False
         for _ in range(n_shards):
             self.add_shard(autostart=autostart)
@@ -158,6 +166,13 @@ class StratumFabric:
             deadline_t=(None if deadline_s is None
                         else time.perf_counter() + deadline_s),
             tags=tuple(tags))
+        if self.traces.enabled:
+            # a non-empty hop log marks the envelope as traced everywhere
+            # downstream (router stamps, wire codec, shard-side TraceSink)
+            hop = make_hop(SUBMITTED, slack=deadline_s, tenant=tenant,
+                           priority=Priority(priority).name)
+            env.hops = (hop,)
+            self.traces.emit_hop(env.envelope_id, tenant, hop)
         return self.router.submit(env)
 
     # -- lifecycle ---------------------------------------------------------
@@ -170,6 +185,7 @@ class StratumFabric:
             shards = list(self._shards.values())
         for svc in shards:
             svc.stop()
+        self.traces.close()
 
     def __enter__(self) -> "StratumFabric":
         return self

@@ -165,7 +165,9 @@ class ShardWorker:
             future = self.service.submit(env.tenant, env.batch,
                                          priority=env.priority,
                                          deadline_s=env.deadline_s,
-                                         tags=env.tags)
+                                         tags=env.tags,
+                                         trace_key=env.envelope_id,
+                                         trace_hops=env.hops)
         except Exception as e:     # noqa: BLE001 — includes AdmissionError:
             # a remote shard cannot raise into the caller's stack; the
             # rejection travels back as an error ResultEnvelope instead

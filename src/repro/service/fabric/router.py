@@ -48,6 +48,7 @@ _LOCALITY_KEYS_MAX = 65536
 
 from concurrent.futures import CancelledError
 
+from ..observability import FAILOVER, ROUTED, make_hop
 from ..session import PipelineFuture
 from .envelope import (CancelEnvelope, JobEnvelope, decode_result,
                        encode_cancel, encode_job)
@@ -88,6 +89,10 @@ class ShardRouter:
         self.reply_codec_errors = 0
         self.cancels_sent = 0
         self.cancels_confirmed = 0
+        # client-side TraceSink (set by StratumFabric when tracing is on):
+        # routed/failover hops are stamped onto envelopes here, and
+        # reassembled traces from result replies are stored through it
+        self.trace_sink = None
 
     # -- membership --------------------------------------------------------
     def add_shard(self, shard_id: str, transport: Transport) -> None:
@@ -136,6 +141,8 @@ class ShardRouter:
             for p in orphans:
                 p.envelope.attempt += 1
         for p in orphans:
+            self._stamp_env(p.envelope, FAILOVER, shard=shard_id,
+                            attempt=p.envelope.attempt)
             self._route(p, is_requeue=True)
         return len(orphans)
 
@@ -204,6 +211,22 @@ class ShardRouter:
                 self.cancels_confirmed += 1
         return confirmed
 
+    def _stamp_env(self, env: JobEnvelope, event: str, shard: str = "",
+                   **detail) -> None:
+        """Append a client-side hop to a *traced* envelope (no-op when the
+        envelope carries no hops, i.e. tracing is off)."""
+        if not env.hops:
+            return
+        slack = None
+        if env.deadline_t is not None:
+            slack = env.deadline_t - time.perf_counter()
+        hop = make_hop(event, shard=shard, slack=slack, **detail)
+        if hop[1] < env.hops[-1][1]:
+            hop = (hop[0], env.hops[-1][1]) + hop[2:]
+        env.hops = env.hops + (hop,)
+        if self.trace_sink is not None:
+            self.trace_sink.emit_hop(env.envelope_id, env.tenant, hop)
+
     def _route(self, pending: _Pending, is_requeue: bool) -> None:
         env = pending.envelope
         if env.deadline_t is not None:
@@ -248,6 +271,13 @@ class ShardRouter:
                     while len(self._last_shard_for_key) \
                             > _LOCALITY_KEYS_MAX:
                         self._last_shard_for_key.popitem(last=False)
+            if env.hops:
+                # tracing is on (the client seeded a SUBMITTED hop): stamp
+                # the placement decision and re-encode so the hop log the
+                # shard receives includes it
+                self._stamp_env(env, ROUTED, shard=shard_id,
+                                attempt=env.attempt, requeue=is_requeue)
+                data = encode_job(env)
             try:
                 transport.send_job(data)
                 return
@@ -310,6 +340,12 @@ class ShardRouter:
         if pending is None:         # duplicate reply after a failover race
             return
         if env.ok:
+            hops = tuple(getattr(env.report, "hops", ()) or ())
+            if hops and self.trace_sink is not None:
+                # the shard's reply carries the full reassembled trace
+                # (client seed hops + shard lifecycle hops): keep it
+                # queryable client-side without re-emitting to the log
+                self.trace_sink.store(env.envelope_id, env.tenant, hops)
             pending.future._set_result(env.results, env.report)
         elif isinstance(env.error, CancelledError):
             # the shard honored a CancelEnvelope: resolve as *cancelled*

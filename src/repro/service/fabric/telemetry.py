@@ -19,6 +19,7 @@ rebalance or failover cost.
 
 from __future__ import annotations
 
+from ..observability import merge_window_snapshots
 from ..telemetry import merge_tenant_snapshots
 
 
@@ -59,6 +60,9 @@ class FabricTelemetry:
         }
         if "plan_cache" in g:
             row["plan_cache"] = g["plan_cache"]
+        if "windows" in g:
+            # last windowed snapshot the shard produced, frozen as-is
+            row["windows"] = g["windows"]
         self._retired[shard_id] = (svc.telemetry.snapshot(), row)
 
     # -- per-tenant view (Session.telemetry compatibility) -----------------
@@ -90,6 +94,8 @@ class FabricTelemetry:
                     g["cache_cross_tenant_hits"]
             if "plan_cache" in g:
                 out[shard_id]["plan_cache"] = g["plan_cache"]
+            if "windows" in g:
+                out[shard_id]["windows"] = g["windows"]
         return out
 
     def global_snapshot(self) -> dict:
@@ -143,6 +149,12 @@ class FabricTelemetry:
             totals["plan_cache_entries"] = sum(r["entries"] for r in pc_rows)
             totals["plan_cache_hit_rate"] = (
                 hits / (hits + misses) if hits + misses else 0.0)
+        # windowed throughput/attainment fabric-wide: counters sum, depth
+        # maxes, percentiles recombine from each shard's capped samples
+        win_rows = [s["windows"] for s in per_shard.values()
+                    if s.get("windows")]
+        if win_rows:
+            totals["windows"] = merge_window_snapshots(win_rows)
         if self._extra is not None:
             try:
                 totals.update(self._extra() or {})

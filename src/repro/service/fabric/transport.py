@@ -60,7 +60,8 @@ def result_envelope_for(future, envelope_id: str, tenant: str,
             deadline_s=getattr(report, "deadline_s", None),
             deadline_met=getattr(report, "deadline_met", None),
             tags=tuple(getattr(report, "tags", ()) or ()),
-            per_backend=dict(getattr(report, "per_backend", {}) or {}))
+            per_backend=dict(getattr(report, "per_backend", {}) or {}),
+            hops=tuple(getattr(report, "trace", ()) or ()))
         return ResultEnvelope(envelope_id=envelope_id, tenant=tenant,
                               shard_id=shard_id, ok=True,
                               results=results, report=wire_report,
@@ -144,7 +145,9 @@ class LocalTransport(Transport):
             future = self.service.submit(env.tenant, env.batch,
                                          priority=env.priority,
                                          deadline_s=env.deadline_s,
-                                         tags=env.tags)
+                                         tags=env.tags,
+                                         trace_key=env.envelope_id,
+                                         trace_hops=env.hops)
         except AdmissionError:
             # in-process shard: backpressure propagates synchronously so
             # Session.submit keeps its documented raises-AdmissionError

@@ -1,0 +1,24 @@
+"""Per-job lifecycle tracing, windowed stats, event log, replay, live view.
+
+See ``docs/OBSERVABILITY.md``.  Enable with
+``StratumConfig.make(..., trace=True)`` (in-memory traces on every
+``JobReport``) or ``trace_dir="/path"`` (plus a durable JSONL event log
+replayable via ``python -m repro.service.observability.replay``).
+"""
+
+from .events import TraceLog, TraceSink, hop_record, record_hop
+from .trace import (ADMITTED, CANCELLED, COALESCED, COMPLETED, DISPATCHED,
+                    EVENTS, FAILED, FAILOVER, PREEMPTED, QUEUED, REQUEUED,
+                    ROUTED, SHED, SUBMITTED, TERMINAL, JobTrace, make_hop)
+from .windows import (MAX_SAMPLES, ThroughputCollector,
+                      merge_window_snapshots, percentile)
+
+__all__ = [
+    "JobTrace", "make_hop", "EVENTS", "TERMINAL",
+    "SUBMITTED", "ADMITTED", "QUEUED", "COALESCED", "DISPATCHED",
+    "PREEMPTED", "REQUEUED", "ROUTED", "FAILOVER", "COMPLETED", "FAILED",
+    "SHED", "CANCELLED",
+    "TraceSink", "TraceLog", "hop_record", "record_hop",
+    "ThroughputCollector", "merge_window_snapshots", "percentile",
+    "MAX_SAMPLES",
+]

@@ -49,6 +49,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Optional, Sequence
 
 from ..core.fusion import PipelineBatch
+from .observability import ADMITTED, QUEUED, REQUEUED
 from .priority import DEFAULT_WEIGHTS, Priority
 from .session import PipelineFuture
 
@@ -89,6 +90,8 @@ class Job:
     # the re-run loses no finished work
     preemptions: int = 0
     salvage: dict = field(default_factory=dict)
+    # live JobTrace when lifecycle tracing is on (observability/), else None
+    trace: object = None
 
     def __post_init__(self) -> None:
         if self.band < 0:
@@ -101,6 +104,12 @@ class Job:
         if self.deadline_t is None:
             return float("inf")
         return self.deadline_t - now
+
+    def trace_slack(self) -> Optional[float]:
+        """Slack for a trace hop stamp: None for deadline-free jobs."""
+        if self.deadline_t is None:
+            return None
+        return self.deadline_t - time.perf_counter()
 
 
 class FairQueue:
@@ -163,6 +172,12 @@ class FairQueue:
             self._total += 1
             if job.deadline_t is not None:
                 self._deadline_total += 1
+            if job.trace is not None:
+                # stamped under the lock so QUEUED always precedes the
+                # dispatcher's DISPATCHED in the hop log
+                job.trace.stamp(ADMITTED, slack=job.trace_slack())
+                job.trace.stamp(QUEUED, slack=job.trace_slack(),
+                                depth=self._total, band=job.band)
             self._not_empty.notify()
 
     def requeue(self, jobs: Sequence[Job]) -> None:
@@ -185,6 +200,9 @@ class FairQueue:
                 self._total += 1
                 if job.deadline_t is not None:
                     self._deadline_total += 1
+                if job.trace is not None:
+                    job.trace.stamp(REQUEUED, slack=job.trace_slack(),
+                                    preemptions=job.preemptions)
             self._not_empty.notify_all()
 
     # ------------------------------------------------------------------

@@ -55,6 +55,9 @@ from ..core.fusion import PipelineBatch
 from ..core.plan_cache import PlanCache
 from ..core.runtime import ExecutionError, ExecutionPreempted, Runtime
 from .coalesce import SuperBatch, coalesce, cross_agent_dedup, reachable_sigs
+from .observability import (CANCELLED, COALESCED, COMPLETED, DISPATCHED,
+                            FAILED, PREEMPTED, SHED, SUBMITTED,
+                            ThroughputCollector, TraceSink)
 from .priority import Priority
 from .queue import AdmissionError, FairQueue, Job
 from .session import PipelineFuture, Session
@@ -111,6 +114,16 @@ class ServiceConfig:
     # identity when the service runs as one shard of a sharded fabric
     # (src/repro/service/fabric/); "" for a standalone service
     shard_id: str = ""
+    # observability (docs/OBSERVABILITY.md): trace=True keeps per-job hop
+    # logs in memory and returns them on every JobReport; trace_dir also
+    # appends each hop to a per-process JSONL event log replayable with
+    # `python -m repro.service.observability.replay`
+    trace: bool = False
+    trace_dir: Optional[str] = None
+    # windowed throughput/attainment collector (ring of fixed-width
+    # windows, surfaced under telemetry global_snapshot()["windows"])
+    window_s: float = 1.0
+    n_windows: int = 32
 
 
 @dataclass
@@ -131,6 +144,7 @@ class JobReport:
     deadline_s: object = None    # the job's SLO (None = no deadline)
     deadline_met: object = None  # None without a deadline, else bool
     tags: tuple = ()             # opaque caller tags, echoed back
+    trace: tuple = ()            # lifecycle hop log (empty unless tracing)
 
 
 class StratumService:
@@ -179,8 +193,17 @@ class StratumService:
             aging_s=config.aging_s,
             priority_aware=config.priority_aware,
             deadline_aware=config.deadline_aware)
+        self.windows = ThroughputCollector(window_s=config.window_s,
+                                           n_windows=config.n_windows)
         self.telemetry = ServiceTelemetry(cache=self.cache,
-                                          plan_cache=self.plan_cache)
+                                          plan_cache=self.plan_cache,
+                                          windows=self.windows)
+        # per-job lifecycle traces (no-op object when tracing is off)
+        self.traces = TraceSink(
+            trace_dir=config.trace_dir,
+            component=f"shard-{config.shard_id}" if config.shard_id
+            else "service",
+            enabled=config.trace)
         self.queue.on_shed = self._on_deadline_shed
         self._job_ids = itertools.count()
         self._running = False
@@ -233,8 +256,13 @@ class StratumService:
             job.future._set_exception(
                 AdmissionError("service stopped before job ran"))
             self.telemetry.record_job_failed(job.tenant)
+            if job.trace is not None:
+                job.trace.stamp(FAILED, shard=self.shard_id,
+                                reason="service stopped")
+                self.traces.finish(job.trace)
         if self._pool is not None:
             self._pool.shutdown(wait=True)
+        self.traces.close()
 
     def __enter__(self) -> "StratumService":
         return self.start()
@@ -264,34 +292,66 @@ class StratumService:
                priority: Priority = Priority.BATCH,
                affinity: Optional[str] = None,
                deadline_s: Optional[float] = None,
-               tags: Sequence[str] = ()) -> PipelineFuture:
+               tags: Sequence[str] = (),
+               trace_key: Optional[str] = None,
+               trace_hops: Sequence[tuple] = ()) -> PipelineFuture:
         # ``affinity`` is a sharded-fabric routing hint; a standalone
         # service has exactly one place to run the job, so it is accepted
-        # (keeping Session portable across backends) and ignored
+        # (keeping Session portable across backends) and ignored.
+        # ``trace_key``/``trace_hops`` let a fabric transport continue a
+        # trace begun client-side: the key is the envelope id and the hops
+        # are the history the envelope carried over the wire
         del affinity
         priority = Priority(priority)
         job_id = next(self._job_ids)
         future = PipelineFuture(job_id, tenant, priority)
+        trace = self.traces.begin(trace_key or f"j{job_id}", tenant,
+                                  hops=trace_hops)
 
         def _cancel(jid: int) -> bool:
             ok = self.queue.cancel(jid)
             if ok:
                 self.telemetry.record_job_cancelled(tenant)
+                if trace is not None:
+                    trace.stamp(CANCELLED, shard=self.shard_id)
+                    self.traces.finish(trace)
             return ok
 
         future._cancel_hook = _cancel
         job = Job(id=job_id, tenant=tenant, batch=batch, future=future,
                   priority=priority, deadline_s=deadline_s,
-                  tags=tuple(tags))
-        self.queue.push(job)               # may raise AdmissionError
+                  tags=tuple(tags), trace=trace)
+        if trace is not None and not trace_hops:
+            # a seeded trace (fabric continuation) was already stamped
+            # SUBMITTED client-side
+            trace.stamp(SUBMITTED, shard=self.shard_id,
+                        slack=self._slack(job), priority=priority.name)
+        try:
+            self.queue.push(job)           # may raise AdmissionError
+        except AdmissionError:
+            if trace is not None:
+                trace.stamp(FAILED, shard=self.shard_id, reason="admission")
+                self.traces.finish(trace)
+            raise
         self.telemetry.record_submit(tenant, priority)
         return future
+
+    @staticmethod
+    def _slack(job: Job, now: Optional[float] = None) -> Optional[float]:
+        """Remaining deadline budget for a hop stamp; None = no deadline."""
+        if job.deadline_t is None:
+            return None
+        return job.deadline_t - (time.perf_counter() if now is None else now)
 
     def _on_deadline_shed(self, job: Job) -> None:
         """Queue hook: a deadline-expired job was shed (its future already
         failed with DeadlineExceeded)."""
         self.telemetry.record_deadline_shed(job.tenant)
         self.telemetry.record_job_failed(job.tenant)
+        if job.trace is not None:
+            job.trace.stamp(SHED, shard=self.shard_id,
+                            slack=self._slack(job))
+            self.traces.finish(job.trace)
 
     # -- dispatch ----------------------------------------------------------
     def _dispatch_loop(self) -> None:
@@ -375,6 +435,11 @@ class StratumService:
         for job in jobs:
             job.future._set_exception(exc)
             self.telemetry.record_job_failed(job.tenant)
+            if job.trace is not None:
+                job.trace.stamp(FAILED, shard=self.shard_id,
+                                slack=self._slack(job),
+                                error=type(exc).__name__)
+                self.traces.finish(job.trace)
 
     def _preempt_check_for(self, live: Sequence[Job], band: int):
         """Install a wave-boundary yield hook — only for super-batches that
@@ -399,6 +464,10 @@ class StratumService:
             job.salvage = {s: v for s, v in preempted.salvage.items()
                            if s in sigs}
             self.telemetry.record_preemption(job.tenant)
+            if job.trace is not None:
+                job.trace.stamp(PREEMPTED, shard=self.shard_id,
+                                slack=self._slack(job),
+                                salvaged=len(job.salvage))
         try:
             self.queue.requeue(live)
         except AdmissionError as e:     # service shutting down mid-yield
@@ -410,6 +479,7 @@ class StratumService:
         live = [j for j in jobs if j.future._mark_running()]
         if not live:
             return
+        depth = self.queue.pending()
         for job in live:
             # measure queue wait once, at first dispatch — a failure-isolation
             # retry must not re-record it (the second measurement would
@@ -418,7 +488,16 @@ class StratumService:
                 job.dispatch_wait_s = now - job.submit_t
                 self.telemetry.record_dispatch(job.tenant,
                                                job.dispatch_wait_s,
-                                               job.priority)
+                                               job.priority, depth=depth)
+            if job.trace is not None:
+                slack = self._slack(job, now)
+                if len(live) > 1:
+                    job.trace.stamp(COALESCED, shard=self.shard_id,
+                                    slack=slack, n_jobs=len(live))
+                job.trace.stamp(DISPATCHED, shard=self.shard_id,
+                                slack=slack,
+                                wait_s=round(job.dispatch_wait_s or 0.0, 6),
+                                retry=is_retry, resume=job.preemptions > 0)
 
         merged: SuperBatch = coalesce(live)
         try:
@@ -508,6 +587,17 @@ class StratumService:
                 deadline_met = time.perf_counter() <= job.deadline_t
                 self.telemetry.record_deadline_outcome(job.tenant,
                                                        deadline_met)
+            trace_hops: tuple = ()
+            if job.trace is not None:
+                job.trace.stamp(
+                    COMPLETED, shard=self.shard_id, slack=self._slack(job),
+                    backends=dict(backends), cache_hits=hits,
+                    salvaged=salvaged,
+                    plan_cache_hits=getattr(run, "plan_cache_hits", 0),
+                    plan_cache_misses=getattr(run, "plan_cache_misses", 0),
+                    deadline_met=deadline_met)
+                self.traces.finish(job.trace)
+                trace_hops = job.trace.as_hops()
             report = JobReport(
                 tenant=job.tenant, job_id=job.id,
                 queue_wait_s=job.dispatch_wait_s or 0.0,
@@ -517,7 +607,8 @@ class StratumService:
                 stratum=rw, run=run,
                 priority=job.priority, preemptions=job.preemptions,
                 ops_salvaged=salvaged, deadline_s=job.deadline_s,
-                deadline_met=deadline_met, tags=job.tags)
+                deadline_met=deadline_met, tags=job.tags,
+                trace=trace_hops)
             self.telemetry.record_job_done(job.tenant, job_sigs[j],
                                            run.sig_source)
             job.salvage = {}    # release pinned intermediates

@@ -22,6 +22,7 @@ from __future__ import annotations
 import threading
 from dataclasses import dataclass, field
 
+from .observability import merge_window_snapshots
 from .priority import Priority
 
 
@@ -76,7 +77,9 @@ def merge_tenant_snapshots(snapshots) -> dict:
     """Merge per-tenant ``ServiceTelemetry.snapshot()`` dicts from several
     shards into one fabric-wide view: counters and waits sum, ``*_max_*``
     fields take the max, nested per-key dicts (backends, priorities) sum
-    per key.  Used by the sharded fabric's telemetry aggregation."""
+    per key, and ``"windows"`` blocks (windowed collector snapshots, see
+    ``observability.windows``) merge via :func:`merge_window_snapshots`.
+    Used by the sharded fabric's telemetry aggregation."""
     merged: dict[str, dict] = {}
     for snap in snapshots:
         for tenant, stats in snap.items():
@@ -86,7 +89,11 @@ def merge_tenant_snapshots(snapshots) -> dict:
                 continue
             out = merged[tenant]
             for k, v in stats.items():
-                if isinstance(v, dict):
+                if k == "windows":
+                    # percentile/attainment blocks don't sum per key —
+                    # recombine them from their capped latency samples
+                    out[k] = merge_window_snapshots([out.get(k), v])
+                elif isinstance(v, dict):
                     tgt = out.setdefault(k, {})
                     for kk, vv in v.items():
                         tgt[kk] = tgt.get(kk, 0) + vv
@@ -98,11 +105,12 @@ def merge_tenant_snapshots(snapshots) -> dict:
 
 
 class ServiceTelemetry:
-    def __init__(self, cache=None, plan_cache=None) -> None:
+    def __init__(self, cache=None, plan_cache=None, windows=None) -> None:
         self._lock = threading.Lock()
         self._tenants: dict[str, TenantStats] = {}
         self._cache = cache            # shared IntermediateCache (optional)
         self._plan_cache = plan_cache  # shared PlanCache (optional)
+        self._windows = windows        # ThroughputCollector (optional)
         self.ops_deduped_cross_agent = 0   # global executions saved
         self.super_batches = 0
         self.jobs_coalesced = 0
@@ -119,15 +127,20 @@ class ServiceTelemetry:
             t.jobs_submitted += 1
             t.submitted_by_priority[priority] = \
                 t.submitted_by_priority.get(priority, 0) + 1
+        if self._windows is not None:
+            self._windows.record_submit()
 
     def record_dispatch(self, tenant: str, wait_s: float,
-                        priority: Priority = Priority.BATCH) -> None:
+                        priority: Priority = Priority.BATCH,
+                        depth: int = 0) -> None:
         with self._lock:
             t = self._t(tenant)
             t.queue_wait_s += wait_s
             t.queue_wait_max_s = max(t.queue_wait_max_s, wait_s)
             t.queue_wait_by_priority[priority] = \
                 t.queue_wait_by_priority.get(priority, 0.0) + wait_s
+        if self._windows is not None:
+            self._windows.record_dispatch(wait_s, queue_depth=depth)
 
     def record_super_batch(self, n_jobs: int, deduped: int,
                            shared_per_tenant: dict) -> None:
@@ -143,6 +156,8 @@ class ServiceTelemetry:
         with self._lock:
             self.preemptions += 1
             self._t(tenant).preemptions += 1
+        if self._windows is not None:
+            self._windows.record_preemption()
 
     def record_job_done(self, tenant: str, job_sigs: set,
                         sig_source: dict) -> None:
@@ -161,6 +176,8 @@ class ServiceTelemetry:
                     t.ops_salvaged += 1
                 else:
                     t.per_backend[src] = t.per_backend.get(src, 0) + 1
+        if self._windows is not None:
+            self._windows.record_completion()
 
     def record_deadline_outcome(self, tenant: str, met: bool) -> None:
         """A deadline-carrying job completed; ``met`` = within its SLO."""
@@ -169,6 +186,8 @@ class ServiceTelemetry:
             t.deadline_jobs += 1
             if met:
                 t.deadline_met += 1
+        if self._windows is not None:
+            self._windows.record_deadline_outcome(met)
 
     def record_deadline_shed(self, tenant: str) -> None:
         """A job expired while queued and was shed (DeadlineExceeded)."""
@@ -176,6 +195,9 @@ class ServiceTelemetry:
             t = self._t(tenant)
             t.deadline_jobs += 1
             t.deadline_shed += 1
+        if self._windows is not None:
+            self._windows.record_shed()
+            self._windows.record_deadline_outcome(False)
 
     def record_job_failed(self, tenant: str) -> None:
         with self._lock:
@@ -220,6 +242,9 @@ class ServiceTelemetry:
             # compiled-plan reuse across the shard's tenants: hit rate is
             # the fraction of segment executions that skipped tracing
             out["plan_cache"] = self._plan_cache.snapshot()
+        if self._windows is not None:
+            # windowed throughput/attainment/latency (observability/)
+            out["windows"] = self._windows.snapshot()
         return out
 
     def report(self) -> str:

@@ -1,0 +1,827 @@
+"""Observability layer: per-job lifecycle traces (hop completeness,
+monotonicity, survival across preemption and failover), the windowed
+throughput collector, JSONL event-log replay round-trips, the live text
+view, plus direct unit coverage backfill for the coalescer and tenant
+snapshot merging."""
+
+import json
+import os
+import threading
+import time
+from collections import Counter
+from types import SimpleNamespace
+
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import GENERIC, LazyOp, PipelineBatch
+from repro.service import (DeadlineExceeded, Priority, ShardedStratum,
+                           StratumService, ThroughputCollector, TraceSink,
+                           coalesce, cross_agent_dedup,
+                           merge_tenant_snapshots, merge_window_snapshots)
+from repro.service.coalesce import _SEP, reachable_sigs
+from repro.service.fabric import JobEnvelope, decode_job, encode_job
+from repro.service.observability import (ADMITTED, CANCELLED, COALESCED,
+                                         COMPLETED, DISPATCHED, EVENTS,
+                                         FAILED, FAILOVER, JobTrace,
+                                         MAX_SAMPLES, PREEMPTED, QUEUED,
+                                         REQUEUED, ROUTED, SHED, SUBMITTED,
+                                         TERMINAL, hop_record, make_hop,
+                                         percentile, record_hop)
+from repro.service.observability import replay, top
+from repro.service.observability.events import COMPLETED_RING, TraceLog
+import repro.tabular as T
+
+
+def _pipeline(n_rows=2000, cols=(10, 11, 12), kind="mae", data_seed=0):
+    x = T.read("uk_housing", n_rows, seed=data_seed)
+    xs = T.scale(T.impute(T.project(x, list(cols))))
+    y = T.project(x, [0])
+    return T.metric(T.project(xs, [0]), y, kind=kind)
+
+
+def _batch(name="p", **kw):
+    return PipelineBatch([_pipeline(**kw)], [name])
+
+
+def _events(hops):
+    return [h[0] for h in hops]
+
+
+def _assert_monotone(hops):
+    ts = [h[1] for h in hops]
+    assert ts == sorted(ts), ts
+
+
+def _assert_slack_non_increasing(hops, eps=0.05):
+    slacks = [h[3] for h in hops if h[3] is not None]
+    for a, b in zip(slacks, slacks[1:]):
+        assert b <= a + eps, slacks
+
+
+# ---------------------------------------------------------------------------
+# hop tuples + JobTrace invariants
+# ---------------------------------------------------------------------------
+
+def test_event_constants_are_unique_and_terminal_is_subset():
+    assert len(set(EVENTS)) == len(EVENTS)
+    assert set(TERMINAL) <= set(EVENTS)
+    assert all(e == e.lower() for e in EVENTS)
+
+
+def test_make_hop_shape_and_types():
+    hop = make_hop(DISPATCHED, shard="shard-1", slack=1.5, t=100.0,
+                   wait_s=0.25, resume=False)
+    assert hop == (DISPATCHED, 100.0, "shard-1", 1.5,
+                   {"wait_s": 0.25, "resume": False})
+    # deadline-free: slack stays None (not coerced to 0.0)
+    ev, t, shard, slack, detail = make_hop(QUEUED)
+    assert slack is None and shard == "" and detail == {}
+    assert isinstance(t, float) and abs(t - time.time()) < 5.0
+
+
+def test_jobtrace_stamp_clamps_clock_jitter_monotone():
+    # seed hop stamped "in the future" (e.g. another host's wall clock):
+    # subsequent local stamps must never order before it
+    future_t = time.time() + 120.0
+    tr = JobTrace("k", "t", hops=[make_hop(SUBMITTED, t=future_t)])
+    hop = tr.stamp(QUEUED, slack=3.0)
+    assert hop[1] == future_t            # clamped, not before the seed
+    assert hop[0] == QUEUED and hop[3] == 3.0
+    _assert_monotone(tr.hops)
+
+
+def test_jobtrace_terminal_property_and_len():
+    tr = JobTrace("k", "t")
+    assert tr.terminal is None and len(tr) == 0
+    tr.stamp(SUBMITTED)
+    tr.stamp(DISPATCHED, shard="s0")
+    assert tr.terminal is None
+    tr.stamp(COMPLETED, shard="s0")
+    assert tr.terminal == COMPLETED and len(tr) == 3
+    assert tr.as_hops() == tuple(tr.hops)
+    assert all(isinstance(h, tuple) for h in tr.as_hops())
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=0, max_value=3600),
+       st.integers(min_value=0, max_value=3600))
+def test_property_stamps_stay_monotone_after_any_seed(off_a, off_b):
+    # property: whatever (possibly skewed) history seeds a trace, every
+    # stamp keeps the hop log sorted by time
+    now = time.time()
+    seed = [make_hop(SUBMITTED, t=now + off_a),
+            make_hop(ROUTED, shard="s1", t=now + off_a + off_b)]
+    tr = JobTrace("k", "t", hops=seed)
+    for ev in (ADMITTED, QUEUED, DISPATCHED, COMPLETED):
+        tr.stamp(ev, shard="s1")
+    _assert_monotone(tr.hops)
+    assert _events(tr.hops)[:2] == [SUBMITTED, ROUTED]
+    assert tr.terminal == COMPLETED
+
+
+# ---------------------------------------------------------------------------
+# windowed throughput collector
+# ---------------------------------------------------------------------------
+
+class _Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_percentile_nearest_rank():
+    assert percentile([], 99) == 0.0
+    xs = list(range(1, 101))            # 1..100
+    assert percentile(xs, 50) == 50.0
+    assert percentile(xs, 99) == 99.0
+    assert percentile(xs, 100) == 100.0
+    assert percentile([7.0], 99) == 7.0
+    assert percentile([3.0, 1.0, 2.0], 50) == 2.0   # sorts first
+
+
+def test_collector_counts_throughput_and_attainment():
+    clk = _Clock()
+    c = ThroughputCollector(window_s=1.0, n_windows=4, clock=clk)
+    for _ in range(6):
+        c.record_submit()
+    for _ in range(4):
+        c.record_completion()
+    c.record_deadline_outcome(True)
+    c.record_deadline_outcome(True)
+    c.record_deadline_outcome(False)
+    snap = c.snapshot()
+    assert snap["submitted"] == 6 and snap["completed"] == 4
+    assert snap["deadline_jobs"] == 3 and snap["deadline_met"] == 2
+    assert snap["attainment"] == pytest.approx(2 / 3)
+    # only the open window exists: span is one window
+    assert snap["span_s"] == 1.0
+    assert snap["throughput_per_s"] == pytest.approx(4.0)
+
+
+def test_collector_window_rollover_places_counts_in_order():
+    clk = _Clock()
+    c = ThroughputCollector(window_s=1.0, n_windows=8, clock=clk)
+    c.record_completion(2)
+    clk.t = 1.1                          # roll into window 1
+    c.record_completion(3)
+    clk.t = 2.2                          # roll into window 2
+    snap = c.snapshot()
+    per = snap["per_window"]
+    assert [w["completed"] for w in per] == [2, 3, 0]
+    assert snap["completed"] == 5
+    assert snap["span_s"] == pytest.approx(3.0)
+
+
+def test_collector_ring_is_bounded():
+    clk = _Clock()
+    c = ThroughputCollector(window_s=1.0, n_windows=4, clock=clk)
+    for i in range(20):
+        clk.t = float(i)
+        c.record_completion()
+    snap = c.snapshot()
+    # at most n_windows closed + the open one
+    assert snap["n_windows"] <= 5
+    assert len(snap["per_window"]) <= 5
+    # old windows fell off: only the ring's worth of completions remain
+    assert snap["completed"] <= 5
+
+
+def test_collector_idle_gap_blanks_the_ring_without_spinning():
+    clk = _Clock()
+    c = ThroughputCollector(window_s=1.0, n_windows=4, clock=clk)
+    c.record_completion(5)
+    clk.t = 1e9                          # an hour+ of idle: clamped catch-up
+    snap = c.snapshot()
+    assert snap["completed"] == 0        # stale activity fell off the ring
+    assert snap["throughput_per_s"] == 0.0
+    c.record_completion()                # and the ring still works after
+    assert c.snapshot()["completed"] == 1
+
+
+def test_collector_p50_p99_against_known_latencies():
+    clk = _Clock()
+    c = ThroughputCollector(window_s=60.0, n_windows=2, clock=clk)
+    for ms in range(1, 101):             # 1ms .. 100ms
+        c.record_dispatch(ms / 1000.0)
+    snap = c.snapshot()
+    assert snap["dispatch_p50_s"] == pytest.approx(0.050)
+    assert snap["dispatch_p99_s"] == pytest.approx(0.099)
+    assert snap["per_window"][-1]["dispatch_p99_s"] == pytest.approx(0.099)
+
+
+def test_collector_queue_depth_max_and_sample_cap():
+    clk = _Clock()
+    c = ThroughputCollector(window_s=60.0, n_windows=2, clock=clk)
+    c.record_dispatch(0.01, queue_depth=3)
+    c.record_dispatch(0.01, queue_depth=9)
+    c.record_dispatch(0.01, queue_depth=1)
+    for _ in range(MAX_SAMPLES + 50):
+        c.record_dispatch(0.001)
+    snap = c.snapshot()
+    assert snap["queue_depth_max"] == 9
+    assert len(snap["latency_samples"]) <= MAX_SAMPLES
+
+
+def test_collector_rejects_bad_config():
+    with pytest.raises(ValueError):
+        ThroughputCollector(window_s=0.0)
+    with pytest.raises(ValueError):
+        ThroughputCollector(n_windows=0)
+
+
+def test_merge_window_snapshots_sums_maxes_and_recomputes():
+    clk = _Clock()
+    a = ThroughputCollector(window_s=1.0, n_windows=4, clock=clk)
+    b = ThroughputCollector(window_s=1.0, n_windows=4, clock=clk)
+    a.record_completion(3)
+    a.record_dispatch(0.010, queue_depth=2)
+    a.record_deadline_outcome(True)
+    b.record_completion(1)
+    b.record_dispatch(0.090, queue_depth=7)
+    b.record_deadline_outcome(False)
+    m = merge_window_snapshots([a.snapshot(), b.snapshot()])
+    assert m["completed"] == 4
+    assert m["queue_depth_max"] == 7
+    assert m["attainment"] == pytest.approx(0.5)
+    assert m["throughput_per_s"] == pytest.approx(4.0)
+    # percentiles recomputed over the union, not averaged
+    assert m["dispatch_p99_s"] == pytest.approx(0.090)
+    assert sorted(m["latency_samples"]) == [0.010, 0.090]
+    # None/absent snapshots are skipped; all-absent merges to None
+    assert merge_window_snapshots([None, a.snapshot()])["completed"] == 3
+    assert merge_window_snapshots([None, {}]) is None
+
+
+def test_merge_tenant_snapshots_merges_windows_blocks():
+    clk = _Clock()
+    a = ThroughputCollector(window_s=1.0, n_windows=4, clock=clk)
+    b = ThroughputCollector(window_s=1.0, n_windows=4, clock=clk)
+    a.record_completion(2)
+    a.record_dispatch(0.02)
+    b.record_completion(3)
+    b.record_dispatch(0.08)
+    shard_a = {"t": {"jobs": 2, "wait_max_s": 0.5,
+                     "per_backend": {"jax": 2}, "windows": a.snapshot()}}
+    shard_b = {"t": {"jobs": 3, "wait_max_s": 0.9,
+                     "per_backend": {"jax": 1}, "windows": b.snapshot()}}
+    merged = merge_tenant_snapshots([shard_a, shard_b])["t"]
+    assert merged["jobs"] == 5                       # counters sum
+    assert merged["wait_max_s"] == 0.9               # maxes max
+    assert merged["per_backend"] == {"jax": 3}       # nested dicts sum
+    w = merged["windows"]                            # windows recombine
+    assert w["completed"] == 5
+    assert w["dispatch_p99_s"] == pytest.approx(0.08)
+    # one-sided windows survive the merge unchanged
+    one = merge_tenant_snapshots(
+        [shard_a, {"t": {"jobs": 1, "wait_max_s": 0.1,
+                         "per_backend": {}}}])["t"]
+    assert one["windows"]["completed"] == 2
+
+
+# ---------------------------------------------------------------------------
+# JSONL event log + trace sink
+# ---------------------------------------------------------------------------
+
+def test_hop_record_round_trips_the_hop_tuple():
+    hop = make_hop(COMPLETED, shard="shard-3", slack=0.75, t=42.0,
+                   backends={"jax-seg": 4}, deadline_met=True)
+    rec = hop_record("e-1", "agent-0", hop)
+    assert rec["job"] == "e-1" and rec["tenant"] == "agent-0"
+    assert record_hop(rec) == hop
+    # via JSON (the on-disk form)
+    assert record_hop(json.loads(json.dumps(rec))) == hop
+
+
+def test_tracelog_lines_are_flushed_and_close_is_idempotent(tmp_path):
+    log = TraceLog(str(tmp_path), "service")
+    rec = hop_record("j1", "t", make_hop(SUBMITTED, t=1.0))
+    log.append(rec)
+    # flushed per line: readable while the writer is still open
+    lines = open(log.path, encoding="utf-8").read().splitlines()
+    assert len(lines) == 1 and json.loads(lines[0])["event"] == SUBMITTED
+    log.close()
+    log.append(rec)                      # after close: dropped, no raise
+    log.close()
+    assert len(open(log.path, encoding="utf-8").read().splitlines()) == 1
+
+
+def test_disabled_sink_is_a_no_op():
+    sink = TraceSink()
+    assert sink.enabled is False
+    assert sink.begin("k", "t") is None
+    assert sink.store("k", "t", (make_hop(COMPLETED),)) is None
+    sink.finish(None)                    # tolerated
+    sink.emit_hop("k", "t", make_hop(SUBMITTED))   # no log: no-op
+    assert sink.get("k") is None
+    sink.close()
+
+
+def test_sink_lifecycle_get_recent_and_completed_ring():
+    sink = TraceSink(enabled=True)
+    tr = sink.begin("k0", "t")
+    tr.stamp(SUBMITTED)
+    assert sink.get("k0") is tr          # live
+    tr.stamp(COMPLETED)
+    sink.finish(tr)
+    assert sink.get("k0") is tr          # finished, still addressable
+    for i in range(COMPLETED_RING + 40):
+        t2 = sink.begin(f"k{i + 1}", "t")
+        t2.stamp(COMPLETED)
+        sink.finish(t2)
+    assert len(sink._done) <= COMPLETED_RING
+    assert sink.get("k0") is None        # oldest fell off the ring
+    recent = sink.recent(5)
+    assert len(recent) == 5
+    assert recent[-1].key == f"k{COMPLETED_RING + 40}"
+
+
+def test_seed_hops_are_not_reemitted_to_jsonl(tmp_path):
+    sink = TraceSink(trace_dir=str(tmp_path), component="shard-1")
+    seed = (make_hop(SUBMITTED, t=1.0), make_hop(ROUTED, shard="s1", t=2.0))
+    tr = sink.begin("e-1", "t", hops=seed)
+    lines = open(sink.log.path, encoding="utf-8").read().splitlines()
+    assert lines == []                   # history was logged at origin
+    tr.stamp(ADMITTED, shard="s1")
+    lines = open(sink.log.path, encoding="utf-8").read().splitlines()
+    assert len(lines) == 1 and json.loads(lines[0])["event"] == ADMITTED
+    sink.close()
+
+
+# ---------------------------------------------------------------------------
+# replay: JSONL → timelines → gantt
+# ---------------------------------------------------------------------------
+
+def _emit_trace(sink, key, hops):
+    for hop in hops:
+        sink.emit_hop(key, "t", hop)
+
+
+def test_replay_round_trips_emitted_hops(tmp_path):
+    sink = TraceSink(trace_dir=str(tmp_path), component="service")
+    hops_a = [make_hop(SUBMITTED, t=1.0, slack=5.0),
+              make_hop(DISPATCHED, shard="s0", t=2.0, slack=4.0),
+              make_hop(COMPLETED, shard="s0", t=3.0, slack=3.0,
+                       backends={"jax": 2})]
+    hops_b = [make_hop(SUBMITTED, t=1.5),
+              make_hop(FAILED, shard="s0", t=2.5, reason="boom")]
+    _emit_trace(sink, "ja", hops_a)
+    _emit_trace(sink, "jb", hops_b)
+    sink.close()
+    timelines = replay.reassemble(replay.load_events(str(tmp_path)))
+    assert set(timelines) == {"ja", "jb"}
+    # exact round-trip: every reassembled record rebuilds the source hop
+    assert [record_hop(r) for r in timelines["ja"]] == hops_a
+    assert [record_hop(r) for r in timelines["jb"]] == hops_b
+    assert replay.job_timeline(timelines, "nope") == []
+
+
+def test_replay_dedups_identical_hops_across_files(tmp_path):
+    # the same hop logged by two components (client + shard) counts once
+    hop = make_hop(ROUTED, shard="s1", t=5.0)
+    for comp in ("client-f0", "shard-1"):
+        sink = TraceSink(trace_dir=str(tmp_path), component=comp)
+        # distinct files even in one process: component is in the name
+        _emit_trace(sink, "e-1", [hop])
+        sink.close()
+    records = replay.load_events(str(tmp_path))
+    assert len(records) == 2
+    assert len({r["source"] for r in records}) == 2
+    timelines = replay.reassemble(records)
+    assert len(timelines["e-1"]) == 1
+
+
+def test_replay_skips_torn_tail_and_junk_lines(tmp_path):
+    path = os.path.join(str(tmp_path), "events-shard-9-123.jsonl")
+    good = json.dumps(hop_record("j1", "t", make_hop(SUBMITTED, t=1.0)))
+    with open(path, "w", encoding="utf-8") as fh:
+        fh.write(good + "\n")
+        fh.write("\n")                               # blank
+        fh.write('{"job": "j1", "event": "disp')     # torn by kill -9
+    records = replay.load_events(str(tmp_path))
+    assert len(records) == 1
+    assert records[0]["event"] == SUBMITTED
+
+
+def test_shard_gantt_spans_preemption_and_lost_workers(tmp_path):
+    timelines = replay.reassemble([
+        hop_record("j1", "t", h) for h in (
+            make_hop(DISPATCHED, shard="s0", t=1.0),
+            make_hop(PREEMPTED, shard="s0", t=2.0),
+            make_hop(DISPATCHED, shard="s0", t=4.0),
+            make_hop(COMPLETED, shard="s0", t=5.0))
+    ] + [
+        hop_record("j2", "t", h) for h in (
+            make_hop(DISPATCHED, shard="s1", t=1.0),)   # never finished
+    ])
+    gantt = replay.shard_gantt(timelines)
+    assert [(j, t0, t1, o) for j, t0, t1, o in gantt["s0"]] == \
+        [("j1", 1.0, 2.0, PREEMPTED), ("j1", 4.0, 5.0, COMPLETED)]
+    # the killed worker's open span closes at last-known-stamp as "lost"
+    assert gantt["s1"] == [("j2", 1.0, 1.0, "lost")]
+
+
+def test_summarize_counts_outcomes_and_failovers():
+    timelines = replay.reassemble(
+        [hop_record("j1", "t", h) for h in (
+            make_hop(SUBMITTED, t=1.0),
+            make_hop(FAILOVER, shard="s0", t=2.0),
+            make_hop(COMPLETED, shard="s1", t=3.0))] +
+        [hop_record("j2", "t", make_hop(SUBMITTED, t=1.0))])
+    s = replay.summarize(timelines)
+    assert s == {"jobs": 2, "outcomes": {COMPLETED: 1, "open": 1},
+                 "failovers": 1}
+
+
+def test_replay_cli_prints_timelines_and_gantt(tmp_path, capsys):
+    sink = TraceSink(trace_dir=str(tmp_path), component="service")
+    _emit_trace(sink, "j1", [make_hop(SUBMITTED, t=1.0, slack=2.0),
+                             make_hop(DISPATCHED, shard="s0", t=2.0,
+                                      slack=1.0, wait_s=1.0),
+                             make_hop(COMPLETED, shard="s0", t=3.0)])
+    sink.close()
+    assert replay.main([str(tmp_path)]) == 0
+    out = capsys.readouterr().out
+    assert "1 jobs" in out and "submitted→dispatched→completed" in out
+    assert replay.main([str(tmp_path), "--job", "j1"]) == 0
+    out = capsys.readouterr().out
+    assert "dispatched" in out and "@s0" in out and "slack=" in out
+    assert replay.main([str(tmp_path), "--gantt"]) == 0
+    out = capsys.readouterr().out
+    assert "shard s0" in out and "→ completed" in out
+
+
+def test_top_renders_synthetic_snapshot():
+    frame = top.render(top.demo_snapshot())
+    assert "stratum" in frame
+    assert "thr" in frame and "p99" in frame
+    # degenerate snapshot renders too (empty service, no windows yet)
+    assert top.render({}) != ""
+
+
+# ---------------------------------------------------------------------------
+# service integration: traces are truthful
+# ---------------------------------------------------------------------------
+
+def _svc(**kw):
+    kw.setdefault("memory_budget_bytes", 1 << 30)
+    kw.setdefault("n_executors", 1)
+    kw.setdefault("coalesce_window_s", 0.0)
+    return StratumService(**kw)
+
+
+def test_tracing_is_off_by_default_and_free():
+    svc = _svc()
+    try:
+        assert svc.traces.enabled is False
+        _, rep = svc.session("t").submit(
+            _batch(n_rows=1000)).result(timeout=120)
+        assert rep.trace == ()
+    finally:
+        svc.stop()
+
+
+def test_basic_lifecycle_trace_is_complete_monotone_and_slack_shrinks():
+    svc = _svc(trace=True)
+    try:
+        _, rep = svc.session("t").submit(
+            _batch(n_rows=1000), deadline_s=300.0).result(timeout=120)
+        ev = _events(rep.trace)
+        assert ev == [SUBMITTED, ADMITTED, QUEUED, DISPATCHED, COMPLETED]
+        _assert_monotone(rep.trace)
+        _assert_slack_non_increasing(rep.trace)
+        # every hop carries real slack against the 300s SLO
+        assert all(h[3] is not None and 0 < h[3] <= 300.0
+                   for h in rep.trace)
+        done = rep.trace[-1]
+        assert done[4]["deadline_met"] is True
+        assert done[4]["backends"]                 # backend mix recorded
+        assert "plan_cache_hits" in done[4]
+        assert "plan_cache_misses" in done[4]
+        disp = rep.trace[3]
+        assert disp[4]["wait_s"] >= 0.0 and disp[4]["resume"] is False
+    finally:
+        svc.stop()
+
+
+def test_deadline_free_job_traces_with_none_slack():
+    svc = _svc(trace=True)
+    try:
+        _, rep = svc.session("t").submit(
+            _batch(n_rows=1000)).result(timeout=120)
+        assert all(h[3] is None for h in rep.trace)
+        assert rep.trace[-1][0] == COMPLETED
+    finally:
+        svc.stop()
+
+
+def test_trace_dir_jsonl_replays_to_the_reported_trace(tmp_path):
+    svc = _svc(trace=True, trace_dir=str(tmp_path))
+    try:
+        fut = svc.session("t").submit(_batch(n_rows=1000))
+        _, rep = fut.result(timeout=120)
+        svc.stop()
+        timelines = replay.reassemble(replay.load_events(str(tmp_path)))
+        key = f"j{fut.job_id}"
+        assert tuple(record_hop(r) for r in timelines[key]) == rep.trace
+    finally:
+        svc.stop()
+
+
+def _slow_identity(x, delay=0.05):
+    time.sleep(delay)
+    return x
+
+
+def test_preempted_job_trace_has_one_dispatch_preempt_requeue_chain():
+    svc = _svc(trace=True, aging_s=None, autostart=False)
+    try:
+        tag = f"obs{time.monotonic_ns()}"
+        x = T.read("uk_housing", 1000, seed=0)
+        ref = T.project(x, [0])
+        for d in range(8):
+            ref = LazyOp(f"slow_{tag}_{d}", GENERIC,
+                         spec={"fn": _slow_identity,
+                               "kwargs": {"delay": 0.1}},
+                         inputs=(ref,)).out()
+        chain_fut = svc.session("bulk").submit(
+            PipelineBatch([ref], ["chain"]), priority=Priority.SCAVENGER)
+        svc.start()
+        time.sleep(0.45)                 # let a few waves complete
+        probe_fut = svc.session("probe").submit(
+            _batch(n_rows=1000), priority=Priority.INTERACTIVE)
+        probe_fut.result(timeout=120)
+        _, rep = chain_fut.result(timeout=120)
+        assert rep.preemptions == 1
+        ev = _events(rep.trace)
+        # exactly one preemption chain, in order, nothing lost/duplicated
+        assert ev == [SUBMITTED, ADMITTED, QUEUED, DISPATCHED, PREEMPTED,
+                      REQUEUED, DISPATCHED, COMPLETED], ev
+        _assert_monotone(rep.trace)
+        by_event = Counter(ev)
+        assert by_event[DISPATCHED] == 2
+        assert by_event[PREEMPTED] == by_event[REQUEUED] == 1
+        first_disp, second_disp = [h for h in rep.trace
+                                   if h[0] == DISPATCHED]
+        assert first_disp[4]["resume"] is False
+        assert second_disp[4]["resume"] is True
+        # the re-dispatch does not re-measure queue wait
+        assert second_disp[4]["wait_s"] == first_disp[4]["wait_s"]
+        preempt = next(h for h in rep.trace if h[0] == PREEMPTED)
+        requeue = next(h for h in rep.trace if h[0] == REQUEUED)
+        assert preempt[4]["salvaged"] > 0
+        assert requeue[4]["preemptions"] == 1
+        # salvage is counted once, on the terminal hop, matching the report
+        assert rep.trace[-1][4]["salvaged"] == rep.ops_salvaged > 0
+    finally:
+        svc.stop()
+
+
+def test_shed_job_trace_terminates_in_shed():
+    svc = _svc(trace=True)
+    try:
+        ses = svc.session("t")
+        fut = ses.submit(_batch(n_rows=1000), deadline_s=1e-9)
+        with pytest.raises(DeadlineExceeded):
+            fut.result(timeout=120)
+        tr = svc.traces.get(f"j{fut.job_id}")
+        assert tr is not None and tr.terminal == SHED
+        ev = _events(tr.hops)
+        assert ev[:3] == [SUBMITTED, ADMITTED, QUEUED]
+        assert DISPATCHED not in ev              # shed before any dispatch
+        assert tr.hops[-1][3] is not None and tr.hops[-1][3] <= 0
+        # the shed fed the windowed collector
+        w = svc.telemetry.global_snapshot()["windows"]
+        assert w["shed"] >= 1 and w["deadline_jobs"] >= 1
+    finally:
+        svc.stop()
+
+
+def test_cancelled_job_trace_terminates_in_cancelled():
+    svc = _svc(trace=True, autostart=False)
+    try:
+        fut = svc.session("t").submit(_batch(n_rows=1000))
+        assert fut.cancel() is True
+        tr = svc.traces.get(f"j{fut.job_id}")
+        assert tr.terminal == CANCELLED
+        assert _events(tr.hops) == [SUBMITTED, ADMITTED, QUEUED, CANCELLED]
+    finally:
+        svc.stop()
+
+
+def test_failed_job_trace_carries_the_error():
+    def _boom(*_a, **_k):
+        raise ValueError("poisoned op")
+
+    svc = _svc(trace=True)
+    try:
+        bad = LazyOp("boom_obs", GENERIC, spec={"fn": _boom},
+                     inputs=(T.read("uk_housing", 1000, seed=0),)).out()
+        fut = svc.session("t").submit(PipelineBatch([bad], ["bad"]))
+        with pytest.raises(Exception):
+            fut.result(timeout=120)
+        tr = svc.traces.get(f"j{fut.job_id}")
+        assert tr.terminal == FAILED
+        assert tr.hops[-1][4]["error"]        # exception type recorded
+        _assert_monotone(tr.hops)
+    finally:
+        svc.stop()
+
+
+def test_coalesced_jobs_both_carry_the_merge_hop():
+    svc = _svc(trace=True, autostart=False)
+    try:
+        f1 = svc.session("a").submit(_batch(n_rows=1000))
+        f2 = svc.session("b").submit(_batch("q", n_rows=1000,
+                                            cols=(10, 11, 13)))
+        svc.start()
+        reps = [f.result(timeout=120)[1] for f in (f1, f2)]
+        for rep in reps:
+            ev = _events(rep.trace)
+            assert ev == [SUBMITTED, ADMITTED, QUEUED, COALESCED,
+                          DISPATCHED, COMPLETED], ev
+            merge_hop = next(h for h in rep.trace if h[0] == COALESCED)
+            assert merge_hop[4]["n_jobs"] == 2
+            assert rep.coalesced_with == 1
+    finally:
+        svc.stop()
+
+
+def test_windowed_collector_feeds_service_global_snapshot():
+    svc = _svc()                          # windows are on even untraced
+    try:
+        svc.session("t").submit(_batch(n_rows=1000),
+                                deadline_s=300.0).result(timeout=120)
+        w = svc.telemetry.global_snapshot()["windows"]
+        assert w["submitted"] >= 1 and w["completed"] >= 1
+        assert w["deadline_jobs"] == 1 and w["deadline_met"] == 1
+        assert w["attainment"] == 1.0
+        assert w["dispatch_p99_s"] >= 0.0
+        assert len(w["per_window"]) >= 1
+    finally:
+        svc.stop()
+
+
+# ---------------------------------------------------------------------------
+# fabric: traces survive the wire and failover
+# ---------------------------------------------------------------------------
+
+def _fabric(n_shards=2, **kw):
+    kw.setdefault("memory_budget_bytes", 1 << 30)
+    kw.setdefault("n_executors", 1)
+    kw.setdefault("coalesce_window_s", 0.0)
+    return ShardedStratum(n_shards=n_shards, **kw)
+
+
+def _key_for_shard(fab, shard_id, tag="k"):
+    for i in range(10_000):
+        key = f"{tag}-{i}"
+        if fab.router._ring.route(key) == shard_id:
+            return key
+    raise AssertionError("no key found")  # pragma: no cover
+
+
+def test_envelope_hops_survive_the_wire_codec():
+    hops = (make_hop(SUBMITTED, t=1.0, slack=9.5, tenant="t",
+                     priority="BATCH"),
+            make_hop(ROUTED, shard="shard-1", t=2.0, slack=8.5, attempt=0,
+                     requeue=False))
+    env = JobEnvelope(envelope_id="e-7", tenant="t", priority=1,
+                      routing_key="k", batch=_batch(n_rows=1000),
+                      deadline_s=9.0, hops=hops)
+    out = decode_job(encode_job(env))
+    assert out.hops == hops
+    # untraced envelopes stay hop-free through the codec
+    bare = decode_job(encode_job(JobEnvelope(
+        envelope_id="e-8", tenant="t", priority=1, routing_key="k",
+        batch=_batch(n_rows=1000))))
+    assert bare.hops == ()
+
+
+def test_fabric_trace_reassembles_client_and_shard_hops():
+    fab = _fabric(trace=True)
+    try:
+        _, rep = fab.session("t").submit(
+            _batch(n_rows=1000), deadline_s=300.0).result(timeout=120)
+        ev = _events(rep.hops)
+        assert ev == [SUBMITTED, ROUTED, ADMITTED, QUEUED, DISPATCHED,
+                      COMPLETED], ev
+        _assert_monotone(rep.hops)
+        _assert_slack_non_increasing(rep.hops, eps=0.25)
+        routed = rep.hops[1]
+        assert routed[2] == rep.shard_id          # placement recorded
+        assert rep.hops[-1][2] == rep.shard_id
+        # the client sink adopted the reassembled trace
+        tr = fab.traces.get(rep.envelope_id)
+        assert tr is not None and tr.as_hops() == rep.hops
+    finally:
+        fab.stop()
+
+
+def test_fabric_untraced_reports_have_no_hops():
+    fab = _fabric()
+    try:
+        _, rep = fab.session("t").submit(
+            _batch(n_rows=1000)).result(timeout=120)
+        assert rep.hops == ()
+        assert fab.traces.enabled is False
+    finally:
+        fab.stop()
+
+
+def test_failover_trace_continuity_under_fail_shard():
+    fab = _fabric(n_shards=2, autostart=False, trace=True)
+    try:
+        victim, survivor = fab.shard_ids()
+        fut = fab.session("t").submit(
+            _batch(n_rows=1000), deadline_s=300.0,
+            affinity=_key_for_shard(fab, victim))
+        assert fab.router.pending_count(victim) == 1
+        assert fab.fail_shard(victim) == 1
+        fab.start()
+        _, rep = fut.result(timeout=180)
+        assert rep.shard_id == survivor
+        ev = _events(rep.hops)
+        # the trace crosses the failover without losing the pre-crash hops
+        assert ev[:2] == [SUBMITTED, ROUTED]
+        assert FAILOVER in ev
+        fo = ev.index(FAILOVER)
+        assert ev[fo + 1:] == [ROUTED, ADMITTED, QUEUED, DISPATCHED,
+                               COMPLETED], ev
+        hop_fo = rep.hops[fo]
+        assert hop_fo[2] == victim                # who died
+        assert rep.hops[1][2] == victim           # first placement
+        assert rep.hops[fo + 1][2] == survivor    # re-placement
+        assert rep.hops[-1][2] == survivor
+        _assert_monotone(rep.hops)
+        _assert_slack_non_increasing(rep.hops, eps=0.25)
+    finally:
+        fab.stop()
+
+
+def test_retired_shard_freezes_its_windows_snapshot():
+    fab = _fabric(n_shards=2)
+    try:
+        victim = fab.shard_ids()[0]
+        fut = fab.session("t").submit(_batch(n_rows=1000),
+                                      affinity=_key_for_shard(fab, victim))
+        fut.result(timeout=120)
+        fab.drain_shard(victim)
+        per = fab.telemetry.per_shard()
+        assert per[victim]["retired"] is True
+        frozen = per[victim]["windows"]
+        assert frozen["completed"] >= 1           # history preserved
+        g = fab.telemetry.global_snapshot()
+        # fabric-wide windows still merge retired + live shards
+        assert g["windows"]["completed"] >= 1
+    finally:
+        fab.stop()
+
+
+# ---------------------------------------------------------------------------
+# backfill: coalescer unit coverage
+# ---------------------------------------------------------------------------
+
+def _fake_job(jid, tenant, batch):
+    return SimpleNamespace(id=jid, tenant=tenant, batch=batch)
+
+
+def test_coalesce_namespaces_and_split_results_round_trips():
+    a = _fake_job(7, "a", _batch("p", n_rows=1000))
+    b = _fake_job(9, "b", PipelineBatch(
+        [_pipeline(n_rows=1000), _pipeline(n_rows=1000, cols=(10, 11, 13))],
+        ["p", "q"]))
+    sb = coalesce([a, b])
+    assert sb.batch.names == [f"j7{_SEP}p", f"j9{_SEP}p", f"j9{_SEP}q"]
+    assert sb.spans == [(0, 1), (1, 3)]
+    named = {f"j7{_SEP}p": 1.0, f"j9{_SEP}p": 2.0, f"j9{_SEP}q": 3.0}
+    assert sb.split_results(named) == [{"p": 1.0}, {"p": 2.0, "q": 3.0}]
+    # a job sharing a sink NAME with another tenant never collides:
+    # the namespace prefix keys on job id, not pipeline name
+    assert len(set(sb.batch.names)) == 3
+
+
+def test_coalesce_job_sinks_follow_spans():
+    a = _fake_job(1, "a", _batch("p", n_rows=1000))
+    b = _fake_job(2, "b", _batch("q", n_rows=1000, cols=(10, 11, 13)))
+    sb = coalesce([a, b])
+    final = list(sb.batch.sinks)          # pre-rewrite order is preserved
+    assert sb.job_sinks(final, 0) == final[0:1]
+    assert sb.job_sinks(final, 1) == final[1:2]
+
+
+def test_reachable_sigs_and_cross_agent_dedup_accounting():
+    shared = _pipeline(n_rows=1000)
+    only_b = _pipeline(n_rows=1000, cols=(10, 11, 13))
+    sigs_a = reachable_sigs([shared])
+    sigs_b = reachable_sigs([shared, only_b])
+    assert sigs_a and sigs_a <= sigs_b
+    saved, per_tenant = cross_agent_dedup([sigs_a, sigs_b], ["a", "b"])
+    # every op of A's pipeline also appears in B's job: each saved once
+    assert saved == len(sigs_a)
+    assert per_tenant["a"] == per_tenant["b"] == len(sigs_a)
+    # same-tenant overlap is NOT cross-agent dedup
+    saved_same, per_same = cross_agent_dedup([sigs_a, sigs_a], ["a", "a"])
+    assert saved_same == 0 and per_same == {}

@@ -18,7 +18,8 @@ import pytest
 from repro.core import PipelineBatch
 from repro.service.fabric import (CodecError, JobEnvelope, ProcConfig,
                                   ProcStratumFabric, ShardedStratum,
-                                  encode_job, encode_result, ResultEnvelope)
+                                  decode_job, encode_job, encode_result,
+                                  ResultEnvelope)
 from repro.service.fabric.proc.frames import (BYE, CONFIG, DRAIN,
                                               HANDOFF_DATA, HANDOFF_PUT,
                                               HANDOFF_REQ, HEARTBEAT, HELLO,
@@ -401,3 +402,150 @@ def test_worker_exits_nonzero_when_supervisor_is_gone():
          "--port", str(port), "--shard-id", "s0"],
         env=env, capture_output=True, text=True, timeout=120)
     assert r.returncode != 0                    # never a silent orphan
+
+
+# ---------------------------------------------------------------------------
+# observability under chaos: heartbeat windows, traced frames, kill -9 traces
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_with_windowed_stats_survives_byte_feeds():
+    from repro.service.observability import ThroughputCollector
+    col = ThroughputCollector(window_s=0.5, n_windows=8)
+    col.record_submit()
+    col.record_dispatch(0.012, queue_depth=4)
+    col.record_completion()
+    # the exact payload shape the worker heartbeat thread ships
+    beat = {"shard_id": "shard-0", "pid": 4242, "t": 1.0,
+            "queue_depth": 0, "inflight": 1, "tenants": {},
+            "global": {"windows": col.snapshot()}}
+    frame = encode_control(HEARTBEAT, beat)
+    stream = _frames_with_prefix([frame])
+    dec = FrameDecoder()
+    got = []
+    for i in range(len(stream)):
+        got += dec.feed(stream[i:i + 1])
+    assert got == [frame] and dec.pending_bytes() == 0
+    kind, payload = decode_control(got[0])
+    assert kind == HEARTBEAT
+    win = payload["global"]["windows"]
+    assert win["submitted"] == 1 and win["completed"] == 1
+    assert win["dispatch_p99_s"] == pytest.approx(0.012)
+    assert win["queue_depth_max"] == 4
+    assert win["per_window"]                    # ring detail survives too
+
+
+def test_traced_job_frame_corruption_poisons_one_frame_not_stream():
+    from repro.service.observability import ROUTED, SUBMITTED, make_hop
+    env = JobEnvelope(envelope_id="e-t", tenant="t", priority=1,
+                      routing_key="k", batch=_batch(),
+                      hops=(make_hop(SUBMITTED, t=1.0, slack=5.0),
+                            make_hop(ROUTED, shard="shard-0", t=2.0,
+                                     attempt=0)))
+    job = encode_job(env)
+    beat = encode_control(HEARTBEAT, {"n": 1})
+    corrupted = job[:-1] + bytes([job[-1] ^ 0xFF])   # flip payload byte
+    dec = FrameDecoder()
+    frames = dec.feed(_frames_with_prefix([corrupted, beat]))
+    assert len(frames) == 2                     # framing stays in sync
+    with pytest.raises(CodecError):
+        decode_job(frames[0])                   # poisoned alone
+    assert decode_control(frames[1]) == (HEARTBEAT, {"n": 1})
+    # the uncorrupted frame round-trips the hop log byte-exactly
+    assert decode_job(job).hops == env.hops
+
+
+def test_live_view_renders_synthetic_proc_snapshot():
+    from repro.service.observability import top
+    frame = top.render(top.demo_snapshot())
+    assert "proc:" in frame and "autoscale" in frame
+    assert "shard0" in frame and "retired" in frame
+    assert "p99" in frame
+
+
+def _key_for_shard(fab, shard_id, tag="k"):
+    for i in range(10_000):
+        key = f"{tag}-{i}"
+        if fab.router._ring.route(key) == shard_id:
+            return key
+    raise AssertionError("no key found")  # pragma: no cover
+
+
+def _chaos_trace_dir(tmp_path):
+    """Trace dir for kill -9 tests; CI sets STRATUM_TEST_TRACE_DIR so the
+    JSONL logs survive the run and upload as a failure artifact."""
+    base = os.environ.get("STRATUM_TEST_TRACE_DIR")
+    if base:
+        import tempfile
+        os.makedirs(base, exist_ok=True)
+        return tempfile.mkdtemp(prefix="trace-", dir=base)
+    return str(tmp_path)
+
+
+def test_sigkill_mid_dispatch_trace_survives_and_replays(tmp_path):
+    from repro.service.observability import replay
+    from repro.service.observability import (COMPLETED, DISPATCHED,
+                                             FAILOVER)
+    tdir = _chaos_trace_dir(tmp_path)
+    fab = _proc_fabric(n_shards=2, trace=True, trace_dir=tdir)
+    try:
+        victim = fab.shard_ids()[0]
+        sess = fab.session("agent-0")
+        futs = [sess.submit(_batch(data_seed=s), deadline_s=600.0,
+                            affinity=_key_for_shard(fab, victim, f"v{s}"))
+                for s in range(6)]
+        # sensor: the victim worker flushes every hop to its JSONL, so
+        # poll the trace dir for a dispatched-but-not-completed job and
+        # SIGKILL the worker while it holds that job
+        deadline = time.monotonic() + 120.0
+        armed = False
+        while time.monotonic() < deadline and not armed:
+            recs = replay.load_events(tdir)
+            done = {r["job"] for r in recs if r["event"] == COMPLETED}
+            armed = any(r["event"] == DISPATCHED and r["shard"] == victim
+                        and r["job"] not in done for r in recs)
+            if not armed:
+                time.sleep(0.02)
+        assert armed, "victim never dispatched a job"
+        os.kill(fab.supervisor.live_workers()[victim], signal.SIGKILL)
+        reports = [f.result(timeout=300)[1] for f in futs]
+        assert len(reports) == 6                # zero loss, as ever
+        survivor = fab.shard_ids()[0]
+        assert survivor != victim
+    finally:
+        fab.stop()
+
+    # postmortem: the killed worker's flushed hops + the survivor's hops
+    # reassemble into full timelines
+    timelines = replay.reassemble(replay.load_events(tdir))
+    crossed = []
+    for key, hops in timelines.items():
+        ev = [r["event"] for r in hops]
+        disp_shards = [r["shard"] for r in hops if r["event"] == DISPATCHED]
+        if FAILOVER in ev and victim in disp_shards:
+            crossed.append((key, hops))
+    assert crossed, \
+        "no job was dispatched on the victim and failed over"
+    for key, hops in crossed:
+        ev = [r["event"] for r in hops]
+        # dispatch on the victim, then failover, then completion on the
+        # ring successor — nothing lost, nothing duplicated out of order
+        assert ev[-1] == COMPLETED, (key, ev)
+        i_disp = next(i for i, r in enumerate(hops)
+                      if r["event"] == DISPATCHED and r["shard"] == victim)
+        i_fo = next(i for i, r in enumerate(hops)
+                    if r["event"] == FAILOVER)
+        assert i_disp < i_fo < len(hops) - 1, (key, ev)
+        last_disp = [r for r in hops if r["event"] == DISPATCHED][-1]
+        assert last_disp["shard"] == survivor
+        assert hops[-1]["shard"] == survivor
+        ts = [r["t"] for r in hops]
+        assert ts == sorted(ts), (key, ts)      # monotone timestamps
+        slacks = [r["slack"] for r in hops if r["slack"] is not None]
+        for a, b in zip(slacks, slacks[1:]):    # budget shrinks, never grows
+            assert b <= a + 0.25, (key, slacks)
+    # the gantt view attributes the victim's cut-short span as lost work
+    gantt = replay.shard_gantt(timelines)
+    assert victim in gantt and survivor in gantt
+    summary = replay.summarize(timelines)
+    assert summary["failovers"] >= 1
+    assert summary["outcomes"].get(COMPLETED, 0) >= 6
