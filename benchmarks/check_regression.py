@@ -23,11 +23,27 @@ Gated metrics (checked when present in the baseline):
   lifecycle tracing + JSONL event log relative to tracing off.  Its
   committed baseline is pinned at 1.0 (parity) and its gate carries a
   per-gate 5% tolerance, so this is an absolute overhead budget: traced
-  throughput must stay within 5% of untraced.
+  throughput must stay within 5% of untraced;
+* ``control_smoke.attainment_controlled`` — tight-deadline probe
+  attainment under a batch flood with the closed-loop controller on
+  (the static mode collapses to edge rejections by design, so only the
+  controlled rate is gated).
 
 A metric present in the baseline but missing from the fresh artifact is a
 failure (the bench crashed or was skipped); a metric missing from the
 baseline is skipped (lets a PR introduce the baseline it is adding).
+
+Each failure also prints one machine-readable ``DIFF {...}`` JSON line
+per gate (section, metric, baseline, fresh, floor, status), and
+``--markdown-summary PATH`` appends a baseline-vs-fresh comparison table
+in GitHub-flavored markdown (the CI jobs point it at
+``$GITHUB_STEP_SUMMARY``).
+
+``--write-baseline`` regenerates the gated sections of the baseline file
+from the fresh artifact instead of checking.  It REFUSES to touch the
+baseline unless ``--yes`` is also passed — rewriting the committed
+numbers is how a regression gets laundered into the gate, so it must be
+an explicit two-flag act.
 
     python -m benchmarks.check_regression \
         --baseline BENCH_service.json --fresh /tmp/bench_smoke.json
@@ -51,34 +67,93 @@ GATES = (
     ("deadline_smoke", "attainment_aware"),
     ("fabric_proc_smoke", "completed_frac"),
     ("observability_smoke", "traced_over_untraced", 0.05),
+    ("control_smoke", "attainment_controlled"),
 )
+
+
+def gate_rows(baseline: dict, fresh: dict, max_regression: float) -> list:
+    """Per-gate comparison rows: the single source for failures, the
+    printed diff lines and the markdown summary table.
+
+    ``status`` is one of ``ok`` / ``regression`` / ``missing_fresh`` /
+    ``no_baseline`` (skipped — the PR is introducing this baseline)."""
+    rows = []
+    for section, metric, *tol in GATES:
+        base = baseline.get(section, {}).get(metric)
+        new = fresh.get(section, {}).get(metric)
+        allowed = tol[0] if tol else max_regression
+        row = {"section": section, "metric": metric, "baseline": base,
+               "fresh": new, "max_regression": allowed, "floor": None,
+               "status": "ok"}
+        if base is None:
+            row["status"] = "no_baseline"
+        elif new is None:
+            row["status"] = "missing_fresh"
+        else:
+            row["floor"] = base * (1.0 - allowed)
+            if new < row["floor"]:
+                row["status"] = "regression"
+        rows.append(row)
+    return rows
 
 
 def check(baseline: dict, fresh: dict, max_regression: float) -> list:
     """Returns a list of failure strings (empty = gate passes)."""
     failures = []
     gated = 0
-    for section, metric, *tol in GATES:
-        base = baseline.get(section, {}).get(metric)
-        if base is None:
+    for row in gate_rows(baseline, fresh, max_regression):
+        name = f"{row['section']}.{row['metric']}"
+        if row["status"] == "no_baseline":
             continue                      # no committed baseline yet
         gated += 1
-        new = fresh.get(section, {}).get(metric)
-        if new is None:
-            failures.append(f"{section}.{metric}: missing from fresh "
+        if row["status"] == "missing_fresh":
+            failures.append(f"{name}: missing from fresh "
                             f"artifact (bench crashed or skipped?)")
-            continue
-        allowed = tol[0] if tol else max_regression
-        floor = base * (1.0 - allowed)
-        if new < floor:
+        elif row["status"] == "regression":
             failures.append(
-                f"{section}.{metric}: {new:.2f} < allowed floor "
-                f"{floor:.2f} (baseline {base:.2f}, "
-                f"max regression {allowed:.0%})")
+                f"{name}: {row['fresh']:.2f} < allowed floor "
+                f"{row['floor']:.2f} (baseline {row['baseline']:.2f}, "
+                f"max regression {row['max_regression']:.0%})")
     if not gated:
         failures.append("no gated metrics found in baseline — nothing "
                         "was checked; commit a *_smoke baseline first")
     return failures
+
+
+def markdown_summary(rows: list, title: str = "Bench gate") -> str:
+    """Baseline-vs-fresh comparison as a GitHub-flavored markdown table."""
+    icon = {"ok": "✅", "regression": "❌", "missing_fresh": "❌",
+            "no_baseline": "⏭️"}
+
+    def fmt(v):
+        return f"{v:.3f}" if isinstance(v, (int, float)) else "—"
+
+    lines = [f"### {title}", "",
+             "| gate | baseline | fresh | allowed floor | status |",
+             "|---|---|---|---|---|"]
+    for r in rows:
+        lines.append(
+            f"| `{r['section']}.{r['metric']}` | {fmt(r['baseline'])} "
+            f"| {fmt(r['fresh'])} | {fmt(r['floor'])} "
+            f"| {icon[r['status']]} {r['status']} |")
+    return "\n".join(lines) + "\n"
+
+
+def write_baseline(baseline_path: str, baseline: dict, fresh: dict) -> list:
+    """Merge the fresh artifact's GATED sections into the baseline file.
+
+    Only sections named in ``GATES`` move — a full-bench artifact may
+    carry extra sections the baseline doesn't gate.  Returns the list of
+    section names updated."""
+    updated = []
+    for section, _metric, *_tol in GATES:
+        if section in fresh:
+            baseline[section] = fresh[section]
+            updated.append(section)
+    with open(baseline_path, "w") as f:
+        json.dump(baseline, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return updated
 
 
 def main(argv=None) -> int:
@@ -87,21 +162,48 @@ def main(argv=None) -> int:
     ap.add_argument("--fresh", required=True)
     ap.add_argument("--max-regression", type=float, default=0.20,
                     help="allowed fractional speedup loss (default 0.20)")
+    ap.add_argument("--markdown-summary", metavar="PATH",
+                    help="append a baseline-vs-fresh markdown table here "
+                         "(point at $GITHUB_STEP_SUMMARY in CI)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="regenerate the baseline's gated sections from "
+                         "--fresh instead of checking (requires --yes)")
+    ap.add_argument("--yes", action="store_true",
+                    help="confirm --write-baseline (refused without it)")
     args = ap.parse_args(argv)
     with open(args.baseline) as f:
         baseline = json.load(f)
     with open(args.fresh) as f:
         fresh = json.load(f)
+
+    if args.write_baseline:
+        if not args.yes:
+            print("refusing to rewrite the committed baseline without "
+                  "--yes (this is how a regression gets laundered into "
+                  "the gate)")
+            return 1
+        updated = write_baseline(args.baseline, baseline, fresh)
+        print(f"baseline {args.baseline}: "
+              f"regenerated {', '.join(updated) or 'nothing'} "
+              f"from {args.fresh}")
+        return 0
+
+    rows = gate_rows(baseline, fresh, args.max_regression)
     failures = check(baseline, fresh, args.max_regression)
-    for section, metric, *_tol in GATES:
-        base = baseline.get(section, {}).get(metric)
-        new = fresh.get(section, {}).get(metric)
-        if base is not None and new is not None:
-            print(f"{section}.{metric}: baseline {base:.2f} -> "
-                  f"fresh {new:.2f}")
+    for row in rows:
+        if row["baseline"] is not None and row["fresh"] is not None:
+            print(f"{row['section']}.{row['metric']}: "
+                  f"baseline {row['baseline']:.2f} -> "
+                  f"fresh {row['fresh']:.2f}")
+    if args.markdown_summary:
+        with open(args.markdown_summary, "a") as f:
+            f.write(markdown_summary(rows))
     if failures:
         for msg in failures:
             print(f"REGRESSION {msg}")
+        for row in rows:
+            if row["status"] not in ("ok", "no_baseline"):
+                print("DIFF " + json.dumps(row, sort_keys=True))
         return 1
     print("bench regression gate: OK")
     return 0

@@ -32,10 +32,14 @@ Sections:
                    per-job lifecycle traces + JSONL event log on vs off;
                    records the traced/untraced throughput ratio (merged
                    into BENCH_service.json, gated at ≤5% overhead)
+  * control      — closed-loop admission/WFQ control from observed
+                   windows vs static config on a two-phase flood
+                   workload: probe attainment, batch-throughput parity
+                   and retune count (merged into BENCH_service.json)
 
 ``--smoke`` runs CI-sized variants of the ``service``, ``sharded``,
-``compiled``, ``deadline``, ``fabric_proc`` and ``observability``
-sections (smaller rows / agents / rounds)
+``compiled``, ``deadline``, ``fabric_proc``, ``observability`` and
+``control`` sections (smaller rows / agents / rounds)
 and records them under ``*_smoke`` keys, which
 ``benchmarks/check_regression.py`` gates against the committed baseline;
 the other sections ignore the flag.
@@ -128,6 +132,11 @@ def _observability(args):
     return observability_rows(smoke=args.smoke, out=args.out)
 
 
+def _control(args):
+    from .e2e_agentic import control_rows
+    return control_rows(smoke=args.smoke, out=args.out)
+
+
 SECTIONS = {
     "characterize": _characterize,
     "micro": _micro,
@@ -141,6 +150,7 @@ SECTIONS = {
     "deadline": _deadline,
     "fabric_proc": _fabric_proc,
     "observability": _observability,
+    "control": _control,
 }
 
 

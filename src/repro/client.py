@@ -57,6 +57,7 @@ from .core.api import (ALL_FEATURES, _DEFAULT_CACHE_FRACTION,
                        _DEFAULT_PLAN_CACHE_ENTRIES, Stratum)
 from .core.fusion import PipelineBatch
 from .core.dag import LazyRef
+from .service.control import ControlPolicy
 from .service.priority import Priority
 from .service.queue import DeadlineExceeded
 from .service.server import ServiceConfig, StratumService
@@ -64,9 +65,10 @@ from .service.session import PipelineFuture
 from .service.fabric import StratumFabric
 
 __all__ = [
-    "CacheConfig", "DeadlineExceeded", "FabricTarget", "LocalTarget",
-    "OptimizerConfig", "RuntimeConfig", "ServiceTuning", "ServiceTarget",
-    "StratumClient", "StratumConfig", "SubmitOptions", "connect",
+    "CacheConfig", "ControlPolicy", "DeadlineExceeded", "FabricTarget",
+    "LocalTarget", "OptimizerConfig", "RuntimeConfig", "ServiceTuning",
+    "ServiceTarget", "StratumClient", "StratumConfig", "SubmitOptions",
+    "connect",
 ]
 
 
@@ -183,6 +185,12 @@ class ServiceTuning:
     # windowed throughput/attainment collector geometry
     window_s: float = 1.0
     n_windows: int = 32
+    # closed-loop control (docs/SCHEDULING.md §5): a ControlPolicy turns
+    # on the feedback controller that retunes admission limits and WFQ
+    # weights from the windowed collector (and, with processes=True, is
+    # shipped to every worker shard inside its ServiceConfig); None =
+    # every knob stays at its configured constant
+    control: Optional[ControlPolicy] = None
 
 
 @dataclass(frozen=True)
@@ -281,7 +289,8 @@ class StratumConfig:
             trace=s.trace,
             trace_dir=s.trace_dir,
             window_s=s.window_s,
-            n_windows=s.n_windows)
+            n_windows=s.n_windows,
+            control=s.control)
 
 
 # ---------------------------------------------------------------------------

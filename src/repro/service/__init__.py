@@ -19,6 +19,8 @@ telemetry.  See ``docs/ARCHITECTURE.md`` and ``docs/SCHEDULING.md``.
 """
 
 from .coalesce import SuperBatch, coalesce, cross_agent_dedup
+from .control import (ControlPolicy, ServiceController,
+                      merge_control_snapshots)
 from .observability import (JobTrace, ThroughputCollector, TraceSink,
                             merge_window_snapshots)
 from .priority import DEFAULT_WEIGHTS, Priority
@@ -29,10 +31,12 @@ from .telemetry import ServiceTelemetry, TenantStats, merge_tenant_snapshots
 from .fabric import ShardedStratum, StratumFabric
 
 __all__ = [
-    "AdmissionError", "DEFAULT_WEIGHTS", "DeadlineExceeded", "FairQueue",
-    "Job", "JobReport", "JobTrace", "PipelineFuture", "Priority",
-    "ServiceConfig", "ServiceTelemetry", "Session", "ShardedStratum",
-    "StratumFabric", "StratumService", "SuperBatch", "TenantStats",
-    "ThroughputCollector", "TraceSink", "coalesce", "cross_agent_dedup",
-    "merge_tenant_snapshots", "merge_window_snapshots",
+    "AdmissionError", "ControlPolicy", "DEFAULT_WEIGHTS",
+    "DeadlineExceeded", "FairQueue", "Job", "JobReport", "JobTrace",
+    "PipelineFuture", "Priority", "ServiceConfig", "ServiceController",
+    "ServiceTelemetry", "Session", "ShardedStratum", "StratumFabric",
+    "StratumService", "SuperBatch", "TenantStats", "ThroughputCollector",
+    "TraceSink", "coalesce", "cross_agent_dedup",
+    "merge_control_snapshots", "merge_tenant_snapshots",
+    "merge_window_snapshots",
 ]

@@ -6,10 +6,18 @@ yet arrived) and fabric-wide deadline attainment — and actuates the two
 membership verbs the fabric already has:
 
 * **scale up** — sustained backlog per shard above
-  ``scale_up_backlog_per_shard`` (or attainment sagging under
-  ``attainment_floor`` while deadline jobs are in play) spawns a fresh
+  ``scale_up_backlog_per_shard`` (or *windowed* deadline attainment
+  sagging under ``attainment_floor`` for ``attainment_trend_len``
+  consecutive ticks while deadline jobs are in play) spawns a fresh
   worker process via ``fabric.add_shard``.  Consistent hashing keeps the
   disruption bounded: only ~K/N keys remap to the newcomer.
+
+  The attainment signal reads the merged windowed collector
+  (``global_snapshot()["windows"]``, which includes retired shards'
+  frozen windows), NOT the cumulative deadline block: the cumulative
+  rate whipsaws when a burst of deadline jobs completes between
+  heartbeats and, being all-time, can never recover once it has sagged.
+  The trend requirement debounces single-window noise.
 * **scale down** — a fabric idle for ``scale_down_idle_s`` straight
   (zero backlog, zero queued, zero in-flight) drains its newest shard
   via ``fabric.scale_down``, which ships the departing worker's hottest
@@ -27,6 +35,7 @@ from __future__ import annotations
 
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass
 
 
@@ -37,8 +46,10 @@ class AutoscalePolicy:
     interval_s: float = 0.25
     # spawn when router backlog per live shard exceeds this
     scale_up_backlog_per_shard: float = 4.0
-    # ... or when deadline attainment sags below this with SLO jobs live
+    # ... or when WINDOWED deadline attainment sags below this with SLO
+    # jobs live for attainment_trend_len consecutive ticks
     attainment_floor: float = 0.9
+    attainment_trend_len: int = 3
     scale_up_cooldown_s: float = 1.0
     # drain the newest shard after this long of fabric-wide idleness
     scale_down_idle_s: float = 2.0
@@ -48,6 +59,8 @@ class AutoscalePolicy:
             raise ValueError("min_shards must be >= 1")
         if self.max_shards < self.min_shards:
             raise ValueError("max_shards must be >= min_shards")
+        if self.attainment_trend_len < 1:
+            raise ValueError("attainment_trend_len must be >= 1")
 
 
 class Autoscaler:
@@ -60,6 +73,9 @@ class Autoscaler:
         self._counter = 0
         self._last_scale_up = 0.0
         self._idle_since: float = 0.0       # 0 → not currently idle
+        # recent windowed-attainment observations; pressure requires the
+        # full deque to sag below the floor (trend, not a single sample)
+        self._att_trend: deque = deque(maxlen=policy.attainment_trend_len)
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._loop,
                                         name="proc-autoscaler", daemon=True)
@@ -102,13 +118,23 @@ class Autoscaler:
                 and now - self._last_scale_up >= p.scale_up_cooldown_s:
             pressure = backlog / n > p.scale_up_backlog_per_shard
             if not pressure and backlog:
-                d = fabric.telemetry.global_snapshot().get("deadline", {})
-                pressure = (d.get("jobs", 0) > 0
-                            and d.get("attainment", 1.0)
-                            < p.attainment_floor)
+                # windowed attainment trend (NOT the cumulative deadline
+                # block, which whipsaws on bursts and never recovers):
+                # the merged windows include retired shards' frozen rows
+                win = (fabric.telemetry.global_snapshot()
+                       .get("windows") or {})
+                if win.get("deadline_jobs", 0) > 0:
+                    self._att_trend.append(win.get("attainment", 1.0))
+                else:
+                    self._att_trend.clear()   # no SLO evidence in window
+                pressure = (len(self._att_trend)
+                            == p.attainment_trend_len
+                            and all(a < p.attainment_floor
+                                    for a in self._att_trend))
             if pressure:
                 self._counter += 1
                 self._idle_since = 0.0
+                self._att_trend.clear()   # restart the trend post-spawn
                 try:
                     fabric.add_shard(f"auto-{self._counter}")
                 except Exception:  # noqa: BLE001 — spawn failed; retry

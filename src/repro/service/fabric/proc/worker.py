@@ -234,6 +234,16 @@ class ShardWorker:
             svc = self.service
             if svc is None:
                 continue
+            # fabric-side closed-loop control piggybacks the heartbeat
+            # cadence (no extra thread in the worker either); maybe_tick
+            # self-rate-limits, so double-ticking with the dispatch loop
+            # is harmless
+            ctl = getattr(svc, "controller", None)
+            if ctl is not None:
+                try:
+                    ctl.maybe_tick()
+                except Exception:  # noqa: BLE001 — control must not kill
+                    pass           # the heartbeat
             try:
                 beat = {
                     "shard_id": self.shard_id,

@@ -19,6 +19,7 @@ rebalance or failover cost.
 
 from __future__ import annotations
 
+from ..control import merge_control_snapshots
 from ..observability import merge_window_snapshots
 from ..telemetry import merge_tenant_snapshots
 
@@ -63,6 +64,9 @@ class FabricTelemetry:
         if "windows" in g:
             # last windowed snapshot the shard produced, frozen as-is
             row["windows"] = g["windows"]
+        if "control" in g:
+            # actuation counters stay monotone across scale-down/failover
+            row["control"] = g["control"]
         self._retired[shard_id] = (svc.telemetry.snapshot(), row)
 
     # -- per-tenant view (Session.telemetry compatibility) -----------------
@@ -96,6 +100,8 @@ class FabricTelemetry:
                 out[shard_id]["plan_cache"] = g["plan_cache"]
             if "windows" in g:
                 out[shard_id]["windows"] = g["windows"]
+            if "control" in g:
+                out[shard_id]["control"] = g["control"]
         return out
 
     def global_snapshot(self) -> dict:
@@ -155,6 +161,12 @@ class FabricTelemetry:
                     if s.get("windows")]
         if win_rows:
             totals["windows"] = merge_window_snapshots(win_rows)
+        # closed-loop controller state fabric-wide: actuation counters sum
+        # (retired shards' frozen blocks included, so they stay monotone)
+        ctl_rows = [s["control"] for s in per_shard.values()
+                    if s.get("control")]
+        if ctl_rows:
+            totals["control"] = merge_control_snapshots(ctl_rows)
         if self._extra is not None:
             try:
                 totals.update(self._extra() or {})

@@ -75,6 +75,23 @@ def render(snapshot: dict) -> str:
                 f"{_cache_rate(row):>6}  "
                 f"{_fmt_windows(swin) if swin else '--'}")
 
+    ctl = snapshot.get("control") or {}
+    if ctl:
+        adm = ctl.get("admission") or {}
+        wts = ctl.get("weights") or {}
+        if "max_queued_total" in adm:
+            gate = (f"gate {adm.get('max_queued_total', '?')}"
+                    f"/{adm.get('configured_max_queued_total', '?')}"
+                    + (" GATED" if adm.get("gated") else ""))
+        else:       # fabric-merged block carries counts, not one gate
+            gate = (f"{ctl.get('gated_shards', 0)}"
+                    f"/{ctl.get('shards_reporting', 0)} shards gated")
+        lines.append(
+            f"control: {ctl.get('retunes', 0)} retunes "
+            f"(admission -{adm.get('shrinks', 0)}/+{adm.get('regrows', 0)}, "
+            f"weights +{wts.get('boosts', 0)}/-{wts.get('decays', 0)}) "
+            f"{gate}")
+
     proc = snapshot.get("proc") or {}
     if proc:
         lines.append(f"proc: {proc.get('workers', 0)} workers, "
@@ -108,6 +125,12 @@ def demo_snapshot() -> dict:
         "proc": {"workers": 2, "spawns": 3, "worker_failures": 1,
                  "handoff_entries_shipped": 18,
                  "autoscale": {"target": 2, "reason": "backlog"}},
+        "control": {"retunes": 5,
+                    "admission": {"configured_max_queued_total": 1024,
+                                  "max_queued_total": 256, "gated": True,
+                                  "shrinks": 2, "regrows": 1},
+                    "weights": {"factors": {0: 2.0}, "boosts": 1,
+                                "decays": 1}},
     }
 
 

@@ -38,10 +38,15 @@ COMPLETED = "completed"
 FAILED = "failed"
 SHED = "shed"
 CANCELLED = "cancelled"
+# not a job-lifecycle hop: a controller actuation (closed-loop retune of
+# admission/weights), logged under the synthetic job key "control" so
+# the event log replays scheduling-policy changes alongside job timelines
+RETUNED = "retuned"
 
 #: every known event, in canonical lifecycle order (used by replay + tests)
 EVENTS = (SUBMITTED, ADMITTED, QUEUED, COALESCED, DISPATCHED, PREEMPTED,
-          REQUEUED, ROUTED, FAILOVER, COMPLETED, FAILED, SHED, CANCELLED)
+          REQUEUED, ROUTED, FAILOVER, RETUNED, COMPLETED, FAILED, SHED,
+          CANCELLED)
 
 #: events that terminate a trace — exactly one may appear, and only last
 TERMINAL = (COMPLETED, FAILED, SHED, CANCELLED)

@@ -28,6 +28,31 @@ _COUNTERS = ("submitted", "completed", "preempted", "shed",
              "deadline_jobs", "deadline_met")
 
 
+def _sum_by_band(rows) -> dict:
+    """Sum per-band deadline outcomes across windows/snapshots.
+
+    Accepts both the in-window ``{band: [jobs, met]}`` form and the
+    snapshot ``{band: {"deadline_jobs": .., "deadline_met": ..}}`` form;
+    band keys are normalized to int (heartbeat/JSON round-trips turn
+    them into strings)."""
+    out: dict = {}
+    for row in rows:
+        if not row:
+            continue
+        for k, v in row.items():
+            if isinstance(v, dict):
+                jobs = v.get("deadline_jobs", 0)
+                met = v.get("deadline_met", 0)
+            else:
+                jobs, met = v[0], v[1]
+            agg = out.setdefault(int(k), [0, 0])
+            agg[0] += jobs
+            agg[1] += met
+    return {b: {"deadline_jobs": j, "deadline_met": m,
+                "attainment": (m / j) if j else 1.0}
+            for b, (j, m) in out.items()}
+
+
 def percentile(samples, q: float) -> float:
     """Nearest-rank percentile (q in [0, 100]) of a sequence."""
     s = sorted(samples)
@@ -41,6 +66,10 @@ def _new_window() -> dict:
     w = {k: 0 for k in _COUNTERS}
     w["queue_depth_max"] = 0
     w["latency"] = []
+    # per-band deadline outcomes: band int -> [jobs, met] — feeds the WFQ
+    # weight rebalancer (control/), which needs attainment per band, not
+    # just the global rate
+    w["by_band"] = {}
     return w
 
 
@@ -115,12 +144,18 @@ class ThroughputCollector:
             self._roll()
             self._current["shed"] += int(n)
 
-    def record_deadline_outcome(self, met: bool) -> None:
+    def record_deadline_outcome(self, met: bool,
+                                band: Optional[int] = None) -> None:
         with self._lock:
             self._roll()
             self._current["deadline_jobs"] += 1
             if met:
                 self._current["deadline_met"] += 1
+            if band is not None:
+                row = self._current["by_band"].setdefault(int(band), [0, 0])
+                row[0] += 1
+                if met:
+                    row[1] += 1
 
     # -- read side --------------------------------------------------------
     def snapshot(self) -> dict:
@@ -148,6 +183,9 @@ class ThroughputCollector:
         out["dispatch_p50_s"] = percentile(samples, 50)
         out["dispatch_p99_s"] = percentile(samples, 99)
         out["latency_samples"] = samples
+        by_band = _sum_by_band(w.get("by_band") for w in windows)
+        if by_band:
+            out["by_band"] = by_band
         out["per_window"] = [
             {k: w[k] for k in _COUNTERS} | {
                 "queue_depth_max": w["queue_depth_max"],
@@ -185,4 +223,7 @@ def merge_window_snapshots(snaps) -> Optional[dict]:
     out["dispatch_p50_s"] = percentile(samples, 50)
     out["dispatch_p99_s"] = percentile(samples, 99)
     out["latency_samples"] = samples
+    by_band = _sum_by_band(s.get("by_band") for s in snaps)
+    if by_band:
+        out["by_band"] = by_band
     return out

@@ -129,6 +129,13 @@ class FairQueue:
                  deadline_aware: bool = True):
         self.max_queued_total = max_queued_total
         self.max_queued_per_tenant = max_queued_per_tenant
+        # closed-loop control knobs (control/): per-band admission caps
+        # ({} = uncapped) and an INTERACTIVE reserve — pushes into the
+        # INTERACTIVE band below the reserve depth bypass the total gate
+        # (tenant quota still applies), so a flood holding the queue at
+        # its limit can never starve admission of latency probes
+        self.band_limits: dict[int, int] = {}
+        self.reserve_interactive = 0
         self.weights = {Priority(k): int(v)
                         for k, v in (weights or DEFAULT_WEIGHTS).items()}
         self.aging_s = aging_s
@@ -152,20 +159,35 @@ class FairQueue:
         self._closed = False
 
     # ------------------------------------------------------------------
+    def _band_depth_locked(self, band: int) -> int:
+        return sum(len(q) for q in self._bands[band].values())
+
     def push(self, job: Job) -> None:
         with self._lock:
             if self._closed:
                 raise AdmissionError("service is shutting down")
-            if self._total >= self.max_queued_total:
-                raise AdmissionError(
-                    f"queue full ({self._total}/{self.max_queued_total})")
+            if not self.priority_aware:
+                job.band = int(Priority.BATCH)
+            reserved = (job.band == int(Priority.INTERACTIVE)
+                        and self.reserve_interactive > 0
+                        and self._band_depth_locked(job.band)
+                        < self.reserve_interactive)
+            if not reserved:
+                if self._total >= self.max_queued_total:
+                    raise AdmissionError(
+                        f"queue full ({self._total}/"
+                        f"{self.max_queued_total})")
+                limit = self.band_limits.get(job.band)
+                if (limit is not None
+                        and self._band_depth_locked(job.band) >= limit):
+                    raise AdmissionError(
+                        f"band {job.band} gated at {limit} queued jobs "
+                        f"(admission controller)")
             n_tenant = self._tenant_total.get(job.tenant, 0)
             if n_tenant >= self.max_queued_per_tenant:
                 raise AdmissionError(
                     f"tenant {job.tenant!r} over quota "
                     f"({n_tenant}/{self.max_queued_per_tenant})")
-            if not self.priority_aware:
-                job.band = int(Priority.BATCH)
             band = self._bands[job.band]
             band.setdefault(job.tenant, deque()).append(job)
             self._tenant_total[job.tenant] = n_tenant + 1
@@ -204,6 +226,29 @@ class FairQueue:
                     job.trace.stamp(REQUEUED, slack=job.trace_slack(),
                                     preemptions=job.preemptions)
             self._not_empty.notify_all()
+
+    # -- closed-loop actuation surface (control/ServiceController) -----
+    def set_limits(self, max_queued_total: Optional[int] = None,
+                   band_limits: Optional[dict] = None,
+                   reserve_interactive: Optional[int] = None) -> None:
+        """Retune admission knobs atomically (None = leave unchanged).
+
+        Shrinking a limit below the current depth only gates NEW pushes;
+        already-admitted jobs stay queued and drain normally."""
+        with self._lock:
+            if max_queued_total is not None:
+                self.max_queued_total = max(1, int(max_queued_total))
+            if band_limits is not None:
+                self.band_limits = {int(k): max(1, int(v))
+                                    for k, v in band_limits.items()}
+            if reserve_interactive is not None:
+                self.reserve_interactive = max(0, int(reserve_interactive))
+
+    def set_weights(self, weights: dict) -> None:
+        """Replace the WFQ band weights (Priority → weight, floats ok)."""
+        with self._lock:
+            self.weights = {Priority(k): float(v)
+                            for k, v in weights.items()}
 
     # ------------------------------------------------------------------
     def _age_locked(self, now: float) -> None:

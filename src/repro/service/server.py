@@ -55,6 +55,7 @@ from ..core.fusion import PipelineBatch
 from ..core.plan_cache import PlanCache
 from ..core.runtime import ExecutionError, ExecutionPreempted, Runtime
 from .coalesce import SuperBatch, coalesce, cross_agent_dedup, reachable_sigs
+from .control import ControlPolicy, ServiceController
 from .observability import (CANCELLED, COALESCED, COMPLETED, DISPATCHED,
                             FAILED, PREEMPTED, SHED, SUBMITTED,
                             ThroughputCollector, TraceSink)
@@ -124,6 +125,12 @@ class ServiceConfig:
     # windows, surfaced under telemetry global_snapshot()["windows"])
     window_s: float = 1.0
     n_windows: int = 32
+    # closed-loop control (docs/SCHEDULING.md §5): a ControlPolicy enables
+    # the feedback controller that retunes admission limits and WFQ
+    # weights from the windowed collector; None (default) keeps every
+    # knob at its configured constant — the dispatch loop then pays
+    # exactly one None check per tick
+    control: Optional[ControlPolicy] = None
 
 
 @dataclass
@@ -205,6 +212,14 @@ class StratumService:
             else "service",
             enabled=config.trace)
         self.queue.on_shed = self._on_deadline_shed
+        # closed-loop controller (control/): retunes admission + WFQ
+        # weights from the windowed collector; None when control is off
+        self.controller: Optional[ServiceController] = None
+        if config.control is not None:
+            self.controller = ServiceController(
+                config.control, queue=self.queue, windows=self.windows,
+                trace_sink=self.traces, shard_id=config.shard_id)
+            self.telemetry.control_provider = self.controller.snapshot
         self._job_ids = itertools.count()
         self._running = False
         self._dispatcher: Optional[threading.Thread] = None
@@ -346,7 +361,8 @@ class StratumService:
     def _on_deadline_shed(self, job: Job) -> None:
         """Queue hook: a deadline-expired job was shed (its future already
         failed with DeadlineExceeded)."""
-        self.telemetry.record_deadline_shed(job.tenant)
+        self.telemetry.record_deadline_shed(job.tenant,
+                                            band=int(job.priority))
         self.telemetry.record_job_failed(job.tenant)
         if job.trace is not None:
             job.trace.stamp(SHED, shard=self.shard_id,
@@ -357,6 +373,12 @@ class StratumService:
     def _dispatch_loop(self) -> None:
         cfg = self.config
         while self._running:
+            # closed-loop control tick piggybacks the dispatch loop (no
+            # extra thread); the loop wakes at least every ~0.2s even
+            # idle, so the controller's tick_interval_s is honored.  With
+            # control off this is the hot path's single None check
+            if self.controller is not None:
+                self.controller.maybe_tick()
             # bound in-flight super-batches so the fair queue, not the
             # executor pool's FIFO, decides ordering under load
             if not self._slots.acquire(timeout=0.1):
@@ -585,8 +607,8 @@ class StratumService:
             deadline_met = None
             if job.deadline_t is not None:
                 deadline_met = time.perf_counter() <= job.deadline_t
-                self.telemetry.record_deadline_outcome(job.tenant,
-                                                       deadline_met)
+                self.telemetry.record_deadline_outcome(
+                    job.tenant, deadline_met, band=int(job.priority))
             trace_hops: tuple = ()
             if job.trace is not None:
                 job.trace.stamp(

@@ -111,6 +111,10 @@ class ServiceTelemetry:
         self._cache = cache            # shared IntermediateCache (optional)
         self._plan_cache = plan_cache  # shared PlanCache (optional)
         self._windows = windows        # ThroughputCollector (optional)
+        # zero-arg callable returning the closed-loop controller's state
+        # (set by the server when control is enabled); surfaced as the
+        # global snapshot's "control" block
+        self.control_provider = None
         self.ops_deduped_cross_agent = 0   # global executions saved
         self.super_batches = 0
         self.jobs_coalesced = 0
@@ -179,17 +183,20 @@ class ServiceTelemetry:
         if self._windows is not None:
             self._windows.record_completion()
 
-    def record_deadline_outcome(self, tenant: str, met: bool) -> None:
-        """A deadline-carrying job completed; ``met`` = within its SLO."""
+    def record_deadline_outcome(self, tenant: str, met: bool,
+                                band=None) -> None:
+        """A deadline-carrying job completed; ``met`` = within its SLO.
+        ``band`` (the job's native priority band) feeds the windowed
+        per-band attainment the WFQ weight rebalancer reads."""
         with self._lock:
             t = self._t(tenant)
             t.deadline_jobs += 1
             if met:
                 t.deadline_met += 1
         if self._windows is not None:
-            self._windows.record_deadline_outcome(met)
+            self._windows.record_deadline_outcome(met, band=band)
 
-    def record_deadline_shed(self, tenant: str) -> None:
+    def record_deadline_shed(self, tenant: str, band=None) -> None:
         """A job expired while queued and was shed (DeadlineExceeded)."""
         with self._lock:
             t = self._t(tenant)
@@ -197,7 +204,7 @@ class ServiceTelemetry:
             t.deadline_shed += 1
         if self._windows is not None:
             self._windows.record_shed()
-            self._windows.record_deadline_outcome(False)
+            self._windows.record_deadline_outcome(False, band=band)
 
     def record_job_failed(self, tenant: str) -> None:
         with self._lock:
@@ -245,6 +252,15 @@ class ServiceTelemetry:
         if self._windows is not None:
             # windowed throughput/attainment/latency (observability/)
             out["windows"] = self._windows.snapshot()
+        if self.control_provider is not None:
+            # closed-loop controller state: current knob values + recent
+            # actuations (docs/SCHEDULING.md §5)
+            try:
+                ctl = self.control_provider()
+            except Exception:  # noqa: BLE001 — control must not break obs
+                ctl = None
+            if ctl:
+                out["control"] = ctl
         return out
 
     def report(self) -> str:

@@ -1,0 +1,482 @@
+"""Closed-loop control: the feedback controller over the windowed
+collector (control/), its queue actuation surface, the windowed per-band
+attainment plumbing, the autoscaler's windowed-attainment trend, and the
+observability of every actuation (telemetry block, top row, JSONL)."""
+
+import json
+import os
+import pickle
+
+import pytest
+
+from repro.service import (ControlPolicy, FairQueue, Priority,
+                           ServiceController, StratumService,
+                           merge_control_snapshots)
+from repro.service.control.controller import CONTROL_TRACE_KEY
+from repro.service.observability import (RETUNED, ThroughputCollector,
+                                         TraceSink, merge_window_snapshots)
+from repro.service.observability.replay import load_events, reassemble
+from repro.service.observability.top import render
+from repro.service.priority import DEFAULT_WEIGHTS
+from repro.service.queue import AdmissionError, Job
+from repro.service.session import PipelineFuture
+
+
+class FakeClock:
+    def __init__(self, t0=1000.0):
+        self.t = t0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _job(i, tenant="t", priority=Priority.BATCH):
+    return Job(id=i, tenant=tenant, batch=None,
+               future=PipelineFuture(i, tenant, priority),
+               priority=priority)
+
+
+def _rig(clk=None, policy=None, **queue_kw):
+    """A controller wired to a real queue + collector on a fake clock."""
+    clk = clk or FakeClock()
+    policy = policy or ControlPolicy()
+    queue_kw.setdefault("max_queued_total", 128)
+    queue = FairQueue(**queue_kw)
+    windows = ThroughputCollector(window_s=1.0, n_windows=8, clock=clk)
+    ctl = ServiceController(policy, queue, windows, clock=clk)
+    return clk, policy, queue, windows, ctl
+
+
+def _breach(windows, policy, n=None):
+    """Feed enough slow dispatch samples to evidence a p99 breach."""
+    for _ in range(n or policy.min_window_jobs):
+        windows.record_dispatch(policy.dispatch_p99_target_s * 5,
+                                queue_depth=50)
+
+
+# ---------------------------------------------------------------------------
+# policy hygiene
+# ---------------------------------------------------------------------------
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        ControlPolicy(admission_decrease=1.5)
+    with pytest.raises(ValueError):
+        ControlPolicy(tick_interval_s=0)
+    with pytest.raises(ValueError):
+        ControlPolicy(weight_gain=0.5)
+    with pytest.raises(ValueError):
+        ControlPolicy(max_weight_factor=1.5, weight_gain=2.0)
+
+
+def test_policy_is_picklable():
+    # the policy crosses the proc-fabric CONFIG frame inside ServiceConfig
+    p = ControlPolicy(dispatch_p99_target_s=0.25, interactive_reserve=4)
+    assert pickle.loads(pickle.dumps(p)) == p
+
+
+# ---------------------------------------------------------------------------
+# gain / cooldown clamping
+# ---------------------------------------------------------------------------
+
+def test_shrink_is_multiplicative_and_cooldown_limited():
+    clk, pol, queue, windows, ctl = _rig(
+        policy=ControlPolicy(tick_interval_s=1.0, cooldown_s=10.0,
+                             dispatch_p99_target_s=0.1))
+    _breach(windows, pol)
+    assert ctl.maybe_tick()
+    assert queue.max_queued_total == int(128 * pol.admission_decrease)
+    assert ctl.admission_shrinks == 1
+    # the breach persists, but the cooldown suppresses a second shrink
+    clk.advance(1.0)
+    _breach(windows, pol)
+    ctl.maybe_tick()
+    assert ctl.admission_shrinks == 1
+    assert queue.max_queued_total == 64
+    # past the cooldown the next shrink lands
+    clk.advance(10.0)
+    _breach(windows, pol)
+    ctl.maybe_tick()
+    assert ctl.admission_shrinks == 2
+    assert queue.max_queued_total == 32
+
+
+def test_tick_interval_rate_limits():
+    clk, pol, _q, _w, ctl = _rig(
+        policy=ControlPolicy(tick_interval_s=5.0))
+    assert ctl.maybe_tick()
+    assert not ctl.maybe_tick()     # same instant: rate-limited
+    clk.advance(4.9)
+    assert not ctl.maybe_tick()
+    clk.advance(0.2)
+    assert ctl.maybe_tick()
+
+
+def test_shrink_floor_never_crossed():
+    clk, pol, queue, windows, ctl = _rig(
+        policy=ControlPolicy(tick_interval_s=1.0, cooldown_s=0.0,
+                             dispatch_p99_target_s=0.1,
+                             min_queued_total=8))
+    for _ in range(30):
+        _breach(windows, pol)
+        ctl.maybe_tick()
+        clk.advance(1.0)
+    assert queue.max_queued_total == 8
+    # once floored, further breaches are not counted as actuations
+    shrinks = ctl.admission_shrinks
+    _breach(windows, pol)
+    ctl.maybe_tick()
+    assert ctl.admission_shrinks == shrinks
+
+
+def test_weight_boost_capped_at_max_factor():
+    clk, pol, queue, windows, ctl = _rig(
+        policy=ControlPolicy(tick_interval_s=1.0, cooldown_s=0.0,
+                             weight_gain=2.0, max_weight_factor=8.0))
+    base = queue.weights[Priority.SCAVENGER]
+    for _ in range(10):
+        windows.record_deadline_outcome(False,
+                                        band=int(Priority.SCAVENGER))
+        ctl.maybe_tick()
+        clk.advance(1.0)
+    assert queue.weights[Priority.SCAVENGER] == base * 8.0
+    boosts = ctl.weight_boosts
+    windows.record_deadline_outcome(False, band=int(Priority.SCAVENGER))
+    ctl.maybe_tick()
+    assert ctl.weight_boosts == boosts      # capped: no further actuation
+
+
+# ---------------------------------------------------------------------------
+# floor clamp: INTERACTIVE is never starved of admission
+# ---------------------------------------------------------------------------
+
+def test_interactive_reserve_bypasses_full_queue():
+    _clk, pol, queue, _w, _ctl = _rig(
+        policy=ControlPolicy(interactive_reserve=4),
+        max_queued_total=16, aging_s=None)
+    for i in range(16):
+        queue.push(_job(i, tenant=f"bulk{i % 3}"))
+    with pytest.raises(AdmissionError):
+        queue.push(_job(100, tenant="bulk0"))       # BATCH: queue full
+    for i in range(4):                              # reserve admits these
+        queue.push(_job(200 + i, tenant="probe",
+                        priority=Priority.INTERACTIVE))
+    with pytest.raises(AdmissionError):             # reserve itself full
+        queue.push(_job(300, tenant="probe",
+                        priority=Priority.INTERACTIVE))
+    # serving the probes frees the reserve again
+    served = queue.pop_round(max_jobs=4, max_per_tenant=4)
+    assert all(j.priority == Priority.INTERACTIVE for j in served)
+    queue.push(_job(301, tenant="probe", priority=Priority.INTERACTIVE))
+
+
+def test_reserve_respects_tenant_quota():
+    _clk, pol, queue, _w, _ctl = _rig(
+        policy=ControlPolicy(interactive_reserve=8),
+        max_queued_total=4, max_queued_per_tenant=2)
+    for i in range(4):
+        queue.push(_job(i, tenant=f"bulk{i}"))
+    queue.push(_job(10, tenant="p", priority=Priority.INTERACTIVE))
+    queue.push(_job(11, tenant="p", priority=Priority.INTERACTIVE))
+    with pytest.raises(AdmissionError):     # reserve never overrides quota
+        queue.push(_job(12, tenant="p", priority=Priority.INTERACTIVE))
+
+
+def test_band_limits_gate_bulk_only():
+    queue = FairQueue(max_queued_total=64)
+    queue.set_limits(band_limits={int(Priority.BATCH): 2},
+                     reserve_interactive=2)
+    queue.push(_job(0, tenant="b"))
+    queue.push(_job(1, tenant="b2"))
+    with pytest.raises(AdmissionError) as ei:
+        queue.push(_job(2, tenant="b3"))
+    assert "gated" in str(ei.value)
+    # INTERACTIVE is not band-limited
+    queue.push(_job(3, tenant="p", priority=Priority.INTERACTIVE))
+
+
+# ---------------------------------------------------------------------------
+# decay back to defaults when pressure clears
+# ---------------------------------------------------------------------------
+
+def test_admission_regrows_additively_to_configured_default():
+    clk, pol, queue, windows, ctl = _rig(
+        policy=ControlPolicy(tick_interval_s=1.0, cooldown_s=0.0,
+                             dispatch_p99_target_s=0.5,
+                             admission_increase=16))
+    _breach(windows, pol)
+    ctl.maybe_tick()
+    assert queue.max_queued_total == 64
+    assert queue.band_limits        # bulk bands gated while shrunk
+    # pressure clears: the breach samples age out of the 8-window ring
+    clk.advance(20.0)
+    regrown = []
+    for _ in range(8):
+        clk.advance(1.0)
+        ctl.maybe_tick()
+        regrown.append(queue.max_queued_total)
+    assert regrown == [80, 96, 112, 128, 128, 128, 128, 128]
+    assert ctl.admission_regrows == 4   # stops actuating at the default
+    assert queue.band_limits == {}      # gate lifted with the limits
+    assert queue.reserve_interactive == pol.interactive_reserve
+
+
+def test_weights_decay_back_to_defaults():
+    clk, pol, queue, windows, ctl = _rig(
+        policy=ControlPolicy(tick_interval_s=1.0, cooldown_s=0.0))
+    base = dict(queue.weights)
+    windows.record_deadline_outcome(False, band=int(Priority.BATCH))
+    ctl.maybe_tick()
+    assert queue.weights[Priority.BATCH] == base[Priority.BATCH] * 2.0
+    clk.advance(20.0)                   # sag evidence ages out of the ring
+    for _ in range(20):
+        clk.advance(1.0)
+        ctl.maybe_tick()
+    assert queue.weights == {k: float(v) for k, v in base.items()}
+    snap = ctl.snapshot()
+    assert snap["weights"]["factors"] == {}     # nothing boosted anymore
+
+
+# ---------------------------------------------------------------------------
+# idle-gap windows never cause spurious retunes
+# ---------------------------------------------------------------------------
+
+def test_idle_windows_trigger_no_retunes():
+    clk, pol, queue, windows, ctl = _rig(
+        policy=ControlPolicy(tick_interval_s=1.0))
+    for _ in range(50):                 # a long idle stretch of empty ticks
+        clk.advance(1.0)
+        ctl.maybe_tick()
+    assert ctl.retunes == 0
+    assert queue.max_queued_total == 128
+    assert queue.weights == dict(DEFAULT_WEIGHTS)
+
+
+def test_thin_window_is_no_breach_evidence():
+    # fewer than min_window_jobs samples — even arbitrarily slow ones —
+    # must not shrink the gate
+    clk, pol, queue, windows, ctl = _rig(
+        policy=ControlPolicy(tick_interval_s=1.0, min_window_jobs=4))
+    for _ in range(3):
+        windows.record_dispatch(100.0)
+    ctl.maybe_tick()
+    assert ctl.admission_shrinks == 0
+    assert queue.max_queued_total == 128
+
+
+# ---------------------------------------------------------------------------
+# every actuation is observable
+# ---------------------------------------------------------------------------
+
+def test_actuations_emit_retuned_hops_to_jsonl(tmp_path):
+    clk = FakeClock()
+    pol = ControlPolicy(tick_interval_s=1.0, cooldown_s=0.0,
+                        dispatch_p99_target_s=0.1)
+    queue = FairQueue(max_queued_total=128)
+    windows = ThroughputCollector(window_s=1.0, n_windows=8, clock=clk)
+    sink = TraceSink(trace_dir=str(tmp_path), component="ctl-test",
+                     enabled=True)
+    ctl = ServiceController(pol, queue, windows, trace_sink=sink,
+                            shard_id="s0", clock=clk)
+    _breach(windows, pol)
+    ctl.maybe_tick()
+    windows.record_deadline_outcome(False, band=int(Priority.BATCH))
+    clk.advance(1.0)
+    ctl.maybe_tick()
+    sink.close()
+    recs = load_events(str(tmp_path))
+    retuned = [r for r in recs if r["event"] == RETUNED]
+    assert retuned and all(r["job"] == CONTROL_TRACE_KEY for r in retuned)
+    knobs = {r["detail"]["knob"] for r in retuned}
+    assert "admission" in knobs and "weights" in knobs
+    assert all(r["shard"] == "s0" for r in retuned)
+    # and the JSONL replays: the control timeline reassembles like a job's
+    timelines = reassemble(recs)
+    events = {r["event"] for r in timelines[CONTROL_TRACE_KEY]}
+    assert events == {RETUNED}
+
+
+def test_snapshot_and_top_render_show_control_state():
+    clk, pol, queue, windows, ctl = _rig(
+        policy=ControlPolicy(tick_interval_s=1.0, cooldown_s=0.0,
+                             dispatch_p99_target_s=0.1))
+    _breach(windows, pol)
+    ctl.maybe_tick()
+    snap = ctl.snapshot()
+    assert snap["retunes"] == 1
+    assert snap["admission"]["gated"]
+    assert snap["admission"]["max_queued_total"] == 64
+    assert snap["last_actions"][-1]["knob"] == "admission"
+    frame = render({"jobs_submitted": 1, "control": snap})
+    assert "control:" in frame and "GATED" in frame
+    # the fabric-merged form renders too
+    merged = merge_control_snapshots([snap, snap])
+    assert merged["retunes"] == 2 and merged["gated_shards"] == 2
+    assert "shards gated" in render({"control": merged})
+
+
+def test_service_global_snapshot_carries_control_block():
+    svc = StratumService(memory_budget_bytes=1 << 28,
+                         control=ControlPolicy(), autostart=False)
+    try:
+        g = svc.telemetry.global_snapshot()
+        assert g["control"]["admission"]["configured_max_queued_total"] \
+            == svc.config.max_queued_total
+        assert svc.queue.reserve_interactive \
+            == svc.config.control.interactive_reserve
+    finally:
+        svc.stop(drain=False)
+
+
+def test_control_off_means_no_controller_and_no_block():
+    svc = StratumService(memory_budget_bytes=1 << 28, autostart=False)
+    try:
+        assert svc.controller is None
+        assert "control" not in svc.telemetry.global_snapshot()
+        assert svc.queue.reserve_interactive == 0
+    finally:
+        svc.stop(drain=False)
+
+
+# ---------------------------------------------------------------------------
+# per-band windowed attainment (the rebalancer's sensor)
+# ---------------------------------------------------------------------------
+
+def test_windows_by_band_accumulates_and_merges():
+    clk = FakeClock()
+    w = ThroughputCollector(window_s=1.0, n_windows=4, clock=clk)
+    w.record_deadline_outcome(True, band=0)
+    w.record_deadline_outcome(False, band=1)
+    w.record_deadline_outcome(False, band=1)
+    snap = w.snapshot()
+    assert snap["by_band"][0] == {"deadline_jobs": 1, "deadline_met": 1,
+                                  "attainment": 1.0}
+    assert snap["by_band"][1]["attainment"] == 0.0
+    # merge normalizes string band keys (JSON/heartbeat round-trips)
+    other = json.loads(json.dumps(snap))
+    merged = merge_window_snapshots([snap, other])
+    assert merged["by_band"][1]["deadline_jobs"] == 4
+    assert set(merged["by_band"]) == {0, 1}
+
+
+def test_bandless_outcomes_skip_by_band():
+    w = ThroughputCollector(window_s=1.0, n_windows=4)
+    w.record_deadline_outcome(True)
+    assert "by_band" not in w.snapshot()
+
+
+# ---------------------------------------------------------------------------
+# autoscaler: windowed attainment trend, not instantaneous whipsaw
+# ---------------------------------------------------------------------------
+
+class _FakeFabric:
+    """Just enough fabric surface for Autoscaler._tick."""
+
+    def __init__(self, windows_seq):
+        self._windows_seq = list(windows_seq)
+        self.added = []
+        self.router = type("R", (), {"pending_count": lambda *a: 3})()
+        self.telemetry = self
+
+    def shard_ids(self):
+        return ["s0"]
+
+    def shards(self):
+        return {}
+
+    def global_snapshot(self):
+        win = (self._windows_seq.pop(0) if self._windows_seq
+               else {"deadline_jobs": 0})
+        return {"windows": win}
+
+    def add_shard(self, sid):
+        self.added.append(sid)
+
+    def newest_shard(self):
+        return None
+
+
+def _scaler(fabric, trend_len=3):
+    from repro.service.fabric.proc.autoscale import (Autoscaler,
+                                                     AutoscalePolicy)
+    pol = AutoscalePolicy(min_shards=1, max_shards=4,
+                          scale_up_backlog_per_shard=100.0,
+                          attainment_floor=0.9,
+                          attainment_trend_len=trend_len,
+                          scale_up_cooldown_s=0.0)
+    return Autoscaler(fabric, pol)     # never start()ed: we call _tick
+
+
+def test_autoscaler_needs_a_sustained_windowed_sag():
+    sag = {"deadline_jobs": 5, "attainment": 0.5}
+    fab = _FakeFabric([sag, sag, sag, sag])
+    sc = _scaler(fab, trend_len=3)
+    sc._tick()
+    sc._tick()
+    assert fab.added == []          # two sags: trend not established yet
+    sc._tick()
+    assert fab.added == ["auto-1"]  # third consecutive sag scales up
+    # trend restarts after the spawn — the next single sag is not enough
+    sc._tick()
+    assert fab.added == ["auto-1"]
+
+
+def test_autoscaler_ignores_single_window_whipsaw():
+    # one bad window between good ones — the classic between-heartbeats
+    # burst — must not spawn a worker
+    good = {"deadline_jobs": 5, "attainment": 1.0}
+    bad = {"deadline_jobs": 5, "attainment": 0.2}
+    fab = _FakeFabric([good, bad, good, bad, good, bad])
+    sc = _scaler(fab, trend_len=3)
+    for _ in range(6):
+        sc._tick()
+    assert fab.added == []
+
+
+def test_autoscaler_trend_clears_without_slo_evidence():
+    sag = {"deadline_jobs": 5, "attainment": 0.5}
+    idle = {"deadline_jobs": 0}
+    fab = _FakeFabric([sag, sag, idle, sag])
+    sc = _scaler(fab, trend_len=3)
+    for _ in range(4):
+        sc._tick()
+    assert fab.added == []          # the idle window reset the trend
+
+
+# ---------------------------------------------------------------------------
+# controlled-vs-static equivalence when no target is ever crossed
+# ---------------------------------------------------------------------------
+
+def test_controlled_equals_static_when_targets_never_crossed():
+    import repro.tabular as T
+    from repro.core import PipelineBatch
+    from repro.data.tabular import ensure_files
+    ensure_files("uk_housing", 2000, 0)
+
+    def _batch(i):
+        x = T.read("uk_housing", 2000, seed=0)
+        xs = T.scale(T.impute(T.project(x, [10, 11, 12 + (i % 3)])))
+        sink = T.metric(T.project(xs, [0]), T.project(x, [0]), kind="mae")
+        return PipelineBatch([sink], [f"p{i}"])
+
+    # targets far beyond anything this workload can reach
+    calm = ControlPolicy(dispatch_p99_target_s=1e6, attainment_floor=0.01)
+    results = {}
+    for label, control in (("static", None), ("controlled", calm)):
+        svc = StratumService(memory_budget_bytes=1 << 28, control=control)
+        try:
+            ses = svc.session("a")
+            futs = [ses.submit(_batch(i)) for i in range(6)]
+            results[label] = [float(list(f.result(timeout=60)[0]
+                                         .values())[0]) for f in futs]
+        finally:
+            svc.stop()
+        if control is not None:
+            assert svc.controller.retunes == 0      # nothing to retune
+            assert svc.queue.max_queued_total \
+                == svc.config.max_queued_total
+            assert dict(svc.queue.weights) == dict(DEFAULT_WEIGHTS)
+    assert results["controlled"] == results["static"]
