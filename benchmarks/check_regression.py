@@ -16,6 +16,19 @@ Gated metrics (checked when present in the baseline):
 * ``compiled_smoke.speedup`` — compiled plan-segment backends (warm
   structural plan cache) vs per-op dispatch on the repeated-structure
   workload;
+* ``compiled_batched_smoke.speedup`` — batched variant solves (one
+  vmapped trace per homogeneous refinement fan) vs per-op dispatch on
+  the same workload, as a ratio of per-round medians (makespans flake
+  on straggler rounds);
+* ``compiled_cold_smoke.speculative_hits`` — every structure on the
+  changing-structure ladder must take its first measured touch on a
+  speculatively compiled program (deterministic count, one per
+  structure);
+* ``compiled_cold_smoke.cold_p50_speedup`` — blocking first-touch
+  median over async+speculative first-touch median on that ladder.
+  Compile cost swings severalfold with process warmth, so its gate
+  carries a 70% per-gate tolerance — it guards the order-of-magnitude
+  claim, not the exact ratio;
 * ``deadline_smoke.attainment_aware`` — fraction of deadline-carrying
   probes meeting their SLO under mixed load with the deadline-aware
   scheduler (a dimensionless rate, gated like the speedups);
@@ -64,6 +77,9 @@ GATES = (
     ("service_smoke", "speedup"),
     ("sharded_smoke", "speedup"),
     ("compiled_smoke", "speedup"),
+    ("compiled_batched_smoke", "speedup"),
+    ("compiled_cold_smoke", "speculative_hits"),
+    ("compiled_cold_smoke", "cold_p50_speedup", 0.7),
     ("deadline_smoke", "attainment_aware"),
     ("fabric_proc_smoke", "completed_frac"),
     ("observability_smoke", "traced_over_untraced", 0.05),

@@ -580,12 +580,13 @@ def _refinement_batch(round_i: int, n_variants: int, n_rows: int
 
 
 def _compiled_mode(compiled: bool, rounds: int, n_variants: int,
-                   n_rows: int, jit_dir: str) -> dict:
+                   n_rows: int, jit_dir: str, **svc_kw) -> dict:
     svc = StratumService(memory_budget_bytes=2 << 30,
                          jit_cache_dir=jit_dir,
                          coalesce_window_s=0.0,
                          n_executors=1,
-                         compiled_segments=compiled)
+                         compiled_segments=compiled,
+                         **svc_kw)
     try:
         ses = svc.session("agent")
         # two warmup rounds (indices past the measured range): the first
@@ -596,10 +597,13 @@ def _compiled_mode(compiled: bool, rounds: int, n_variants: int,
             ses.submit(_refinement_batch(w, n_variants, n_rows)
                        ).result(timeout=600)
         scores = []
+        round_times = []
         t0 = time.perf_counter()
         for r in range(rounds):
+            r0 = time.perf_counter()
             res, _ = ses.submit(_refinement_batch(r, n_variants, n_rows)
                                 ).result(timeout=600)
+            round_times.append(time.perf_counter() - r0)
             scores.extend(float(np.asarray(res[f"r{r}v{j}"]))
                           for j in range(n_variants))
         makespan = time.perf_counter() - t0
@@ -609,6 +613,7 @@ def _compiled_mode(compiled: bool, rounds: int, n_variants: int,
     out = {
         "compiled_segments": compiled,
         "makespan_s": makespan,
+        "round_median_s": float(np.median(round_times)),
         "pipelines_per_s": rounds * n_variants / makespan,
         "scores": scores,
     }
@@ -667,6 +672,282 @@ def compiled_rows(smoke: bool = False,
          "hit_rate_x1e-6"),
         (f"{key}_scores_identical", float(r["scores_identical"]),
          "1=identical"),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# batched variant solves: homogeneous variant fans traced ONCE and vmapped
+# across the fan, vs the unrolled whole-segment jit and per-op dispatch
+# ---------------------------------------------------------------------------
+
+def _in_fresh_interpreter(fn_name: str, *args):
+    """Run one module-level helper of this file in a FRESH python
+    interpreter and return its JSON-decoded result.
+
+    Cold-start numbers measured inside the long-lived multi-section
+    bench process are fiction: earlier sections leave the persistent
+    XLA cache initialized (``jax.config.update(...)`` cannot fully
+    un-initialize it), XLA's in-process compilation machinery warm, and
+    enough allocator/thread residue to swing first-touch latency
+    severalfold between runs.  A fresh interpreter is what a cold agent
+    service actually is, and makes the numbers reproducible regardless
+    of which sections ran before."""
+    import subprocess
+    import sys
+    here = os.path.dirname(os.path.abspath(__file__))
+    paths = [here, os.path.abspath(os.path.join(here, "..", "src"))]
+    code = (f"import sys\nsys.path[:0] = {paths!r}\n"
+            "import json\n"
+            "import e2e_agentic as m\n"
+            f"r = getattr(m, {fn_name!r})(*{args!r})\n"
+            "print('RESULT ' + json.dumps(r))\n")
+    env = dict(os.environ)
+    env.pop("JAX_COMPILATION_CACHE_DIR", None)  # cold means cold
+    proc = subprocess.run([sys.executable, "-c", code], text=True,
+                          capture_output=True, env=env, timeout=1200)
+    if proc.returncode != 0:
+        raise RuntimeError(f"{fn_name}{args} subprocess failed:\n"
+                           f"{proc.stderr[-2000:]}")
+    for line in reversed(proc.stdout.splitlines()):
+        if line.startswith("RESULT "):
+            return json.loads(line[len("RESULT "):])
+    raise RuntimeError(f"{fn_name}{args} subprocess printed no result")
+
+
+def _cold_first_touch_s(batch_variants: bool, n_variants: int,
+                        n_rows: int) -> float:
+    """Wall time of the FIRST structurally-fresh round on a fresh session
+    with blocking compiles and no persistent XLA cache: pure trace+jit
+    cost of one refinement fan (plus one warm execution).  A tiny jit
+    call first charges backend/LLVM bring-up to setup, not to the
+    measured fan.  Meaningful only in a fresh interpreter — run it via
+    ``_in_fresh_interpreter``."""
+    import jax
+    jax.block_until_ready(jax.jit(lambda v: v + 1.0)(
+        np.zeros(8, np.float32)))
+    st = Stratum(memory_budget_bytes=2 << 30, compiled_segments=True,
+                 batch_variants=batch_variants)
+    try:
+        t0 = time.perf_counter()
+        st.run_batch(_refinement_batch(97, n_variants, n_rows))
+        return time.perf_counter() - t0
+    finally:
+        st.close()
+
+
+def run_compiled_batched(rounds: int = 10, n_variants: int = 8,
+                         n_rows: int = 4000) -> dict:
+    """Batched variant solves on the repeated-structure workload: each
+    AIDE-style refinement fan holds ``n_variants`` structurally identical
+    pipelines, so with ``batch_variants=True`` the jax segment backend
+    traces the fan ONCE and ``vmap``s it across the variants instead of
+    unrolling ``n_variants`` copies into the traced body.  Warm
+    throughput must at least match the unrolled compiled mode (one fused
+    program either way — the work is compute-bound); the structural win
+    is COLD COMPILE TIME, one traced body instead of ``n_variants``,
+    measured as blocking first-touch wall time with the persistent XLA
+    cache disabled.  Scores must match per-op dispatch to float32 parity
+    (≤1e-6 relative): batching changes trace layout, never semantics.
+
+    The gated ``speedup`` is the ratio of per-round MEDIANS, not total
+    makespans: on a small shared CI box one OS-noise straggler round out
+    of five can double a makespan, and a regression gate on that tail
+    flakes; the median isolates the steady-state dispatch cost the
+    section actually claims.  Makespans stay in the artifact."""
+    from repro.data.tabular import ensure_files
+    ensure_files("uk_housing", n_rows, 0)
+    jit_dir = "/tmp/repro_jit_cache"
+    per_op = _compiled_mode(False, rounds, n_variants, n_rows, jit_dir)
+    comp = _compiled_mode(True, rounds, n_variants, n_rows, jit_dir)
+    bat = _compiled_mode(True, rounds, n_variants, n_rows, jit_dir,
+                         batch_variants=True)
+    max_rel = max(abs(a - b) / max(abs(a), 1e-12)
+                  for a, b in zip(bat["scores"], per_op["scores"]))
+    # cold-compile comparison: each layout in its own fresh interpreter,
+    # so neither this process's warm XLA state nor the other layout's
+    # compile can contaminate the first touch
+    cold_unrolled = _in_fresh_interpreter(
+        "_cold_first_touch_s", False, n_variants, n_rows)
+    cold_batched = _in_fresh_interpreter(
+        "_cold_first_touch_s", True, n_variants, n_rows)
+    return {
+        "rounds": rounds, "variants": n_variants, "rows": n_rows,
+        "modes": {
+            "per_op": {k: v for k, v in per_op.items() if k != "scores"},
+            "compiled": {k: v for k, v in comp.items() if k != "scores"},
+            "batched": {k: v for k, v in bat.items() if k != "scores"},
+        },
+        "speedup": per_op["round_median_s"] / bat["round_median_s"],
+        "batched_over_compiled":
+            comp["round_median_s"] / bat["round_median_s"],
+        "cold_compile_unrolled_s": cold_unrolled,
+        "cold_compile_batched_s": cold_batched,
+        "cold_compile_speedup": cold_unrolled / cold_batched,
+        "score_max_rel_diff": max_rel,
+        "scores_identical": bool(max_rel <= 1e-6),
+    }
+
+
+def compiled_batched_rows(smoke: bool = False,
+                          out: str = "BENCH_service.json") -> list:
+    kw = dict(rounds=5, n_variants=6, n_rows=2000) if smoke else {}
+    r = run_compiled_batched(**kw)
+    key = "compiled_batched_smoke" if smoke else "compiled_batched"
+    write_service_json({key: r}, out, merge=True)
+    m = r["modes"]
+    return [
+        (f"{key}_batched", m["batched"]["makespan_s"] * 1e6,
+         f"{m['batched']['pipelines_per_s']:.1f}_pipelines_per_s "
+         f"(speedup={r['speedup']:.2f}x vs per_op, "
+         f"{r['batched_over_compiled']:.2f}x vs unrolled)"),
+        (f"{key}_cold_compile", r["cold_compile_batched_s"] * 1e6,
+         f"vs_unrolled_{r['cold_compile_unrolled_s']:.2f}s "
+         f"({r['cold_compile_speedup']:.1f}x_faster)"),
+        (f"{key}_scores_identical", float(r["scores_identical"]),
+         "1=identical"),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# async/speculative compilation: first-touch latency when pipeline structure
+# keeps changing — blocking compiles vs background compiles + warm-up hints
+# ---------------------------------------------------------------------------
+
+def _cold_batch(struct_i: int, round_i: int, n_variants: int, n_rows: int
+                ) -> PipelineBatch:
+    """A refinement fan whose STRUCTURE changes with ``struct_i``: the
+    post-scale ``log1p`` tower is ``struct_i + 1`` deep, so every new
+    struct index is a fresh jax-segment structural signature (a plan
+    cache miss), while ``round_i`` varies only tunable constants within
+    it.  The clip quantile is GLOBALLY unique per (struct, round,
+    variant): the shared prefix up to ``clip_outliers`` is structurally
+    identical across the whole ladder, so a repeated quantile would make
+    one variant's clip an intermediate-cache hit, silently changing that
+    round's segment cut (and forcing a recompile) — a tiny offset keeps
+    every signature fresh while leaving the quantile in range."""
+    from repro.data.tabular import feature_target_indices
+    feats, tgt = feature_target_indices()
+    cols = list(feats[:8])
+    sinks, names = [], []
+    x = T.read("uk_housing", n_rows, seed=0)
+    y = T.project(x, [tgt])
+    for j in range(n_variants):
+        k = (struct_i * 1000 + round_i) * n_variants + j
+        Xc = T.clip_outliers(T.project(x, cols), q=0.001 + 1e-8 * k)
+        Xs = T.scale(T.impute(Xc))
+        for _ in range(struct_i + 1):
+            Xs = T.log1p(Xs)
+        w = T.ridge_fit(Xs, y, alpha=0.05 * (1 + (k % 997)))
+        sinks.append(T.metric(y, T.predict(w, Xs), kind="rmse"))
+        names.append(f"s{struct_i}r{round_i}v{j}")
+    return PipelineBatch(sinks, names)
+
+
+def _cold_mode(async_on: bool, n_structs: int, reps: int, n_variants: int,
+               n_rows: int) -> dict:
+    svc_kw = (dict(compile_async=True, speculative_depth=4)
+              if async_on else {})
+    svc = StratumService(memory_budget_bytes=2 << 30,
+                         coalesce_window_s=0.0, n_executors=1,
+                         compiled_segments=True, batch_variants=True,
+                         **svc_kw)
+    try:
+        ses = svc.session("agent")
+        # warm the per-op jits, the data files and (async mode) the
+        # background worker on a throwaway structure the measured ladder
+        # never revisits
+        for w in (0, 1):
+            ses.submit(_cold_batch(99, w, n_variants, n_rows)
+                       ).result(timeout=600)
+        cold, warm = [], []
+        for s in range(n_structs):
+            if async_on:
+                # agent think time: speculatively warm the upcoming
+                # structure (AIDE's speculate() hook sends the same hint
+                # between rounds) and let the background compile land
+                # before the next submit — none of this blocks the
+                # measured path
+                ses.precompile(_cold_batch(s, 998, n_variants, n_rows))
+                svc.plan_cache.executor.drain(timeout=120.0)
+            for rep in range(reps):
+                t0 = time.perf_counter()
+                ses.submit(_cold_batch(s, rep, n_variants, n_rows)
+                           ).result(timeout=600)
+                (cold if rep == 0 else warm).append(
+                    time.perf_counter() - t0)
+        g = svc.telemetry.global_snapshot()
+    finally:
+        svc.stop()
+    pc = g.get("plan_cache") or {}
+    return {
+        "async": async_on,
+        "cold_p50_s": float(np.median(cold)),
+        "cold_p99_s": float(np.percentile(cold, 99)),
+        "cold_max_s": max(cold),
+        "warm_p50_s": float(np.median(warm)),
+        "warm_p99_s": float(np.percentile(warm, 99)),
+        "speculative_hits": pc.get("speculative_hits", 0),
+        "async_compiles": pc.get("async_compiles", 0),
+    }
+
+
+def run_compiled_cold(n_structs: int = 4, reps: int = 6,
+                      n_variants: int = 8, n_rows: int = 4000) -> dict:
+    """First-touch latency when pipeline STRUCTURE keeps changing (an
+    agent exploring new stages, not just retuning constants): a ladder of
+    ``n_structs`` fresh structures, ``reps`` rounds each.  Blocking mode
+    pays trace+jit inside the measured first round of every structure;
+    ``compile_async=True`` plus a speculative warm-up hint during agent
+    think time keeps the first touch on warm programs.  Each mode runs
+    in its own fresh interpreter (no persistent XLA cache, no residue
+    from other bench sections or from the other mode's compiles of the
+    same structures) so every compile is real — see
+    ``_in_fresh_interpreter``.
+
+    Gating: ``speculative_hits`` (one per structure — deterministic:
+    every measured first touch must land on a speculatively compiled
+    program) and the median-based ``cold_p50_speedup``.  With only
+    ``n_structs`` cold samples the p99 IS the max, and a single OS-noise
+    outlier on a shared CI box would flake a tail gate; the p99s stay in
+    the artifact as the headline datapoint, the medians carry the
+    gate."""
+    from repro.data.tabular import ensure_files
+    ensure_files("uk_housing", n_rows, 0)
+    blocking = _in_fresh_interpreter(
+        "_cold_mode", False, n_structs, reps, n_variants, n_rows)
+    async_m = _in_fresh_interpreter(
+        "_cold_mode", True, n_structs, reps, n_variants, n_rows)
+    # the conservative warm reference: slower of the two modes' warm p99
+    warm_p99 = max(blocking["warm_p99_s"], async_m["warm_p99_s"])
+    return {
+        "structs": n_structs, "reps": reps,
+        "variants": n_variants, "rows": n_rows,
+        "modes": {"blocking": blocking, "async": async_m},
+        "warm_p99_s": warm_p99,
+        "cold_over_warm_blocking": blocking["cold_p99_s"] / warm_p99,
+        "cold_over_warm_async": async_m["cold_p99_s"] / warm_p99,
+        "cold_p99_speedup": blocking["cold_p99_s"] / async_m["cold_p99_s"],
+        "cold_p50_speedup": blocking["cold_p50_s"] / async_m["cold_p50_s"],
+        "speculative_hits": async_m["speculative_hits"],
+    }
+
+
+def compiled_cold_rows(smoke: bool = False,
+                       out: str = "BENCH_service.json") -> list:
+    kw = (dict(n_structs=3, reps=4, n_variants=6, n_rows=2000)
+          if smoke else {})
+    r = run_compiled_cold(**kw)
+    key = "compiled_cold_smoke" if smoke else "compiled_cold"
+    write_service_json({key: r}, out, merge=True)
+    m = r["modes"]
+    return [
+        (f"{key}_blocking_p99", m["blocking"]["cold_p99_s"] * 1e6,
+         f"{r['cold_over_warm_blocking']:.1f}x_warm"),
+        (f"{key}_async_p99", m["async"]["cold_p99_s"] * 1e6,
+         f"{r['cold_over_warm_async']:.1f}x_warm "
+         f"(speedup={r['cold_p99_speedup']:.1f}x, "
+         f"spec_hits={r['speculative_hits']})"),
+        (f"{key}_warm_p99", r["warm_p99_s"] * 1e6, "s_x1e-6"),
     ]
 
 

@@ -20,6 +20,15 @@ Sections:
                    backends (whole-segment jit + warm structural plan
                    cache) vs per-op dispatch (merged into
                    BENCH_service.json)
+  * compiled_batched — batched variant solves: homogeneous refinement
+                   fans traced once and vmapped across variants vs the
+                   unrolled compiled mode and per-op dispatch; also
+                   records blocking cold-compile first-touch time for
+                   both trace layouts (merged into BENCH_service.json)
+  * compiled_cold — first-touch latency on a changing-structure ladder:
+                   blocking compiles vs compile_async + speculative
+                   warm-up hints during agent think time (merged into
+                   BENCH_service.json)
   * deadline     — SLO attainment under mixed load: deadline-aware
                    scheduling (EDF + tight-slack solo dispatch +
                    shedding) vs deadline-blind, same priority band
@@ -38,7 +47,8 @@ Sections:
                    and retune count (merged into BENCH_service.json)
 
 ``--smoke`` runs CI-sized variants of the ``service``, ``sharded``,
-``compiled``, ``deadline``, ``fabric_proc``, ``observability`` and
+``compiled``, ``compiled_batched``, ``compiled_cold``, ``deadline``,
+``fabric_proc``, ``observability`` and
 ``control`` sections (smaller rows / agents / rounds)
 and records them under ``*_smoke`` keys, which
 ``benchmarks/check_regression.py`` gates against the committed baseline;
@@ -122,6 +132,16 @@ def _compiled(args):
     return compiled_rows(smoke=args.smoke, out=args.out)
 
 
+def _compiled_batched(args):
+    from .e2e_agentic import compiled_batched_rows
+    return compiled_batched_rows(smoke=args.smoke, out=args.out)
+
+
+def _compiled_cold(args):
+    from .e2e_agentic import compiled_cold_rows
+    return compiled_cold_rows(smoke=args.smoke, out=args.out)
+
+
 def _fabric_proc(args):
     from .e2e_agentic import proc_fabric_rows
     return proc_fabric_rows(smoke=args.smoke, out=args.out)
@@ -147,6 +167,8 @@ SECTIONS = {
     "priority": _priority,
     "sharded": _sharded,
     "compiled": _compiled,
+    "compiled_batched": _compiled_batched,
+    "compiled_cold": _compiled_cold,
     "deadline": _deadline,
     "fabric_proc": _fabric_proc,
     "observability": _observability,

@@ -281,6 +281,33 @@ class AIDEAgent:
         scored = [n for n in self.nodes if n.score is not None]
         return min(scored, key=lambda n: n.score) if scored else None
 
+    def speculate(self, max_specs: int = 2) -> list[PipelineSpec]:
+        """Likely-next *structural* neighbors of the current best node —
+        the prediction feeding speculative plan compilation.
+
+        ``_mutate``'s most common move (a hyperparameter tweak) keeps the
+        structural signature, so an already-warm program covers it; the
+        moves that need a fresh compile are the single-stage structure
+        mutations.  Those are enumerable without consuming ``self.rng``
+        (which would perturb the deterministic draft sequence): toggle
+        ``clip_outliers``, swap the preprocessing strategy."""
+        best = self.best()
+        base = best.spec if best is not None else self.base
+        neighbors = [
+            replace(base, clip_outliers=not base.clip_outliers,
+                    stage="exploit"),
+            replace(base, preproc=[p for p in PREPROCS
+                                   if p != base.preproc][0],
+                    stage="exploit"),
+        ]
+        seen, out = set(), []
+        for s in neighbors:
+            k = (s.preproc, s.model, s.clip_outliers, s.log_target, s.stage)
+            if k not in seen:
+                seen.add(k)
+                out.append(s)
+        return out[:max(0, max_specs)]
+
 
 # ---------------------------------------------------------------------------
 # async search driver: overlap planning with in-flight execution (paper §3)
@@ -328,7 +355,8 @@ class AsyncAIDESearch:
                  max_inflight: int = 2,
                  draft_priority=None, refine_priority=None,
                  shard_affinity: bool = False,
-                 deadline_s: Optional[float] = None):
+                 deadline_s: Optional[float] = None,
+                 speculate: bool = False):
         if max_inflight < 1:
             raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
         from ..service.priority import Priority
@@ -374,6 +402,15 @@ class AsyncAIDESearch:
         self.refine_priority = (Priority.INTERACTIVE
                                 if refine_priority is None
                                 else refine_priority)
+        # speculative plan warm-up: after each refinement submission, hand
+        # the backend the agent's likely-next structural neighbors via
+        # ``session.precompile`` so their programs compile in the
+        # background before the mutation is ever drawn.  Pure hint: only
+        # active when the session exposes precompile AND the backend runs
+        # with compile_async + speculative_depth > 0
+        self._speculate = bool(speculate) and callable(
+            getattr(session, "precompile", None))
+        self.speculative_batches = 0    # precompile hints actually sent
         self.reports: list = []
         self.deadlines_missed = 0   # refinement rounds shed past their SLO
 
@@ -391,16 +428,33 @@ class AsyncAIDESearch:
             future = self.session.submit(batch, options=SubmitOptions(
                 priority=prio, affinity=self._affinity,
                 deadline_s=deadline))
-            return specs, names, future
-        kwargs: dict = {}
-        if self._supports_priority:
-            kwargs["priority"] = prio
-            if deadline is not None:
-                kwargs["deadline_s"] = deadline
-        if self._affinity is not None:
-            kwargs["affinity"] = self._affinity
-        future = self.session.submit(batch, **kwargs)
+        else:
+            kwargs: dict = {}
+            if self._supports_priority:
+                kwargs["priority"] = prio
+                if deadline is not None:
+                    kwargs["deadline_s"] = deadline
+            if self._affinity is not None:
+                kwargs["affinity"] = self._affinity
+            future = self.session.submit(batch, **kwargs)
+        if self._speculate and refining:
+            self._precompile_neighbors()
         return specs, names, future
+
+    def _precompile_neighbors(self) -> None:
+        """Fire-and-forget warm-up hint for the next round's likely
+        structural mutations; never allowed to fail a search round."""
+        try:
+            nxt = self.agent.speculate()
+            if not nxt:
+                return
+            batch = PipelineBatch(
+                [s.build() for s in nxt],
+                [f"speculative_{i}" for i in range(len(nxt))])
+            self.session.precompile(batch)
+            self.speculative_batches += 1
+        except Exception:  # noqa: BLE001 — a guess must never hurt
+            pass
 
     def _harvest(self, specs, names, future) -> None:
         try:

@@ -134,6 +134,17 @@ class RuntimeConfig:
     # bound a compiled segment's est_time so it can never delay an
     # interactive/deadline preempt by more than one slice (None = off)
     segment_time_budget_s: Optional[float] = None
+    # compiled-segment "next gear" (docs/ARCHITECTURE.md §7), all off by
+    # default: compile_async moves trace+jit off the critical path (first
+    # touch of a new structural signature dispatches per-op while a
+    # background thread compiles); batch_variants traces homogeneous
+    # hyperparameter-variant groups as ONE vmapped solve; a positive
+    # speculative_depth lets predictors (Session.precompile /
+    # AsyncAIDESearch(speculate=True)) enqueue that many likely-next
+    # shapes on the compile executor's low-priority lane
+    compile_async: bool = False
+    batch_variants: bool = False
+    speculative_depth: int = 0
 
 
 @dataclass(frozen=True)
@@ -254,6 +265,10 @@ class StratumConfig:
             kw["spill_dir"] = self.cache.spill_dir
         if self.runtime.compiled_segments:
             kw["plan_cache_entries"] = self.runtime.plan_cache_entries
+            kw["compile_async"] = self.runtime.compile_async
+            kw["batch_variants"] = self.runtime.batch_variants
+            if self.runtime.compile_async:
+                kw["speculative_depth"] = self.runtime.speculative_depth
         return kw
 
     def service_config(self) -> ServiceConfig:
@@ -285,6 +300,9 @@ class StratumConfig:
             cache_tenant_quota_fraction=self.cache.tenant_quota_fraction,
             compiled_segments=self.runtime.compiled_segments,
             plan_cache_entries=self.runtime.plan_cache_entries,
+            compile_async=self.runtime.compile_async,
+            batch_variants=self.runtime.batch_variants,
+            speculative_depth=self.runtime.speculative_depth,
             n_executors=s.n_executors,
             trace=s.trace,
             trace_dir=s.trace_dir,
@@ -337,6 +355,13 @@ class StratumClient(ABC):
         """A tenant-scoped view of this client (AsyncAIDESearch drives
         one per agent)."""
         return _ClientSession(self, tenant)
+
+    def precompile(self, batch: PipelineBatch) -> dict:
+        """Speculative warm-up hint: plan ``batch`` without executing it
+        and enqueue its compiled-segment builds at low priority (see
+        ``compile_async`` / ``speculative_depth``).  Targets that cannot
+        honor the hint return ``{}`` — it is never an error to guess."""
+        return {}
 
     # -- observability / lifecycle ----------------------------------------
     @property
@@ -391,6 +416,9 @@ class _ClientSession:
                   timeout: Optional[float] = None,
                   options: Optional[SubmitOptions] = None, **legacy):
         return self.submit(batch, options, **legacy).result(timeout)
+
+    def precompile(self, batch: PipelineBatch) -> dict:
+        return self._client.precompile(batch)
 
     @property
     def telemetry(self) -> dict:
@@ -484,6 +512,9 @@ class LocalTarget(StratumClient):
         future._set_result(results, report)
         return future
 
+    def precompile(self, batch: PipelineBatch) -> dict:
+        return self._stratum.precompile_batch(batch)
+
     @property
     def telemetry(self) -> _LocalTelemetry:
         return self._telemetry
@@ -492,6 +523,11 @@ class LocalTarget(StratumClient):
     def stratum(self) -> Stratum:
         """The wrapped session (plan-cache snapshots, ablation hooks)."""
         return self._stratum
+
+    def close(self) -> None:
+        if not self._closed:
+            self._stratum.close()
+        super().close()
 
 
 # ---------------------------------------------------------------------------
@@ -521,6 +557,9 @@ class ServiceTarget(StratumClient):
             opts.tenant, batch, priority=opts.priority,
             affinity=opts.affinity, deadline_s=opts.deadline_s,
             tags=opts.tags)
+
+    def precompile(self, batch: PipelineBatch) -> dict:
+        return self._service.precompile(self.tenant, batch)
 
     @property
     def telemetry(self):

@@ -101,7 +101,10 @@ class Stratum:
                  compiled_segments: bool = True,
                  plan_cache: Optional[PlanCache] = None,
                  plan_cache_entries: Optional[int] = None,
-                 segment_time_budget_s: Optional[float] = None):
+                 segment_time_budget_s: Optional[float] = None,
+                 compile_async: bool = False,
+                 batch_variants: bool = False,
+                 speculative_depth: int = 0):
         unknown = set(enable) - set(ALL_FEATURES)
         if unknown:
             raise ValueError(f"unknown features {unknown}")
@@ -122,6 +125,15 @@ class Stratum:
             if plan_cache is not None:
                 _warn_once("Stratum(plan_cache=...) has no effect with "
                            "compiled_segments=False")
+            if compile_async:
+                _warn_once("Stratum(compile_async=True) has no effect "
+                           "with compiled_segments=False")
+            if batch_variants:
+                _warn_once("Stratum(batch_variants=True) has no effect "
+                           "with compiled_segments=False")
+        if speculative_depth and not compile_async:
+            _warn_once("Stratum(speculative_depth=...) has no effect "
+                       "without compile_async=True")
         if cache_fraction is None:
             cache_fraction = _DEFAULT_CACHE_FRACTION
         if plan_cache_entries is None:
@@ -155,9 +167,13 @@ class Stratum:
         self.plan_cache: Optional[PlanCache] = None
         if compiled_segments:
             self.plan_cache = (plan_cache if plan_cache is not None
-                               else PlanCache(capacity=plan_cache_entries))
+                               else PlanCache(
+                                   capacity=plan_cache_entries,
+                                   compile_async=compile_async,
+                                   speculative_depth=speculative_depth))
         self._backends = make_backends(self.plan_cache,
-                                       compiled=compiled_segments)
+                                       compiled=compiled_segments,
+                                       batch_variants=batch_variants)
 
     # ------------------------------------------------------------------
     def compile_batch(self, batch: PipelineBatch):
@@ -221,3 +237,30 @@ class Stratum:
     def run(self, sink: LazyRef, name: str = "pipeline_0"):
         results, report = self.run_batch(PipelineBatch([sink], [name]))
         return results[name], report
+
+    # ------------------------------------------------------------------
+    def precompile_batch(self, batch: PipelineBatch) -> dict:
+        """Speculative warm-up: plan ``batch`` WITHOUT executing it and
+        enqueue its jax segments on the background compile executor at low
+        priority, so a likely-next submission finds its programs warm.
+        No-op ({} of zero counts) unless ``compile_async=True``.  Returns
+        a status-count dict (``{"enqueued": n, "cached": m, ...}``)."""
+        counts: dict = {}
+        jax_be = self._backends.get("jax")
+        if jax_be is None or self.plan_cache is None \
+                or self.plan_cache.executor is None:
+            return counts
+        _sinks, sel, p, _cand, _rw, _n, _t = self.compile_batch(batch)
+        for seg in p.segments:
+            if seg.kind != "jax":
+                continue
+            status = jax_be.precompile_segment(seg, sel, cache=self.cache)
+            counts[status] = counts.get(status, 0) + 1
+        return counts
+
+    def close(self, timeout: float = 5.0) -> None:
+        """Release background resources (the async compile executor).
+        Safe to call on any session, including ones sharing an injected
+        plan cache — the shutdown is idempotent."""
+        if self.plan_cache is not None:
+            self.plan_cache.close(timeout)

@@ -80,17 +80,21 @@ def available_backends() -> tuple:
     return tuple(sorted(_FACTORIES))
 
 
-def make_backends(plan_cache=None, compiled: bool = True
+def make_backends(plan_cache=None, compiled: bool = True,
+                  batch_variants: bool = False
                   ) -> dict[str, ExecutionBackend]:
     """Default backend set for a runtime: the per-op python path, plus the
     compiled jax segment path when ``compiled`` (sharing ``plan_cache``
-    when given).  ``compiled=False`` reproduces the pre-segment per-op
-    runtime exactly — jax segments fall back to the python backend."""
+    when given; ``batch_variants`` turns on vmap-batched variant groups
+    inside compiled segments).  ``compiled=False`` reproduces the
+    pre-segment per-op runtime exactly — jax segments fall back to the
+    python backend."""
     from .jax_segment import JaxSegmentBackend
     from .python_thread import PythonThreadBackend
     backends: dict[str, ExecutionBackend] = {"python": PythonThreadBackend()}
     if compiled:
-        backends["jax"] = JaxSegmentBackend(plan_cache=plan_cache)
+        backends["jax"] = JaxSegmentBackend(plan_cache=plan_cache,
+                                            batch_variants=batch_variants)
     for kind, factory in _FACTORIES.items():
         if kind not in backends:
             backends[kind] = factory(plan_cache=plan_cache)

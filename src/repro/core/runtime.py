@@ -64,6 +64,9 @@ class RunReport:
     # trace hops so a per-job record shows whether it hit warm plans
     plan_cache_hits: int = 0
     plan_cache_misses: int = 0
+    # rounds dispatched per-op while an async compile ran off the critical
+    # path (compile_async): cold-start cost shifted, not paid
+    plan_cache_fallback_rounds: int = 0
 
 
 class ExecutionError(RuntimeError):

@@ -138,8 +138,14 @@ def plan(sinks: Sequence[LazyRef],
     scheduled: set[int] = set()
 
     while ready:
-        # longest-estimated-time first within a wave → better packing
-        ready.sort(key=op_time, reverse=True)
+        # longest-estimated-time first within a wave → better packing.
+        # Equal-cost ops tie-break on structural signature so AIDE-style
+        # variant fans (same structure, tunables differing) land adjacent:
+        # the jax-segment variant batcher executes a group at its LAST
+        # member's position, so clustering members minimizes the deferral
+        # distance — and the chance a group is dropped for starving an
+        # intermediate consumer.  Also makes wave layout deterministic.
+        ready.sort(key=lambda o: (-op_time(o), o.structural_signature))
         wave_ops: list[LazyOp] = []
         wave_mem = 0
         deferred: list[LazyOp] = []

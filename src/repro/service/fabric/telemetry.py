@@ -155,6 +155,16 @@ class FabricTelemetry:
             totals["plan_cache_entries"] = sum(r["entries"] for r in pc_rows)
             totals["plan_cache_hit_rate"] = (
                 hits / (hits + misses) if hits + misses else 0.0)
+            # async-compile lane fabric-wide (``.get``: retired shards'
+            # frozen rows may predate these fields)
+            totals["plan_cache_async_compiles"] = sum(
+                r.get("async_compiles", 0) for r in pc_rows)
+            totals["plan_cache_inflight"] = sum(
+                r.get("inflight", 0) for r in pc_rows)
+            totals["plan_cache_speculative_hits"] = sum(
+                r.get("speculative_hits", 0) for r in pc_rows)
+            totals["plan_cache_compile_time_s"] = sum(
+                r.get("compile_time_s", 0.0) for r in pc_rows)
         # windowed throughput/attainment fabric-wide: counters sum, depth
         # maxes, percentiles recombine from each shard's capped samples
         win_rows = [s["windows"] for s in per_shard.values()

@@ -61,6 +61,26 @@ def render(snapshot: dict) -> str:
     if win:
         lines.append("windowed: " + _fmt_windows(win))
 
+    # compile-side telemetry: a service snapshot nests the PlanCache
+    # snapshot under "plan_cache"; the fabric merge flattens summed
+    # counters to "plan_cache_*" keys
+    pc = snapshot.get("plan_cache") or {}
+    flat = {k[len("plan_cache_"):]: v for k, v in snapshot.items()
+            if k.startswith("plan_cache_")}
+    cc = pc or flat
+    if cc:
+        hits = cc.get("hits", 0)
+        misses = cc.get("misses", 0)
+        total = hits + misses
+        rate = cc.get("hit_rate", hits / total if total else 0.0)
+        lines.append(
+            f"compile: plan$ {rate:.2f} "
+            f"({cc.get('entries', 0)} entries)  "
+            f"async {cc.get('async_compiles', 0)} "
+            f"(inflight {cc.get('inflight', 0)})  "
+            f"spec hits {cc.get('speculative_hits', 0)}  "
+            f"compile {cc.get('compile_time_s', 0.0):.2f}s")
+
     shards = snapshot.get("per_shard") or {}
     if shards:
         lines.append(f"{'shard':<10} {'state':<8} {'depth':>5} "
@@ -114,6 +134,11 @@ def demo_snapshot() -> dict:
         "jobs_cancelled": 1,
         "deadline": {"jobs": 60, "met": 56, "attainment": 0.93, "shed": 2},
         "windows": win,
+        "plan_cache_hits": 49, "plan_cache_misses": 14,
+        "plan_cache_entries": 9, "plan_cache_hit_rate": 0.78,
+        "plan_cache_async_compiles": 7, "plan_cache_inflight": 1,
+        "plan_cache_speculative_hits": 3,
+        "plan_cache_compile_time_s": 1.37,
         "per_shard": {
             "shard0": {"state": "live", "queue_depth": 3, "inflight": 1,
                        "plan_cache": {"hits": 37, "misses": 5},

@@ -110,6 +110,16 @@ class ServiceConfig:
     # emits compile once; False → per-op dispatch only (bench baseline)
     compiled_segments: bool = True
     plan_cache_entries: int = 256
+    # compiled-segment "next gear" (docs/ARCHITECTURE.md §7), off by
+    # default: compile_async moves trace+jit onto a bounded background
+    # thread (first touch of a new structural signature dispatches per-op
+    # instead of blocking); batch_variants traces homogeneous
+    # hyperparameter-variant groups as ONE vmapped solve; a positive
+    # speculative_depth sizes the low-priority warm-up lane that
+    # Session.precompile feeds with predicted-next plans
+    compile_async: bool = False
+    batch_variants: bool = False
+    speculative_depth: int = 0
     # concurrency
     n_executors: int = 2
     # identity when the service runs as one shard of a sharded fabric
@@ -178,9 +188,13 @@ class StratumService:
         # routing on the fabric turns into compiled-plan locality
         self.plan_cache: Optional[PlanCache] = None
         if config.compiled_segments:
-            self.plan_cache = PlanCache(capacity=config.plan_cache_entries)
+            self.plan_cache = PlanCache(
+                capacity=config.plan_cache_entries,
+                compile_async=config.compile_async,
+                speculative_depth=config.speculative_depth)
         self._backends = make_backends(self.plan_cache,
-                                       compiled=config.compiled_segments)
+                                       compiled=config.compiled_segments,
+                                       batch_variants=config.batch_variants)
         # the optimizer: compile-only use of the existing session object,
         # sharing the service cache (Stratum(cache=...) injection)
         self._optimizer = Stratum(
@@ -277,6 +291,12 @@ class StratumService:
                 self.traces.finish(job.trace)
         if self._pool is not None:
             self._pool.shutdown(wait=True)
+        if self.plan_cache is not None:
+            # drop queued background compiles and join the compile worker
+            # (bounded) — a proc-fabric worker must not be held open past
+            # SIGTERM by an inflight trace+jit.  Idempotent; no-op when
+            # compile_async is off.
+            self.plan_cache.close()
         self.traces.close()
 
     def __enter__(self) -> "StratumService":
@@ -350,6 +370,30 @@ class StratumService:
             raise
         self.telemetry.record_submit(tenant, priority)
         return future
+
+    def precompile(self, tenant: str, batch: PipelineBatch) -> dict:
+        """Speculative warm-up: optimize+plan ``batch`` WITHOUT queueing
+        or executing it, and enqueue its jax segments on the plan cache's
+        low-priority compile lane, so a likely-next submission of the same
+        structure finds its programs warm.  The planning pass runs inline
+        on the caller's thread (it is pure optimizer work — no queue slot,
+        no admission, no telemetry side effects beyond the plan-cache
+        stats); the compiles run on the background executor.  Returns a
+        status-count dict, ``{}`` when ``compile_async`` is off."""
+        del tenant                       # hints are not tenant-accounted
+        if self.plan_cache is None or self.plan_cache.executor is None:
+            return {}
+        jax_be = self._backends.get("jax")
+        if jax_be is None:
+            return {}
+        counts: dict = {}
+        _s, sel, p, _c, _rw, _n, _t = self._optimizer.compile_batch(batch)
+        for seg in p.segments:
+            if seg.kind != "jax":
+                continue
+            status = jax_be.precompile_segment(seg, sel, cache=self.cache)
+            counts[status] = counts.get(status, 0) + 1
+        return counts
 
     @staticmethod
     def _slack(job: Job, now: Optional[float] = None) -> Optional[float]:
@@ -617,6 +661,8 @@ class StratumService:
                     salvaged=salvaged,
                     plan_cache_hits=getattr(run, "plan_cache_hits", 0),
                     plan_cache_misses=getattr(run, "plan_cache_misses", 0),
+                    plan_cache_fallback_rounds=getattr(
+                        run, "plan_cache_fallback_rounds", 0),
                     deadline_met=deadline_met)
                 self.traces.finish(job.trace)
                 trace_hops = job.trace.as_hops()

@@ -215,6 +215,19 @@ class Session:
                            deadline_s=deadline_s, tags=tags,
                            options=options).result(timeout)
 
+    def precompile(self, batch: PipelineBatch) -> dict:
+        """Speculative warm-up hint: plan ``batch`` without executing it
+        and enqueue its compiled segments on the service's low-priority
+        background compile lane (``compile_async`` +
+        ``speculative_depth``).  Returns a status-count dict; ``{}`` when
+        the backend cannot honor hints — guessing is never an error."""
+        if self._closed:
+            raise RuntimeError(f"session {self.tenant!r} is closed")
+        precompile = getattr(self._service, "precompile", None)
+        if precompile is None:
+            return {}
+        return precompile(self.tenant, batch)
+
     @property
     def telemetry(self) -> dict:
         return self._service.telemetry.snapshot().get(self.tenant, {})

@@ -287,6 +287,14 @@ class ServiceTelemetry:
                 f"plan cache: {pc['entries']} compiled segment(s) "
                 f"hit_rate={pc['hit_rate']:.2f} "
                 f"(compiles {pc['compiles']}, evictions {pc['evictions']})")
+            if pc.get("async"):
+                lines.append(
+                    f"compile lane: async={pc.get('async_compiles', 0)} "
+                    f"inflight={pc.get('inflight', 0)} "
+                    f"speculative_hits={pc.get('speculative_hits', 0)} "
+                    f"dropped={pc.get('speculative_dropped', 0)} "
+                    f"failures={pc.get('async_failures', 0)} "
+                    f"time={pc.get('compile_time_s', 0.0):.2f}s")
         for tenant, s in sorted(self.snapshot().items()):
             lines.append(
                 f"  {tenant}: jobs={s['jobs_completed']}/"

@@ -1,0 +1,423 @@
+"""Async/speculative plan compilation and batched variant solves.
+
+Covers the compile executor (single-flight dedup under a thread hammer,
+lane bounds, clean shutdown), score equality across per-op / compiled /
+variant-batched execution, the async first-touch contract (fall back this
+round, hit the next), speculative warm-up via ``precompile``, the bounded
+uncompilable set, and the AIDE driver's speculation hook.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import repro.tabular as T
+from repro.core import PipelineBatch, PlanCache, Stratum
+from repro.core.backends.jax_segment import JaxSegmentBackend
+from repro.core.plan_cache import CompileExecutor, PlanCacheStats
+from repro.service import StratumService
+
+
+def _variant_batch(alphas, log1p=False, n_rows=2000):
+    """AIDE-style refinement fan: identical structure, tunable alphas.
+    ``log1p=True`` inserts one extra stage — a *structural* neighbor of
+    the base fan (the shape the speculation predictor enumerates)."""
+    x = T.read("uk_housing", n_rows, seed=0)
+    y = T.project(x, [0])
+    Xs = T.scale(T.impute(T.project(x, [10, 11, 12, 13])))
+    if log1p:
+        Xs = T.log1p(Xs)
+    sinks = [T.metric(y, T.predict(T.ridge_fit(Xs, y, alpha=a), Xs),
+                      kind="rmse") for a in alphas]
+    return PipelineBatch(sinks, [f"v{i}" for i in range(len(alphas))])
+
+
+def _scores(res, batch):
+    return [float(np.asarray(res[n])) for n in batch.names]
+
+
+# ---------------------------------------------------------------------------
+# CompileExecutor: single-flight, bounds, shutdown
+# ---------------------------------------------------------------------------
+
+def test_executor_single_flight_under_thread_hammer():
+    """N threads racing M keys: each key's job runs exactly once and the
+    stats stay consistent — the contract that lets N tenants miss on the
+    same new signature without N traces."""
+    pc = PlanCache(capacity=64, compile_async=True)
+    ex = pc.executor
+    runs: dict = {}
+    mu = threading.Lock()
+
+    def job_for(key):
+        def job():
+            time.sleep(0.002)        # widen the race window
+            with mu:
+                runs[key] = runs.get(key, 0) + 1
+            pc.put(key, f"compiled-{key}")
+        return job
+
+    keys = [f"sig{i}" for i in range(8)]
+    accepted = []
+
+    def hammer():
+        for key in keys:
+            accepted.append(ex.submit(key, job_for(key)))
+
+    threads = [threading.Thread(target=hammer) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert ex.drain(timeout=30)
+    # every key ran exactly once, and exactly as many submits were
+    # accepted as jobs ran (the rest were deduped as inflight/cached)
+    assert runs == {k: 1 for k in keys}
+    assert sum(accepted) == len(keys)
+    snap = pc.snapshot()
+    assert snap["async"] is True
+    assert snap["async_compiles"] == len(keys)
+    assert snap["async_failures"] == 0
+    assert snap["inflight"] == 0
+    assert snap["compile_time_s"] > 0
+    for k in keys:
+        assert pc.get(k) == f"compiled-{k}"
+    pc.close()
+
+
+def test_executor_lanes_are_bounded_and_speculative_drops_count():
+    stats, lock = PlanCacheStats(), threading.Lock()
+    ex = CompileExecutor(stats, lock, lambda k: False,
+                         max_pending=2, speculative_depth=1)
+    gate = threading.Event()
+    assert ex.submit("busy", gate.wait)      # occupies the worker
+    time.sleep(0.05)                         # let the worker dequeue it
+    assert ex.submit("n1", lambda: None)
+    assert ex.submit("n2", lambda: None)
+    assert not ex.submit("n3", lambda: None)          # normal lane full
+    assert stats.speculative_dropped == 0             # not a warm-up drop
+    assert ex.submit("s1", lambda: None, speculative=True)
+    assert not ex.submit("s2", lambda: None, speculative=True)
+    assert stats.speculative_dropped == 1
+    # single-flight also rejects a key already queued
+    assert not ex.submit("n1", lambda: None)
+    gate.set()
+    assert ex.drain(timeout=30)
+    assert stats.inflight == 0
+    assert stats.async_compiles == 4          # busy, n1, n2, s1
+    ex.close()
+
+
+def test_executor_close_is_idempotent_and_drops_queued_work():
+    stats, lock = PlanCacheStats(), threading.Lock()
+    ex = CompileExecutor(stats, lock, lambda k: False, max_pending=8)
+    gate = threading.Event()
+    ran = []
+    ex.submit("busy", gate.wait)
+    time.sleep(0.05)
+    ex.submit("queued", lambda: ran.append(1))
+    gate.set()
+    ex.close(timeout=10)
+    ex.close(timeout=10)                      # idempotent
+    assert not ex.submit("after", lambda: ran.append(2))
+    assert ran == []                          # queued job was dropped
+    assert stats.inflight == 0
+    assert ex._worker is not None and not ex._worker.is_alive()
+
+
+def test_executor_counts_failures_without_dying():
+    pc = PlanCache(capacity=8, compile_async=True)
+
+    def boom():
+        raise RuntimeError("trace failed")
+
+    assert pc.executor.submit("bad", boom)
+    assert pc.executor.submit("good", lambda: pc.put("good", 1))
+    assert pc.executor.drain(timeout=30)
+    snap = pc.snapshot()
+    assert snap["async_failures"] == 1
+    assert snap["async_compiles"] == 1
+    assert pc.get("good") == 1
+    pc.close()
+
+
+def test_plan_cache_speculative_hit_accounting():
+    pc = PlanCache(capacity=8, compile_async=True, speculative_depth=2)
+    pc.put("warm", "program", speculative=True)
+    snap = pc.snapshot()
+    assert snap["speculative_compiles"] == 1
+    assert snap["speculative_hits"] == 0
+    assert pc.get("warm") == "program"
+    assert pc.snapshot()["speculative_hits"] == 1
+    pc.get("warm")                            # only the FIRST demand hit
+    assert pc.snapshot()["speculative_hits"] == 1
+    pc.close()
+
+
+# ---------------------------------------------------------------------------
+# batched variant solves: one vmapped program, identical scores
+# ---------------------------------------------------------------------------
+
+def test_batched_variants_match_per_op_and_compiled():
+    alphas = (0.5, 1.0, 2.0, 4.0)
+    per_op = Stratum(memory_budget_bytes=1 << 30, compiled_segments=False)
+    comp = Stratum(memory_budget_bytes=1 << 30)
+    vb = Stratum(memory_budget_bytes=1 << 30, batch_variants=True)
+    batch = _variant_batch(alphas)
+    ref = _scores(per_op.run_batch(batch)[0], batch)
+    got_c = _scores(comp.run_batch(_variant_batch(alphas))[0], batch)
+    res_vb, rep_vb = vb.run_batch(_variant_batch(alphas))
+    got_vb = _scores(res_vb, batch)
+    assert rep_vb.run.per_backend.get("jax-seg", 0) > 0
+    np.testing.assert_allclose(got_c, ref, rtol=1e-6)
+    np.testing.assert_allclose(got_vb, ref, rtol=1e-6)
+    assert len(set(ref)) == len(alphas)       # distinct alphas, real work
+    # batched programs key under their own tag — the caches never mix
+    assert vb._backends["jax"]._key_tag == "jax-seg-vb"
+    assert comp._backends["jax"]._key_tag == "jax-seg"
+
+
+def test_batched_variants_reuse_one_compiled_program():
+    vb = Stratum(memory_budget_bytes=1 << 30, batch_variants=True,
+                 enable=("logical", "lowering", "selection", "parallel"))
+    vb.run_batch(_variant_batch((0.5, 1.0, 2.0)))
+    compiles = vb.plan_cache.snapshot()["compiles"]
+    assert compiles > 0
+    vb.run_batch(_variant_batch((3.0, 5.0, 7.0)))
+    snap = vb.plan_cache.snapshot()
+    assert snap["compiles"] == compiles       # second fan: pure hits
+    assert snap["hits"] > 0
+
+
+def test_variant_group_planning_is_safe_and_pure():
+    """Groups form per (structural signature, impl); a group whose
+    deferral would starve an intermediate consumer is dropped."""
+    plan = JaxSegmentBackend._plan_groups
+    # three members of one class, hoisted tunables, no internal edges
+    assert plan(("s", "s", "s"), (1, 1, 1),
+                ((), (), ()), (("a",), ("a",), ("a",))) == ((0, 1, 2),)
+    # mixed classes: only same-(ssig, impl) runs group
+    assert plan(("s", "t", "s"), (1, 1, 1),
+                ((), (), ()), (("a",), ("a",), ("a",))) == ((0, 2),)
+    # no hoisted tunables still groups: differing inputs are the batched
+    # axis (chain ops downstream of a tunable fan)
+    assert plan(("s", "s"), (1, 1), ((), ()), ((), ())) == ((0, 1),)
+    # op 1 consumes member 0's output: deferring 0 to position 2 would
+    # starve it, so the group is dropped
+    assert plan(("s", "x", "s"), (1, 2, 1),
+                ((), ((1, 0, 0),), ()), (("a",), (), ("a",))) == ()
+
+
+# ---------------------------------------------------------------------------
+# async compilation: first touch falls back, next round runs compiled
+# ---------------------------------------------------------------------------
+
+def test_async_first_touch_falls_back_then_hits_warm():
+    ref_s = Stratum(memory_budget_bytes=1 << 30, compiled_segments=False)
+    s = Stratum(memory_budget_bytes=1 << 30, compile_async=True)
+    try:
+        batch = _variant_batch((0.5, 1.5))
+        res1, rep1 = s.run_batch(batch)
+        # the miss went to the background lane; this round ran per-op
+        assert rep1.run.plan_cache_fallback_rounds >= 1
+        assert rep1.run.per_backend.get("jax-seg", 0) == 0
+        assert s.plan_cache.executor.drain(timeout=120)
+        # same structure, fresh constants: compiled program is warm now
+        batch2 = _variant_batch((2.5, 3.5))
+        res2, rep2 = s.run_batch(batch2)
+        assert rep2.run.plan_cache_fallback_rounds == 0
+        assert rep2.run.per_backend.get("jax-seg", 0) > 0
+        ref = _scores(ref_s.run_batch(_variant_batch((2.5, 3.5)))[0],
+                      batch2)
+        np.testing.assert_allclose(_scores(res2, batch2), ref, rtol=1e-6)
+        snap = s.plan_cache.snapshot()
+        assert snap["async_compiles"] >= 1
+        assert snap["async_failures"] == 0
+    finally:
+        s.close()
+
+
+def test_speculative_precompile_warms_future_structure():
+    """precompile_batch on a structure the tenant has NOT submitted:
+    after the background build, the first real submission is a
+    speculative hit with zero fallback rounds."""
+    s = Stratum(memory_budget_bytes=1 << 30, compile_async=True,
+                speculative_depth=4)
+    try:
+        # two real rounds of the rmse structure: the second runs with the
+        # shared prefix served from the intermediate cache, which is the
+        # cut future plans will see — and records the observed input avals
+        # the speculative build warms with
+        s.run_batch(_variant_batch((0.5, 1.5)))
+        assert s.plan_cache.executor.drain(timeout=120)
+        s.run_batch(_variant_batch((2.0, 3.0)))
+        assert s.plan_cache.executor.drain(timeout=120)
+        # predict a STRUCTURAL neighbor (one extra traced stage)
+        counts = s.precompile_batch(_variant_batch((4.0, 5.0), log1p=True))
+        assert counts.get("enqueued", 0) >= 1
+        assert s.plan_cache.executor.drain(timeout=120)
+        base = s.plan_cache.snapshot()
+        assert base["speculative_compiles"] >= 1
+        batch = _variant_batch((6.0, 7.0), log1p=True)
+        res, rep = s.run_batch(batch)
+        snap = s.plan_cache.snapshot()
+        assert snap["speculative_hits"] >= 1
+        assert rep.run.per_backend.get("jax-seg", 0) > 0
+        ref_s = Stratum(memory_budget_bytes=1 << 30,
+                        compiled_segments=False)
+        ref = _scores(
+            ref_s.run_batch(_variant_batch((6.0, 7.0), log1p=True))[0],
+            batch)
+        np.testing.assert_allclose(_scores(res, batch), ref, rtol=1e-6)
+    finally:
+        s.close()
+
+
+def test_uncompilable_set_is_lru_bounded_and_gauged():
+    pc = PlanCache(capacity=8)
+    be = JaxSegmentBackend(pc, uncompilable_max=8)
+    for i in range(20):
+        be._mark_uncompilable(("sig", i))
+    assert len(be._uncompilable) == 8
+    assert pc.snapshot()["uncompilable"] == 8
+    assert be._is_uncompilable(("sig", 19))
+    assert not be._is_uncompilable(("sig", 0))        # LRU-evicted
+
+
+# ---------------------------------------------------------------------------
+# service integration: lifecycle, telemetry, the AIDE speculation hook
+# ---------------------------------------------------------------------------
+
+def test_service_stop_closes_compile_executor():
+    svc = StratumService(memory_budget_bytes=1 << 30, n_executors=1,
+                         coalesce_window_s=0.0, compile_async=True,
+                         speculative_depth=2)
+    ses = svc.session("t0")
+    ses.submit(_variant_batch((0.5, 1.5))).result(timeout=300)
+    ex = svc.plan_cache.executor
+    assert ex is not None
+    assert ex.drain(timeout=120)
+    g = svc.telemetry.global_snapshot()
+    assert g["plan_cache"]["async"] is True
+    assert g["plan_cache"]["async_compiles"] >= 1
+    svc.stop()
+    assert ex._closed
+    assert ex._worker is None or not ex._worker.is_alive()
+    assert not ex.submit("late", lambda: None)
+
+
+def test_session_precompile_surface_and_compat():
+    svc = StratumService(memory_budget_bytes=1 << 30, n_executors=1,
+                         coalesce_window_s=0.0, compile_async=True,
+                         speculative_depth=4)
+    try:
+        ses = svc.session("t0")
+        ses.submit(_variant_batch((0.5, 1.5))).result(timeout=300)
+        assert svc.plan_cache.executor.drain(timeout=120)
+        counts = ses.precompile(_variant_batch((1.0, 2.0), log1p=True))
+        assert isinstance(counts, dict) and counts
+    finally:
+        svc.stop()
+    # a session over a backend without the hook degrades to {}
+    class _Bare:
+        telemetry = None
+    from repro.service.session import Session
+    assert Session(_Bare(), "t").precompile(
+        _variant_batch((1.0,))) == {}
+
+
+def test_async_aide_search_sends_speculative_hints():
+    from repro.agents import AIDEAgent, AsyncAIDESearch
+    svc = StratumService(memory_budget_bytes=1 << 30, n_executors=1,
+                         coalesce_window_s=0.0, compile_async=True,
+                         speculative_depth=4)
+    try:
+        agent = AIDEAgent(n_rows=1500, cv_k=2, seed=3)
+        search = AsyncAIDESearch(svc.session("aide"), agent,
+                                 batch_size=2, max_inflight=1,
+                                 speculate=True)
+        best = search.run(n_rounds=3)
+        assert best is not None and best.score is not None
+        # refinement rounds fired precompile hints for structural
+        # neighbors of the incumbent
+        assert search.speculative_batches >= 1
+    finally:
+        svc.stop()
+
+
+def test_async_aide_search_speculative_hint_scores_a_hit():
+    """Warm-up end to end THROUGH the driver: the precompile hint fired
+    while refining must cover a later round that submits the predicted
+    structures.  The plan key is pipeline-name independent, so hint
+    batches (named ``speculative_i``) warm demand batches (``r{k}_i``).
+    The agent is scripted to make the hit deterministic: rounds 1-2 stay
+    on the base structure (which ``speculate()`` never predicts — both
+    neighbors are structural mutations), round 3 submits exactly the
+    predicted neighbor pair."""
+    from repro.agents import AIDEAgent, AsyncAIDESearch
+
+    class ScriptedAgent(AIDEAgent):
+        def __init__(self, **kw):
+            super().__init__(**kw)
+            self.proposals = 0
+
+        def speculate(self, max_specs: int = 2):
+            # frozen on the base spec (incumbent ignored), so the hint
+            # fired at round 2 and the demand at round 3 agree exactly
+            saved, self.nodes = self.nodes, []
+            try:
+                return super().speculate(max_specs)
+            finally:
+                self.nodes = saved
+
+        def propose(self, batch_size: int):
+            self.proposals += 1
+            if self.proposals < 3:
+                return [self.base] * batch_size
+            return self.speculate(batch_size)
+
+    svc = StratumService(memory_budget_bytes=1 << 30, n_executors=1,
+                         coalesce_window_s=0.0, compile_async=True,
+                         speculative_depth=8)
+    try:
+        agent = ScriptedAgent(n_rows=1200, cv_k=2, seed=3)
+        search = AsyncAIDESearch(svc.session("aide"), agent,
+                                 batch_size=2, max_inflight=1,
+                                 speculate=True)
+        search.run(n_rounds=2)      # round 2 refines → hint fires
+        assert search.speculative_batches >= 1
+        svc.plan_cache.executor.drain(timeout=180.0)
+        warmed = svc.plan_cache.snapshot()
+        # the neighbors compiled on the speculative lane and nothing has
+        # touched them yet
+        assert warmed["speculative_compiles"] >= 1
+        assert warmed["speculative_hits"] == 0
+        best = search.run(n_rounds=1)   # round 3 = predicted neighbors
+        assert best is not None
+        assert svc.plan_cache.snapshot()["speculative_hits"] >= 1
+    finally:
+        svc.stop()
+
+
+def test_scheduler_clusters_variant_fans_deterministically():
+    """Equal-cost ready ops tie-break on structural signature, so variant
+    fans land adjacent within a wave (minimal group deferral) and wave
+    layout is reproducible."""
+    s = Stratum(memory_budget_bytes=1 << 30)
+    batch = _variant_batch((0.5, 1.0, 2.0, 4.0))
+    _, _, p1, _, _, _, _ = s.compile_batch(batch)
+    _, _, p2, _, _, _, _ = s.compile_batch(_variant_batch(
+        (0.5, 1.0, 2.0, 4.0)))
+    lay1 = [[op.structural_signature for op in w.ops] for w in p1.waves]
+    lay2 = [[op.structural_signature for op in w.ops] for w in p2.waves]
+    assert lay1 == lay2
+    for wave in lay1:
+        # same-signature runs are contiguous within each wave
+        seen = []
+        for sig in wave:
+            if sig in seen:
+                assert sig == seen[-1], f"non-contiguous fan in {wave}"
+            else:
+                seen.append(sig)
