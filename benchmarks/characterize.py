@@ -8,7 +8,6 @@ import numpy as np
 from repro.agents.aide import AIDEAgent, diff_fraction
 from repro.agents import paper_workload_batches
 from repro.core import count_ops
-from repro.core.dag import toposort
 from repro.core.lowering import lower
 from repro.core.rewrites import cse
 

@@ -40,7 +40,18 @@ Gated metrics (checked when present in the baseline):
 * ``control_smoke.attainment_controlled`` — tight-deadline probe
   attainment under a batch flood with the closed-loop controller on
   (the static mode collapses to edge rejections by design, so only the
-  controlled rate is gated).
+  controlled rate is gated);
+* ``analysis_smoke.reject_speedup`` — how much sooner a statically
+  invalid submission learns its fate when the admission analyzer
+  rejects it at ``submit`` instead of letting it fail at the executor
+  behind the queue.  Queue-depth dependent, so its gate carries a 90%
+  per-gate tolerance (order-of-magnitude claim, like the cold-compile
+  gate);
+* ``analysis_smoke.valid_work_frac`` — 1 minus the fraction of the
+  admission-analysis run's makespan spent inside the analyzer.  Like
+  the observability gate, its committed baseline is pinned at 1.0 with
+  a 5% per-gate tolerance, so it is an absolute analyzer-overhead
+  budget on valid traffic.
 
 A metric present in the baseline but missing from the fresh artifact is a
 failure (the bench crashed or was skipped); a metric missing from the
@@ -84,6 +95,14 @@ GATES = (
     ("fabric_proc_smoke", "completed_frac"),
     ("observability_smoke", "traced_over_untraced", 0.05),
     ("control_smoke", "attainment_controlled"),
+    # analysis_smoke.valid_work_frac follows the observability idiom:
+    # its committed baseline is pinned at 1.0, so the 0.05 tolerance IS
+    # the admission-analyzer overhead budget (≤5% of valid wall time).
+    # reject_speedup swings with queue depth and machine speed, so like
+    # cold_p50_speedup it gets a wide tolerance guarding the
+    # order-of-magnitude claim, not the exact ratio.
+    ("analysis_smoke", "reject_speedup", 0.9),
+    ("analysis_smoke", "valid_work_frac", 0.05),
 )
 
 

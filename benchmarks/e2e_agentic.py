@@ -1807,6 +1807,166 @@ def observability_rows(smoke: bool = False,
     ]
 
 
+# ---------------------------------------------------------------------------
+# pre-flight analysis benchmark: admission-time rejection vs execute-to-fail
+# ---------------------------------------------------------------------------
+
+def _invalid_batch(i: int, n_rows: int) -> PipelineBatch:
+    """A statically-invalid pipeline: an op no backend implements.  With
+    admission analysis OFF the job travels the whole queue before the
+    executor's compile step rejects it; ON, ``submit`` itself raises."""
+    from repro.core.dag import LazyOp, TRANSFORM
+    t = T.read("uk_housing", n_rows, seed=0)
+    bad = LazyOp(f"no_such_op_{i % 3}", TRANSFORM, inputs=(t,)).out()
+    return PipelineBatch([bad], [f"bad_{i}"])
+
+
+def _analysis_mode(admission: bool, rounds: int, n_variants: int,
+                   n_rows: int, invalid_every: int, jit_dir: str) -> dict:
+    """One mode of the analysis benchmark: the compiled section's
+    repeated-structure refinement flood with a fixed fraction of
+    statically-invalid submissions mixed in, admission analysis either
+    on or off.  Measures valid-traffic throughput and the wall time from
+    ``submit`` to the invalid jobs' verdicts."""
+    from repro.core.analysis import AnalysisError
+    svc = StratumService(memory_budget_bytes=2 << 30,
+                         jit_cache_dir=jit_dir,
+                         coalesce_window_s=0.0,
+                         n_executors=1,
+                         admission_analysis=admission)
+    try:
+        ses = svc.session("agent")
+        # invalid traffic rides its own tenant: with analysis off the
+        # coalescer would otherwise merge a bad job into a valid cohort
+        # and fail the whole merged compile
+        bad_ses = svc.session("adversary")
+        for w in (rounds, rounds + 1):        # warmup (see _compiled_mode)
+            ses.submit(_refinement_batch(w, n_variants, n_rows)
+                       ).result(timeout=600)
+        verdicts: list = []
+        vlock = threading.Lock()
+        valid_futures = []
+        n_invalid = sync_rejects = 0
+        t0 = time.perf_counter()
+        for r in range(rounds):
+            valid_futures.append(
+                ses.submit(_refinement_batch(r, n_variants, n_rows)))
+            if (r + 1) % invalid_every:
+                continue
+            n_invalid += 1
+            tb = time.perf_counter()
+            try:
+                fut = bad_ses.submit(_invalid_batch(r, n_rows))
+            except AnalysisError:             # rejected at submit
+                sync_rejects += 1
+                with vlock:
+                    verdicts.append(time.perf_counter() - tb)
+            else:                             # verdict rides the future
+
+                def _stamp(_f, tb=tb):
+                    with vlock:
+                        verdicts.append(time.perf_counter() - tb)
+                fut.add_done_callback(_stamp)
+        for f in valid_futures:
+            f.result(timeout=600)
+        makespan = time.perf_counter() - t0
+        deadline = time.perf_counter() + 120
+        while time.perf_counter() < deadline:
+            with vlock:
+                if len(verdicts) >= n_invalid:
+                    break
+            time.sleep(0.01)
+        snap = svc.telemetry.global_snapshot().get("analysis", {})
+    finally:
+        svc.stop()
+    return {
+        "admission": admission,
+        "makespan_s": makespan,
+        "pipelines_per_s": rounds * n_variants / makespan,
+        "n_invalid": n_invalid,
+        "rejected_at_submit": sync_rejects,
+        "verdict_mean_s": (sum(verdicts) / len(verdicts)) if verdicts
+        else float("inf"),
+        "verdict_max_s": max(verdicts) if verdicts else float("inf"),
+        "telemetry": snap,
+    }
+
+
+def run_analysis(rounds: int = 8, n_variants: int = 6, n_rows: int = 3000,
+                 invalid_every: int = 2, repeats: int = 2) -> dict:
+    """Pre-flight static analysis at admission (docs/ANALYSIS.md) on an
+    agent flood with a fixed invalid fraction.  Two gated metrics:
+
+    * ``reject_speedup`` — how much sooner an invalid submission gets its
+      verdict when rejected at submit instead of failing at the executor
+      behind the queue (must stay well above 1);
+    * ``valid_work_frac`` — 1 minus the fraction of the analyzed mode's
+      makespan spent inside the analyzer (from the telemetry ``analysis``
+      block, so cached verdicts count at their true ~zero cost); the
+      committed baseline pins it at 1.0, so the 0.05 gate tolerance IS
+      the analyzer-overhead budget (≤5% of valid-traffic wall time).
+
+    ``analyzed_over_plain`` (end-to-end throughput ratio, on vs off) is
+    also recorded, informationally: the true analyzer overhead is well
+    under the run-to-run makespan noise at smoke sizes, so the ratio
+    hovers around 1.0 and is not a stable gate."""
+    from repro.data.tabular import ensure_files
+    ensure_files("uk_housing", n_rows, 0)
+    jit_dir = "/tmp/repro_jit_cache"
+    # alternate modes and keep each mode's best repeat: a single ~1s
+    # makespan flakes on scheduler/compile noise, the min of two does not
+    plain = analyzed = None
+    for _ in range(repeats):
+        p = _analysis_mode(False, rounds, n_variants, n_rows,
+                           invalid_every, jit_dir)
+        a = _analysis_mode(True, rounds, n_variants, n_rows,
+                           invalid_every, jit_dir)
+        if plain is None or p["makespan_s"] < plain["makespan_s"]:
+            plain = p
+        if analyzed is None or a["makespan_s"] < analyzed["makespan_s"]:
+            analyzed = a
+    analyzer_s = float(analyzed["telemetry"].get("time_s", 0.0))
+    return {
+        "rounds": rounds,
+        "variants": n_variants,
+        "rows": n_rows,
+        "invalid_every": invalid_every,
+        "modes": {"plain": plain, "analyzed": analyzed},
+        "reject_speedup": (plain["verdict_mean_s"]
+                           / max(analyzed["verdict_mean_s"], 1e-9)),
+        "analyzed_over_plain": (analyzed["pipelines_per_s"]
+                                / plain["pipelines_per_s"]),
+        "valid_work_frac": max(
+            0.0, 1.0 - analyzer_s / analyzed["makespan_s"]),
+        # every invalid job was caught synchronously at submit, and every
+        # valid job still completed (a false rejection would have raised)
+        "all_rejected_at_submit": (analyzed["rejected_at_submit"]
+                                   == analyzed["n_invalid"]),
+        "analysis_telemetry": analyzed["telemetry"],
+    }
+
+
+def analysis_rows(smoke: bool = False,
+                  out: str = "BENCH_service.json") -> list:
+    kw = dict(rounds=6, n_variants=5, n_rows=2000, repeats=3) if smoke else {}
+    r = run_analysis(**kw)
+    key = "analysis_smoke" if smoke else "analysis"
+    write_service_json({key: r}, out, merge=True)
+    m = r["modes"]
+    return [
+        (f"{key}_verdict_plain", m["plain"]["verdict_mean_s"] * 1e6,
+         f"{m['plain']['n_invalid']}_invalid_execute_to_fail"),
+        (f"{key}_verdict_analyzed", m["analyzed"]["verdict_mean_s"] * 1e6,
+         f"reject_speedup={r['reject_speedup']:.1f}x"),
+        (f"{key}_throughput_ratio", r["analyzed_over_plain"] * 1e6,
+         "analyzed_over_plain (informational)"),
+        (f"{key}_valid_work_frac", r["valid_work_frac"] * 1e6,
+         "1-analyzer_overhead (gate: >=0.95)"),
+        (f"{key}_rejected_at_submit", float(r["all_rejected_at_submit"]),
+         f"{m['analyzed']['rejected_at_submit']}_sync_rejects"),
+    ]
+
+
 def main() -> None:
     import argparse
     ap = argparse.ArgumentParser()

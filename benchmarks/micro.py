@@ -11,7 +11,6 @@ from repro.core import PipelineBatch, Stratum
 from repro.core.cache import IntermediateCache
 from repro.core.dag import LazyOp, TRANSFORM
 from repro.core.selection import impls_for
-import repro.tabular as T
 
 
 def _time(fn, reps=3):

@@ -45,11 +45,16 @@ Sections:
                    windows vs static config on a two-phase flood
                    workload: probe attainment, batch-throughput parity
                    and retune count (merged into BENCH_service.json)
+  * analysis     — pre-flight static analysis at admission: agent flood
+                   with a fixed invalid fraction, admission analysis on
+                   vs off; records reject-at-submit verdict speedup and
+                   valid-traffic throughput ratio (merged into
+                   BENCH_service.json, analyzer overhead gated ≤5%)
 
 ``--smoke`` runs CI-sized variants of the ``service``, ``sharded``,
 ``compiled``, ``compiled_batched``, ``compiled_cold``, ``deadline``,
-``fabric_proc``, ``observability`` and
-``control`` sections (smaller rows / agents / rounds)
+``fabric_proc``, ``observability``, ``control`` and
+``analysis`` sections (smaller rows / agents / rounds)
 and records them under ``*_smoke`` keys, which
 ``benchmarks/check_regression.py`` gates against the committed baseline;
 the other sections ignore the flag.
@@ -157,6 +162,11 @@ def _control(args):
     return control_rows(smoke=args.smoke, out=args.out)
 
 
+def _analysis(args):
+    from .e2e_agentic import analysis_rows
+    return analysis_rows(smoke=args.smoke, out=args.out)
+
+
 SECTIONS = {
     "characterize": _characterize,
     "micro": _micro,
@@ -173,6 +183,7 @@ SECTIONS = {
     "fabric_proc": _fabric_proc,
     "observability": _observability,
     "control": _control,
+    "analysis": _analysis,
 }
 
 

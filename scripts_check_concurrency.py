@@ -1,0 +1,267 @@
+#!/usr/bin/env python
+"""Concurrency lint for the runtime itself (run by the CI ``lint`` job).
+
+The pre-flight analyzer (``docs/ANALYSIS.md``) checks *pipelines* before
+they run; this script points the same static-analysis discipline at the
+runtime's own source.  Two rule families, both AST-based:
+
+**blocking-under-lock** — a call that can block for unbounded time
+(``time.sleep``, blocking socket ops: ``accept``/``connect``/``recv*``/
+``sendall``/``makefile``, ``subprocess.run``/``check_output``) executed
+while a lock is held.  A ``with`` context manager counts as a held lock
+when its expression names a lock-ish attribute (``lock``, ``mutex``,
+``cv``, ``cond`` — a ``threading.Condition`` holds its lock between
+``wait`` calls).  ``Condition.wait``/``wait_for`` are *not* flagged:
+they release the lock while blocked.
+
+**unguarded-mutation** — mutation of an attribute annotated
+``# guarded-by: <lock>`` outside a ``with self.<lock>:`` block.
+Annotate at the attribute's initialisation site::
+
+    self._pending = {}        # guarded-by: _lock
+
+Flagged mutations: assignment, augmented assignment, subscript/attribute
+stores and deletes, and calls of known mutating methods (``append``,
+``pop``, ``update``, ...).  Reads are not flagged (many structures here
+tolerate racy reads by design; write races are what corrupt them).
+
+Waivers, for findings that are correct-by-construction:
+
+* line waiver — trailing ``# lint: allow-blocking`` or
+  ``# lint: allow-unguarded`` on the flagged line;
+* function waiver — ``# guarded-by: caller`` trailing the ``def`` line
+  treats every annotated lock as held for that function's whole body
+  (the idiom for ``_foo_locked``-style helpers whose caller holds the
+  lock).
+
+Exit 0 when clean, 1 with one ``path:line: rule: message`` per finding.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.abspath(__file__))
+DEFAULT_PATHS = ("src",)
+
+# context-manager expressions that hold a lock for the block's duration
+_LOCKISH = re.compile(r"(lock|mutex|_cv\b|cond)", re.IGNORECASE)
+
+# calls that can block for unbounded time
+_BLOCKING_MODULE_CALLS = {
+    ("time", "sleep"),
+    ("subprocess", "run"),
+    ("subprocess", "check_output"),
+    ("subprocess", "check_call"),
+    ("select", "select"),
+}
+_BLOCKING_SOCKET_METHODS = {
+    "accept", "connect", "recv", "recv_into", "recvfrom", "recvmsg",
+    "sendall", "makefile",
+}
+
+# method calls that mutate their receiver in place
+_MUTATORS = {
+    "append", "appendleft", "extend", "extendleft", "insert", "remove",
+    "pop", "popleft", "popitem", "clear", "add", "discard", "update",
+    "setdefault", "move_to_end", "sort", "reverse",
+}
+
+_GUARDED_RE = re.compile(
+    r"self\.(\w+)\s*(?::[^=]+)?=.*#\s*guarded-by:\s*(\w+)")
+_CALLER_HOLDS_RE = re.compile(r"#\s*guarded-by:\s*caller\b")
+_WAIVER_RE = re.compile(r"#\s*lint:\s*allow-(blocking|unguarded)\b")
+
+
+def _dotted(node: ast.AST) -> str:
+    """Best-effort dotted-name text of an expression (``self._lock``)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+class _FileLint(ast.NodeVisitor):
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.lines = source.splitlines()
+        self.findings: list[str] = []
+        # attr -> lock name, per enclosing class (built in a pre-pass)
+        self.guarded: dict[str, str] = {}
+        self._class_guarded: list[dict[str, str]] = []
+        # stack of (lock_text, line) for lock-ish `with` blocks
+        self._held: list[tuple[str, int]] = []
+        # locks treated as held for the whole current function
+        self._caller_holds: list[bool] = []
+
+    # -- helpers -----------------------------------------------------------
+    def _line(self, lineno: int) -> str:
+        return self.lines[lineno - 1] if 0 < lineno <= len(self.lines) else ""
+
+    def _waived(self, lineno: int, kind: str) -> bool:
+        m = _WAIVER_RE.search(self._line(lineno))
+        return bool(m and m.group(1) == kind)
+
+    def _emit(self, lineno: int, rule: str, msg: str) -> None:
+        self.findings.append(
+            f"{os.path.relpath(self.path, ROOT)}:{lineno}: {rule}: {msg}")
+
+    def _held_locks(self) -> list[str]:
+        return [text for text, _ in self._held]
+
+    def _lock_held(self, lock_attr: str) -> bool:
+        if self._caller_holds and self._caller_holds[-1]:
+            return True
+        want = f"self.{lock_attr}"
+        return any(text == want or text.endswith("." + lock_attr)
+                   for text in self._held_locks())
+
+    # -- pre-pass: collect guarded-by annotations --------------------------
+    def collect_guards(self) -> None:
+        for i, line in enumerate(self.lines, 1):
+            m = _GUARDED_RE.search(line)
+            if m:
+                self.guarded[m.group(1)] = m.group(2)
+
+    # -- with / function structure -----------------------------------------
+    def visit_With(self, node: ast.With) -> None:
+        pushed = 0
+        for item in node.items:
+            text = _dotted(item.context_expr)
+            if not text and isinstance(item.context_expr, ast.Call):
+                text = _dotted(item.context_expr.func)
+            if text and _LOCKISH.search(text):
+                self._held.append((text, node.lineno))
+                pushed += 1
+        for child in node.body:
+            self.visit(child)
+        for item in node.items:       # with-item expressions themselves
+            self.visit(item.context_expr)
+        for _ in range(pushed):
+            self._held.pop()
+
+    def _visit_function(self, node) -> None:
+        caller_holds = bool(
+            _CALLER_HOLDS_RE.search(self._line(node.lineno))
+            or _CALLER_HOLDS_RE.search(self._line(node.body[0].lineno - 1)))
+        self._caller_holds.append(caller_holds)
+        held, self._held = self._held, []   # a def body runs later, lock-free
+        self.generic_visit(node)
+        self._held = held
+        self._caller_holds.pop()
+
+    visit_FunctionDef = _visit_function
+    visit_AsyncFunctionDef = _visit_function
+
+    # -- rule: blocking call under a held lock -----------------------------
+    def visit_Call(self, node: ast.Call) -> None:
+        if self._held and not self._waived(node.lineno, "blocking"):
+            func = node.func
+            if isinstance(func, ast.Attribute):
+                owner = _dotted(func.value)
+                if (owner.split(".")[-1], func.attr) in _BLOCKING_MODULE_CALLS:
+                    self._emit(node.lineno, "blocking-under-lock",
+                               f"{owner}.{func.attr}() while holding "
+                               f"{self._held_locks()[-1]}")
+                elif (func.attr in _BLOCKING_SOCKET_METHODS
+                      and re.search(r"(sock|conn)", owner, re.IGNORECASE)):
+                    self._emit(node.lineno, "blocking-under-lock",
+                               f"socket {owner}.{func.attr}() while holding "
+                               f"{self._held_locks()[-1]}")
+        self.generic_visit(node)
+        self._check_mutator_call(node)
+
+    # -- rule: guarded attribute mutated without its lock ------------------
+    def _self_attr(self, node: ast.AST) -> str:
+        """``self.<attr>`` -> attr; also unwraps one subscript level."""
+        if isinstance(node, ast.Subscript):
+            node = node.value
+        if (isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "self"):
+            return node.attr
+        return ""
+
+    def _check_guard(self, node: ast.AST, lineno: int, what: str) -> None:
+        attr = self._self_attr(node)
+        lock = self.guarded.get(attr)
+        if not lock or self._lock_held(lock):
+            return
+        if self._waived(lineno, "unguarded"):
+            return
+        if _GUARDED_RE.search(self._line(lineno)):
+            return                     # the annotated initialisation itself
+        self._emit(lineno, "unguarded-mutation",
+                   f"{what} of self.{attr} (guarded-by: {lock}) outside "
+                   f"`with self.{lock}:`")
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        for target in node.targets:
+            self._check_guard(target, node.lineno, "assignment")
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self._check_guard(node.target, node.lineno, "augmented assignment")
+        self.generic_visit(node)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        if node.value is not None:
+            self._check_guard(node.target, node.lineno, "assignment")
+        self.generic_visit(node)
+
+    def visit_Delete(self, node: ast.Delete) -> None:
+        for target in node.targets:
+            self._check_guard(target, node.lineno, "delete")
+        self.generic_visit(node)
+
+    def _check_mutator_call(self, node: ast.Call) -> None:
+        func = node.func
+        if isinstance(func, ast.Attribute) and func.attr in _MUTATORS:
+            self._check_guard(func.value, node.lineno,
+                              f".{func.attr}() call")
+
+
+def lint_file(path: str) -> list[str]:
+    with open(path, encoding="utf-8") as f:
+        source = f.read()
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [f"{os.path.relpath(path, ROOT)}:{e.lineno}: "
+                f"syntax-error: {e.msg}"]
+    linter = _FileLint(path, source)
+    linter.collect_guards()
+    linter.visit(tree)
+    return linter.findings
+
+
+def main(argv: list[str]) -> int:
+    paths = argv[1:] or [os.path.join(ROOT, p) for p in DEFAULT_PATHS]
+    files: list[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            files.append(p)
+        else:
+            for dirpath, _dirnames, names in os.walk(p):
+                if "__pycache__" in dirpath:
+                    continue
+                files += [os.path.join(dirpath, n)
+                          for n in sorted(names) if n.endswith(".py")]
+    findings: list[str] = []
+    for path in sorted(files):
+        findings += lint_file(path)
+    for f in findings:
+        print(f)
+    print(f"checked {len(files)} file(s): "
+          f"{len(findings)} finding(s)", file=sys.stderr)
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

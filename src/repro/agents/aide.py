@@ -20,15 +20,17 @@ from __future__ import annotations
 
 import difflib
 import random
-from dataclasses import dataclass, field, replace
-from typing import Any, Iterator, Optional, Sequence
+from dataclasses import dataclass, replace
+from typing import Iterator, Optional, Sequence
 
 import numpy as np
 
 from ..core import PipelineBatch, annotate
 from ..core.dag import LazyOp, LazyRef, TRANSFORM
-from ..data.tabular import (CATEGORICAL, DATETIME, NUMERIC,
-                            UK_HOUSING_SCHEMA, feature_target_indices,
+from ..data.tabular import (CATEGORICAL,
+                            DATETIME,
+                            NUMERIC,
+                            feature_target_indices,
                             schema_dict)
 from .. import tabular as T
 
@@ -233,6 +235,10 @@ class AIDEAgent:
         self.n_drafts = n_drafts
         self.explore_first = explore_first
         self.nodes: list[SearchNode] = []
+        # specs a backend's pre-flight analyzer rejected (docs/ANALYSIS.md):
+        # the agent repairs by never re-proposing a known-invalid spec
+        self.rejected_specs: set = set()
+        self.rejection_rules: dict[str, int] = {}
 
     def _draft(self) -> PipelineSpec:
         return replace(
@@ -263,19 +269,47 @@ class AIDEAgent:
         # full redraft (large diff)
         return self._draft()
 
+    def _repair(self, candidates: list[PipelineSpec],
+                make: "Callable[[], PipelineSpec]") -> list[PipelineSpec]:
+        """Replace any known statically-invalid candidate with a fresh
+        proposal (bounded retries, so a pathological rejection set can
+        never spin the proposal loop forever)."""
+        if not self.rejected_specs:
+            return candidates
+        out = []
+        for spec in candidates:
+            for _ in range(8):
+                if spec not in self.rejected_specs:
+                    break
+                spec = make()
+            out.append(spec)
+        return out
+
     def propose(self, batch_size: int = 4) -> list[PipelineSpec]:
         if not self.nodes:
-            return [self._draft() for _ in range(min(batch_size,
-                                                     self.n_drafts))]
+            drafts = [self._draft() for _ in range(min(batch_size,
+                                                       self.n_drafts))]
+            return self._repair(drafts, self._draft)
         scored = [n for n in self.nodes if n.score is not None]
         scored.sort(key=lambda n: n.score)
         best = scored[0].spec if scored else self._draft()
-        return [self._mutate(best) for _ in range(batch_size)]
+        return self._repair([self._mutate(best) for _ in range(batch_size)],
+                            lambda: self._mutate(best))
 
     def observe(self, specs: Sequence[PipelineSpec],
                 scores: Sequence[float]) -> None:
         for sp, sc in zip(specs, scores):
             self.nodes.append(SearchNode(spec=sp, score=float(sc)))
+
+    def observe_rejection(self, specs: Sequence[PipelineSpec],
+                          error=None) -> None:
+        """Feed a pre-flight :class:`~repro.core.analysis.AnalysisError`
+        verdict back into the search: the rejected specs are remembered
+        (``propose`` will not re-draw them) and the violated rules are
+        tallied for introspection."""
+        self.rejected_specs.update(specs)
+        for rule in getattr(error, "rules", ()):
+            self.rejection_rules[rule] = self.rejection_rules.get(rule, 0) + 1
 
     def best(self) -> Optional[SearchNode]:
         scored = [n for n in self.nodes if n.score is not None]
@@ -413,6 +447,7 @@ class AsyncAIDESearch:
         self.speculative_batches = 0    # precompile hints actually sent
         self.reports: list = []
         self.deadlines_missed = 0   # refinement rounds shed past their SLO
+        self.analysis_rejections = 0  # rounds rejected by pre-flight analysis
 
     def _submit(self, round_idx: int):
         specs = self.agent.propose(self.batch_size)
@@ -423,20 +458,29 @@ class AsyncAIDESearch:
         refining = any(n.score is not None for n in self.agent.nodes)
         prio = self.refine_priority if refining else self.draft_priority
         deadline = self.deadline_s if refining else None
-        if self._supports_options:
-            from ..client import SubmitOptions
-            future = self.session.submit(batch, options=SubmitOptions(
-                priority=prio, affinity=self._affinity,
-                deadline_s=deadline))
-        else:
-            kwargs: dict = {}
-            if self._supports_priority:
-                kwargs["priority"] = prio
-                if deadline is not None:
-                    kwargs["deadline_s"] = deadline
-            if self._affinity is not None:
-                kwargs["affinity"] = self._affinity
-            future = self.session.submit(batch, **kwargs)
+        from ..core.analysis import AnalysisError
+        try:
+            if self._supports_options:
+                from ..client import SubmitOptions
+                future = self.session.submit(batch, options=SubmitOptions(
+                    priority=prio, affinity=self._affinity,
+                    deadline_s=deadline))
+            else:
+                kwargs: dict = {}
+                if self._supports_priority:
+                    kwargs["priority"] = prio
+                    if deadline is not None:
+                        kwargs["deadline_s"] = deadline
+                if self._affinity is not None:
+                    kwargs["affinity"] = self._affinity
+                future = self.session.submit(batch, **kwargs)
+        except AnalysisError as e:
+            # the backend's admission analyzer rejected the round before
+            # execution: repair instead of crash — the agent blacklists
+            # the specs and the next propose() re-draws around them
+            self.analysis_rejections += 1
+            self.agent.observe_rejection(specs, e)
+            return None
         if self._speculate and refining:
             self._precompile_neighbors()
         return specs, names, future
@@ -460,7 +504,15 @@ class AsyncAIDESearch:
         try:
             results, report = future.result()
         except Exception as e:  # noqa: BLE001 — narrow re-raise below
+            from ..core.analysis import AnalysisError
             from ..service.queue import DeadlineExceeded
+            if isinstance(e, AnalysisError):
+                # a shard-side analyzer rejected the round asynchronously
+                # (e.g. the out-of-process fabric, where the verdict rides
+                # a ResultEnvelope): same repair path as the sync raise
+                self.analysis_rejections += 1
+                self.agent.observe_rejection(specs, e)
+                return
             if not isinstance(e, DeadlineExceeded):
                 raise
             # a refinement missed its SLO and was shed: the search simply
@@ -476,7 +528,10 @@ class AsyncAIDESearch:
         from collections import deque
         inflight: deque = deque()
         for round_idx in range(n_rounds):
-            inflight.append(self._submit(round_idx))
+            sub = self._submit(round_idx)
+            if sub is None:     # round rejected at admission; repaired
+                continue
+            inflight.append(sub)
             # only block once the pipeline of in-flight work is full, so
             # proposal of the next round overlaps execution of this one
             while len(inflight) >= self.max_inflight:

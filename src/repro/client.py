@@ -53,6 +53,8 @@ from abc import ABC, abstractmethod
 from dataclasses import dataclass, field, replace
 from typing import Any, Optional, Tuple
 
+from .core.analysis import AnalysisError, AnalysisReport
+from .core.analysis import analyze as _static_analyze
 from .core.api import (ALL_FEATURES, _DEFAULT_CACHE_FRACTION,
                        _DEFAULT_PLAN_CACHE_ENTRIES, Stratum)
 from .core.fusion import PipelineBatch
@@ -65,10 +67,10 @@ from .service.session import PipelineFuture
 from .service.fabric import StratumFabric
 
 __all__ = [
-    "CacheConfig", "ControlPolicy", "DeadlineExceeded", "FabricTarget",
-    "LocalTarget", "OptimizerConfig", "RuntimeConfig", "ServiceTuning",
-    "ServiceTarget", "StratumClient", "StratumConfig", "SubmitOptions",
-    "connect",
+    "AnalysisError", "AnalysisReport", "CacheConfig", "ControlPolicy",
+    "DeadlineExceeded", "FabricTarget", "LocalTarget", "OptimizerConfig",
+    "RuntimeConfig", "ServiceTuning", "ServiceTarget", "StratumClient",
+    "StratumConfig", "SubmitOptions", "connect",
 ]
 
 
@@ -90,7 +92,13 @@ class SubmitOptions:
       where there is only one place to run;
     * ``tenant`` — overrides the client's default tenant for this job;
     * ``tags`` — opaque strings echoed back on the job report (and across
-      the fabric wire), for caller-side bookkeeping.
+      the fabric wire), for caller-side bookkeeping;
+    * ``verify`` — per-submit override of the target's pre-flight static
+      analysis default (``ServiceTuning.admission_analysis``): ``True``
+      analyzes the batch before admission and raises
+      :class:`~repro.core.analysis.AnalysisError` from ``submit`` when it
+      is statically invalid, ``False`` skips the check, ``None`` defers
+      to the target's configured default.
     """
 
     priority: Priority = Priority.BATCH
@@ -98,10 +106,14 @@ class SubmitOptions:
     affinity: Optional[str] = None
     tenant: Optional[str] = None
     tags: Tuple[str, ...] = ()
+    verify: Optional[bool] = None
 
     def __post_init__(self) -> None:
         object.__setattr__(self, "priority", Priority(self.priority))
         object.__setattr__(self, "tags", tuple(self.tags))
+        if self.verify is not None and not isinstance(self.verify, bool):
+            raise ValueError(
+                f"verify must be True, False or None, got {self.verify!r}")
         if self.deadline_s is not None and not self.deadline_s > 0:
             raise ValueError(
                 f"deadline_s must be positive, got {self.deadline_s!r} "
@@ -162,6 +174,10 @@ class ServiceTuning:
     sharding.  Ignored by the local target (which has no queue)."""
     max_queued_total: int = 1024
     max_queued_per_tenant: int = 256
+    # pre-flight static analysis at admission (docs/ANALYSIS.md): reject
+    # statically-invalid pipelines at submit with AnalysisError instead of
+    # failing them mid-execution.  SubmitOptions.verify overrides per job.
+    admission_analysis: bool = False
     coalesce_window_s: float = 0.02
     coalesce_max_jobs: int = 16
     max_jobs_per_tenant_per_round: int = 2
@@ -285,6 +301,7 @@ class StratumConfig:
             jit_cache_dir=self.runtime.jit_cache_dir,
             max_queued_total=s.max_queued_total,
             max_queued_per_tenant=s.max_queued_per_tenant,
+            admission_analysis=s.admission_analysis,
             coalesce_window_s=s.coalesce_window_s,
             coalesce_max_jobs=s.coalesce_max_jobs,
             max_jobs_per_tenant_per_round=s.max_jobs_per_tenant_per_round,
@@ -363,6 +380,17 @@ class StratumClient(ABC):
         honor the hint return ``{}`` — it is never an error to guess."""
         return {}
 
+    def analyze(self, batch: PipelineBatch, *,
+                feasibility: bool = True) -> AnalysisReport:
+        """Pre-flight static analysis of ``batch`` without executing it
+        (see ``docs/ANALYSIS.md``): wiring/schema validation, shape and
+        dtype inference, pipeline lint, and — with ``feasibility=True`` —
+        compile-feasibility classification of the planned segments.
+        Returns a typed :class:`~repro.core.analysis.AnalysisReport`;
+        never raises on an invalid pipeline (call
+        ``report.raise_if_invalid()`` for the raising form)."""
+        raise NotImplementedError  # pragma: no cover - every target overrides
+
     # -- observability / lifecycle ----------------------------------------
     @property
     @abstractmethod
@@ -419,6 +447,9 @@ class _ClientSession:
 
     def precompile(self, batch: PipelineBatch) -> dict:
         return self._client.precompile(batch)
+
+    def analyze(self, batch: PipelineBatch, *, feasibility: bool = True):
+        return self._client.analyze(batch, feasibility=feasibility)
 
     @property
     def telemetry(self) -> dict:
@@ -491,6 +522,13 @@ class LocalTarget(StratumClient):
     def submit(self, batch: PipelineBatch,
                options: Optional[SubmitOptions] = None) -> PipelineFuture:
         opts = self._resolve(options)
+        do_verify = (opts.verify if opts.verify is not None
+                     else self.config.service.admission_analysis)
+        if do_verify:
+            # raise synchronously, matching the queued targets' raise-at-
+            # submit admission semantics (AdmissionError parity)
+            self._stratum.analyze_batch(
+                batch, feasibility=False).raise_if_invalid()
         future = PipelineFuture(next(self._job_ids), opts.tenant,
                                 opts.priority)
         t0 = time.perf_counter()
@@ -514,6 +552,10 @@ class LocalTarget(StratumClient):
 
     def precompile(self, batch: PipelineBatch) -> dict:
         return self._stratum.precompile_batch(batch)
+
+    def analyze(self, batch: PipelineBatch, *,
+                feasibility: bool = True) -> AnalysisReport:
+        return self._stratum.analyze_batch(batch, feasibility=feasibility)
 
     @property
     def telemetry(self) -> _LocalTelemetry:
@@ -556,10 +598,14 @@ class ServiceTarget(StratumClient):
         return self._service.submit(
             opts.tenant, batch, priority=opts.priority,
             affinity=opts.affinity, deadline_s=opts.deadline_s,
-            tags=opts.tags)
+            tags=opts.tags, verify=opts.verify)
 
     def precompile(self, batch: PipelineBatch) -> dict:
         return self._service.precompile(self.tenant, batch)
+
+    def analyze(self, batch: PipelineBatch, *,
+                feasibility: bool = True) -> AnalysisReport:
+        return self._service.analyze(batch, feasibility=feasibility)
 
     @property
     def telemetry(self):
@@ -624,10 +670,30 @@ class FabricTarget(StratumClient):
     def submit(self, batch: PipelineBatch,
                options: Optional[SubmitOptions] = None) -> PipelineFuture:
         opts = self._resolve(options)
+        do_verify = (opts.verify if opts.verify is not None
+                     else self.config.service.admission_analysis)
+        if do_verify:
+            # verify on the client side of the envelope boundary: a
+            # statically-invalid pipeline never pays the fabric round trip
+            # (worker shards additionally enforce admission_analysis from
+            # their own ServiceConfig)
+            self.analyze(batch, feasibility=False).raise_if_invalid()
         return self._fabric.submit(
             opts.tenant, batch, priority=opts.priority,
             affinity=opts.affinity, deadline_s=opts.deadline_s,
             tags=opts.tags)
+
+    def analyze(self, batch: PipelineBatch, *,
+                feasibility: bool = True) -> AnalysisReport:
+        # the shards live behind the wire (possibly in other processes),
+        # so analysis runs client-side against the same config
+        return _static_analyze(
+            batch,
+            platform=self.config.optimizer.platform,
+            memory_budget_bytes=self.config.runtime.memory_budget_bytes,
+            lowering="lowering" in self.config.optimizer.enable,
+            feasibility=feasibility,
+            segment_time_budget_s=self.config.runtime.segment_time_budget_s)
 
     @property
     def telemetry(self):

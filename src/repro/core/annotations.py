@@ -14,9 +14,9 @@ adjust execution:
 
 from __future__ import annotations
 
-from typing import Any, Mapping, Sequence
+from typing import Any
 
-from .dag import LazyOp, LazyRef, rebuild
+from .dag import LazyRef
 
 KNOWN_KEYS = ("stage", "budget_s", "diff_of", "fidelity")
 

@@ -12,16 +12,15 @@ backends), ``parallel`` (inter-op), ``cache`` (intermediate reuse).
 
 from __future__ import annotations
 
-import os
-import tempfile
 import time
 import warnings
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Optional, Sequence
 
+from .analysis import AnalysisError, AnalysisReport, analyze, validate_wiring
 from .backends import make_backends
 from .cache import CacheStats, IntermediateCache, mark_cache_candidates
-from .dag import LazyOp, LazyRef, count_ops
+from .dag import LazyRef, count_ops
 from .fusion import PipelineBatch
 from .lowering import lower
 from .metadata import collect_metadata
@@ -180,6 +179,13 @@ class Stratum:
         """Optimization-only path (for tests and plan inspection)."""
         t0 = time.perf_counter()
         sinks = batch.fused_sinks()
+        # always-on structural validation: malformed wiring fails HERE,
+        # deterministically, with one structured error type — never as an
+        # op-dependent ExecutionError whose message varies with wave layout
+        wiring_errors = [f for f in validate_wiring(sinks)
+                         if f.severity == "error"]
+        if wiring_errors:
+            raise AnalysisError(wiring_errors)
         ops_submitted = count_ops(sinks)
 
         if "lowering" in self.enable:
@@ -237,6 +243,30 @@ class Stratum:
     def run(self, sink: LazyRef, name: str = "pipeline_0"):
         results, report = self.run_batch(PipelineBatch([sink], [name]))
         return results[name], report
+
+    # ------------------------------------------------------------------
+    def analyze_batch(self, batch: PipelineBatch, *,
+                      feasibility: bool = True,
+                      verify_segments: bool = True,
+                      extra_roots: Sequence[LazyRef] = ()
+                      ) -> AnalysisReport:
+        """Statically analyze ``batch`` without executing it.
+
+        With ``verify_segments`` (and compiled segments on), predicted jax
+        segments are built and ``eval_shape``-probed against the inferred
+        avals; successful probes are marked pre-verified on the backend so
+        the first real dispatch skips its execute-time probe."""
+        jax_be = (self._backends.get("jax")
+                  if verify_segments and self.compiled_segments else None)
+        allowed = (("python", "jax", "pallas") if "selection" in self.enable
+                   else ("python",))
+        return analyze(
+            batch, platform=self.platform,
+            memory_budget_bytes=self.memory_budget_bytes,
+            lowering="lowering" in self.enable,
+            feasibility=feasibility, allowed_backends=allowed,
+            segment_time_budget_s=self.segment_time_budget_s,
+            extra_roots=extra_roots, jax_backend=jax_be)
 
     # ------------------------------------------------------------------
     def precompile_batch(self, batch: PipelineBatch) -> dict:

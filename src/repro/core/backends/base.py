@@ -28,7 +28,7 @@ runtime loop changes.
 from __future__ import annotations
 
 from abc import ABC, abstractmethod
-from typing import Callable, Optional
+from typing import Callable
 
 
 class ExecutionBackend(ABC):

@@ -143,6 +143,12 @@ class JaxSegmentBackend(ExecutionBackend):
         self._uncompilable: "OrderedDict" = OrderedDict()
         self._uncompilable_max = max(1, int(uncompilable_max))
         self._unc_lock = threading.Lock()
+        # keys whose eval_shape probe the static analyzer already
+        # discharged (analysis.preverify_segment): first dispatch builds
+        # and jits without re-probing.  Advisory only — a key absent here
+        # just probes as before.  Shares _unc_lock with _uncompilable.
+        self._preverified: "OrderedDict" = OrderedDict()
+        self._preverified_max = max(1, int(uncompilable_max))
         # observed avals of segment-external inputs, keyed by the input
         # ref's full signature: speculative precompiles warm with the
         # exact runtime (shape, dtype) instead of trusting inferred
@@ -234,6 +240,73 @@ class JaxSegmentBackend(ExecutionBackend):
                 self._uncompilable.popitem(last=False)
             n = len(self._uncompilable)
         self.plan_cache.note_uncompilable(n)
+
+    # -- statically pre-verified segments (analysis feasibility pass) ---
+
+    def mark_preverified(self, key) -> None:
+        with self._unc_lock:
+            self._preverified[key] = True
+            self._preverified.move_to_end(key)
+            while len(self._preverified) > self._preverified_max:
+                self._preverified.popitem(last=False)
+
+    def _is_preverified(self, key) -> bool:
+        with self._unc_lock:
+            return key in self._preverified
+
+    def preverify_segment(self, segment, selection, infos):
+        """Statically discharge a segment's first-dispatch probe.
+
+        Builds the segment program exactly as ``_run_compiled`` would and
+        ``eval_shape``-probes it on the analyzer's inferred input avals
+        (``infos``: op signature -> list[TensorInfo]).  On success the
+        plan-cache key is marked pre-verified and returned; on failure
+        returns None and changes nothing — inferred avals may be less
+        precise than runtime values, so a static miss must never poison
+        the runtime's own probe.  Never executes or compiles."""
+        compute: list = []
+        produced: set = set()
+        for wave in segment.waves:
+            for op in wave.ops:
+                if op.signature in produced:
+                    continue
+                compute.append(op)
+                produced.add(op.signature)
+        if not compute or any(op.signature not in selection
+                              for op in compute):
+            return None
+        in_specs, ext_keys = self._wiring(compute)
+        hoists = tuple(tuple(sorted(tunable_fields(op.op_name)
+                                    & set(op.spec))) for op in compute)
+        ssigs = tuple(op.structural_signature for op in compute)
+        impl_ids = tuple(id(selection[op.signature]) for op in compute)
+        key = (self._key_tag, ssigs, in_specs, impl_ids)
+        ext_info: dict = {}
+        for op in compute:
+            for r in op.inputs:
+                if r.op.signature in produced:
+                    continue
+                outs = infos.get(r.op.signature)
+                if outs is None or r.index >= len(outs):
+                    return None
+                ext_info[r.signature] = outs[r.index]
+        try:
+            ext_example = tuple(
+                jax.ShapeDtypeStruct(tuple(ext_info[k].shape),
+                                     np.dtype(ext_info[k].dtype))
+                for k in ext_keys)
+            hoist_example = tuple(op.spec[f]
+                                  for op, fs in zip(compute, hoists)
+                                  for f in fs)
+            protos = [_TracedOp.of(op) for op in compute]
+            impl_fns = [selection[op.signature].fn for op in compute]
+            seg_fn, _jitted = self._build(protos, impl_fns, in_specs,
+                                          hoists, ())
+            jax.eval_shape(seg_fn, ext_example, hoist_example)
+        except Exception:  # noqa: BLE001 — advisory probe, stay silent
+            return None
+        self.mark_preverified(key)
+        return key
 
     # -- observed input avals (speculative warm-up fidelity) -----------
 
@@ -368,6 +441,12 @@ class JaxSegmentBackend(ExecutionBackend):
         for gs in ((groups, ()) if groups else ((),)):
             seg_fn, jitted = self._build(protos, impl_fns, in_specs,
                                          hoists, gs)
+            if not gs and self._is_preverified(key):
+                # the static analyzer already eval_shape-probed this exact
+                # build (analysis feasibility pass) — skip the re-probe.
+                # Batched (gs) builds still probe: vmap-liftability is a
+                # separate question the analyzer does not answer.
+                return jitted
             try:
                 jax.eval_shape(seg_fn, ext_example, hoist_example)
                 return jitted

@@ -27,7 +27,6 @@ from __future__ import annotations
 import os
 import pickle
 import threading
-import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Optional, Sequence

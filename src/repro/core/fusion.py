@@ -18,11 +18,11 @@ from __future__ import annotations
 
 from collections import defaultdict
 from dataclasses import dataclass, field
-from typing import Any, Optional, Sequence
+from typing import Any, Sequence
 
 import hashlib
 
-from .dag import LazyOp, LazyRef, toposort
+from .dag import LazyRef, toposort
 
 
 @dataclass

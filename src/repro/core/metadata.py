@@ -16,11 +16,11 @@ exactly the paper's "black-box UDF" caveat (§5 challenge 3).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Callable, Optional, Sequence
+from typing import Callable, Sequence
 
 import numpy as np
 
-from .dag import CONST, GENERIC, LazyOp, LazyRef, SOURCE, toposort
+from .dag import CONST, GENERIC, LazyOp, LazyRef, toposort
 
 
 @dataclass

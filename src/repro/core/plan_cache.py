@@ -212,10 +212,10 @@ class PlanCache:
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         self.capacity = capacity
-        self._entries: "OrderedDict[Hashable, Any]" = OrderedDict()
+        self._entries: "OrderedDict[Hashable, Any]" = OrderedDict()  # guarded-by: _lock
         self._lock = threading.Lock()
         self.stats = PlanCacheStats()
-        self._speculative: set = set()   # keys inserted ahead of demand
+        self._speculative: set = set()   # guarded-by: _lock
         self.executor: Optional[CompileExecutor] = None
         if compile_async:
             self.executor = CompileExecutor(

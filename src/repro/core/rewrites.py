@@ -10,13 +10,21 @@ sharing across fused pipelines *before* pushdown specializes subgraphs.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, Optional, Sequence
+from dataclasses import dataclass
+from typing import Optional, Sequence
 
 import numpy as np
 
-from .dag import (CONST, FILTER, GENERIC, LazyOp, LazyRef, PROJECT, SOURCE,
-                  TRANSFORM, count_ops, rebuild, toposort)
+from .dag import (CONST,
+                  GENERIC,
+                  LazyOp,
+                  LazyRef,
+                  PROJECT,
+                  SOURCE,
+                  TRANSFORM,
+                  count_ops,
+                  rebuild,
+                  toposort)
 
 # ---------------------------------------------------------------------------
 # structural properties: which transforms commute with column projection

@@ -22,7 +22,7 @@ is annotated ``stage=explore``.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Optional, Sequence
 
 import jax

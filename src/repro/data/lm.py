@@ -18,7 +18,6 @@ an indexed tokenized store, keeping the addressing scheme.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
 
 import numpy as np
 

@@ -14,7 +14,6 @@ explicitly.  NaN encodes missingness.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional
 
 import numpy as np
 

@@ -18,7 +18,6 @@ import jax.numpy as jnp
 
 from ..common import backend
 from .kernel import ce_forward_pallas
-from .ref import cross_entropy_ref  # noqa: F401  (re-exported for tests)
 
 _CHUNK_V = 8192
 

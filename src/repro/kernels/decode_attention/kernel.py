@@ -43,7 +43,6 @@ def _dec_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_out, l_out,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    b = pl.program_id(0)
     valid_len = len_ref[0]
     s_start = si * block_s
 

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs import get_config, reduced as reduce_cfg
-from ..models.model import init_decode_state, init_params, prefill
+from ..models.model import init_params, prefill
 from ..serve.batcher import Batcher, Request
 from ..serve.step import make_decode_step
 

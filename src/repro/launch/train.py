@@ -14,17 +14,14 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import os
 import time
 
 import jax
-import numpy as np
 
 from ..configs import get_config, reduced as reduce_cfg
 from ..data.lm import DataConfig, global_batch_at
 from ..distributed.context import use_context
-from ..distributed.policy import (input_pspecs, make_policy, param_pspecs,
-                                  tree_shardings)
+from ..distributed.policy import make_policy, param_pspecs, tree_shardings
 from ..models.config import ShapeConfig
 from ..models.model import init_params
 from ..optim import cosine_schedule, pick_optimizer

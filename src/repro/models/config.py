@@ -2,8 +2,7 @@
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
-from typing import Optional
+from dataclasses import dataclass
 
 
 def pad_to(x: int, m: int) -> int:
@@ -110,7 +109,6 @@ class ModelConfig:
             di, N, H = self.d_inner, self.ssm_state, self.ssm_heads
             mamba = D * (2 * di + 2 * N + H) + di * D + self.conv_kernel * di \
                 + 2 * H + 2 * D
-            n_attn = self.n_layers // max(self.attn_every, 1)
             dh = self.d_head
             shared_attn = D * (self.n_heads * dh) * 2 \
                 + D * (self.n_kv_heads * dh) * 2 + 3 * D * self.d_ff + 2 * D

@@ -7,7 +7,6 @@ annotations via ``repro.distributed.shard``.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
 import jax

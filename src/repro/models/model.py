@@ -17,8 +17,7 @@ layers.  Non-uniform families use nested scans over uniform segments:
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -339,7 +338,6 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
                 "len": jnp.zeros((batch,), jnp.int32)}
     if cfg.family == "hybrid":
         n_groups = cfg.n_layers // cfg.attn_every
-        tail = cfg.n_layers - n_groups * cfg.attn_every
         di, N, H, P_ = (cfg.d_inner, cfg.ssm_state, cfg.ssm_heads,
                         cfg.ssm_head_dim)
         return {
@@ -373,7 +371,6 @@ def decode_step(params, state: dict, token_or_embed, cfg: ModelConfig):
         x = embed(params["embed"], token_or_embed, cfg)
     else:
         x = token_or_embed.astype(dtype_of(cfg))
-    B = x.shape[0]
     cache_len = state["len"]
 
     if cfg.family in ("dense", "moe", "vlm", "audio"):

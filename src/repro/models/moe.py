@@ -18,8 +18,6 @@ matmul kernel with equal group sizes.
 
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -62,7 +60,6 @@ def _moe_local(params, x_flat, cfg: ModelConfig, n_local: int,
     params weights are the local slice (n_local, D, F)."""
     T, D = x_flat.shape
     k = cfg.top_k
-    E = cfg.n_experts_padded
     # capacity per expert sized over REAL experts (padding never receives
     # tokens, so sizing over E_padded would undersize every real bucket)
     capacity = int(max(1, -(-T * k // cfg.n_experts) * CAPACITY_FACTOR))

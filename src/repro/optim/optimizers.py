@@ -11,9 +11,8 @@ HBM × 256.
 
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

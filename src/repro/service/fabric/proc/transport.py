@@ -67,7 +67,7 @@ class ProcTransport(Transport):
         self._gen = 0              # bumps per attach; stale readers exit
         self._dead = False         # kill(): crashed peer, drop everything
         self._closed = False       # close(): orderly drain, no new jobs
-        self._inflight = 0         # jobs sent minus result frames received
+        self._inflight = 0         # guarded-by: _lock
         self.jobs_sent = 0
         self.results_received = 0
         self.cancels_sent = 0

@@ -73,9 +73,9 @@ class _Pending:
 class ShardRouter:
     def __init__(self, vnodes: int = 64):
         self._ring = ConsistentHashRing(vnodes=vnodes)
-        self._transports: dict[str, Transport] = {}
-        self._pending: dict[str, _Pending] = {}
-        self._last_shard_for_key: "OrderedDict[str, str]" = OrderedDict()
+        self._transports: dict[str, Transport] = {}    # guarded-by: _lock
+        self._pending: dict[str, _Pending] = {}          # guarded-by: _lock
+        self._last_shard_for_key: "OrderedDict[str, str]" = OrderedDict()  # guarded-by: _lock
         self._lock = threading.RLock()
         self._drained = threading.Condition(self._lock)
         # fabric-level counters (read by FabricTelemetry)

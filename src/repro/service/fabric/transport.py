@@ -28,6 +28,7 @@ import threading
 from abc import ABC, abstractmethod
 from typing import Callable, Optional
 
+from ...core.analysis import AnalysisError
 from ..queue import AdmissionError
 from .envelope import (ResultEnvelope, decode_cancel, decode_job,
                        encode_result, FabricJobReport)
@@ -122,7 +123,7 @@ class LocalTransport(Transport):
         # envelope_id -> (shard-local PipelineFuture, attempt), kept so a
         # CancelEnvelope can reach into the shard's queue; entries leave
         # on the terminal reply
-        self._inflight: dict[str, tuple] = {}
+        self._inflight: dict[str, tuple] = {}       # guarded-by: _lock
         self.jobs_received = 0
         self.results_sent = 0
         self.cancels_received = 0
@@ -148,11 +149,12 @@ class LocalTransport(Transport):
                                          tags=env.tags,
                                          trace_key=env.envelope_id,
                                          trace_hops=env.hops)
-        except AdmissionError:
-            # in-process shard: backpressure propagates synchronously so
-            # Session.submit keeps its documented raises-AdmissionError
-            # contract.  (A remote transport cannot do this and would
-            # deliver the rejection via a ResultEnvelope instead.)
+        except (AdmissionError, AnalysisError):
+            # in-process shard: backpressure and pre-flight analysis
+            # rejections propagate synchronously so Session.submit keeps
+            # its documented raises-at-submit contract.  (A remote
+            # transport cannot do this and would deliver the rejection
+            # via a ResultEnvelope instead.)
             raise
         except Exception as e:     # noqa: BLE001 — anything else at submit
             self._reply(ResultEnvelope(

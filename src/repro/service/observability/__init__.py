@@ -7,16 +7,16 @@ replayable via ``python -m repro.service.observability.replay``).
 """
 
 from .events import TraceLog, TraceSink, hop_record, record_hop
-from .trace import (ADMITTED, CANCELLED, COALESCED, COMPLETED, DISPATCHED,
-                    EVENTS, FAILED, FAILOVER, PREEMPTED, QUEUED, REQUEUED,
-                    RETUNED, ROUTED, SHED, SUBMITTED, TERMINAL, JobTrace,
-                    make_hop)
+from .trace import (ADMITTED, ANALYZED, CANCELLED, COALESCED, COMPLETED,
+                    DISPATCHED, EVENTS, FAILED, FAILOVER, PREEMPTED, QUEUED,
+                    REQUEUED, RETUNED, ROUTED, SHED, SUBMITTED, TERMINAL,
+                    JobTrace, make_hop)
 from .windows import (MAX_SAMPLES, ThroughputCollector,
                       merge_window_snapshots, percentile)
 
 __all__ = [
     "JobTrace", "make_hop", "EVENTS", "TERMINAL",
-    "SUBMITTED", "ADMITTED", "QUEUED", "COALESCED", "DISPATCHED",
+    "SUBMITTED", "ANALYZED", "ADMITTED", "QUEUED", "COALESCED", "DISPATCHED",
     "PREEMPTED", "REQUEUED", "ROUTED", "FAILOVER", "RETUNED", "COMPLETED",
     "FAILED", "SHED", "CANCELLED",
     "TraceSink", "TraceLog", "hop_record", "record_hop",

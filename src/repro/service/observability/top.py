@@ -50,7 +50,9 @@ def render(snapshot: dict) -> str:
              " submitted / "
              f"{snapshot.get('jobs_completed', win.get('completed', 0))}"
              " done / "
-             f"{snapshot.get('jobs_preempted', snapshot.get('preemptions', win.get('preempted', 0)))}"
+             f"""{snapshot.get('jobs_preempted',
+                               snapshot.get('preemptions',
+                                            win.get('preempted', 0)))}"""
              " preempted / "
              f"{snapshot.get('jobs_cancelled', 0)} cancelled"]
     dl = snapshot.get("deadline") or {}

@@ -26,6 +26,7 @@ from typing import Optional
 
 # lifecycle events, in rough pipeline order
 SUBMITTED = "submitted"
+ANALYZED = "analyzed"      # pre-flight static analysis verdict at admission
 ADMITTED = "admitted"
 QUEUED = "queued"
 COALESCED = "coalesced"
@@ -44,9 +45,9 @@ CANCELLED = "cancelled"
 RETUNED = "retuned"
 
 #: every known event, in canonical lifecycle order (used by replay + tests)
-EVENTS = (SUBMITTED, ADMITTED, QUEUED, COALESCED, DISPATCHED, PREEMPTED,
-          REQUEUED, ROUTED, FAILOVER, RETUNED, COMPLETED, FAILED, SHED,
-          CANCELLED)
+EVENTS = (SUBMITTED, ANALYZED, ADMITTED, QUEUED, COALESCED, DISPATCHED,
+          PREEMPTED, REQUEUED, ROUTED, FAILOVER, RETUNED, COMPLETED,
+          FAILED, SHED, CANCELLED)
 
 #: events that terminate a trace — exactly one may appear, and only last
 TERMINAL = (COMPLETED, FAILED, SHED, CANCELLED)

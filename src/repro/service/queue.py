@@ -147,13 +147,13 @@ class FairQueue:
         # band → (tenant → FIFO); OrderedDict gives intra-band round-robin
         self._bands: dict[int, "OrderedDict[str, deque[Job]]"] = {
             int(p): OrderedDict() for p in Priority}
-        self._credits: dict[int, float] = {int(p): 0.0 for p in Priority}
-        self._tenant_total: dict[str, int] = {}
-        self._total = 0
+        self._credits: dict[int, float] = {int(p): 0.0 for p in Priority}   # guarded-by: _lock
+        self._tenant_total: dict[str, int] = {}        # guarded-by: _lock
+        self._total = 0                            # guarded-by: _lock
         # deadline-carrying jobs currently queued: the shed scan and the
         # EDF ordering are O(queued) per round, so with zero deadline jobs
         # (the common case) both must cost nothing
-        self._deadline_total = 0
+        self._deadline_total = 0                   # guarded-by: _lock
         self._lock = threading.Lock()
         self._not_empty = threading.Condition(self._lock)
         self._closed = False
@@ -274,7 +274,7 @@ class FairQueue:
                 else:
                     del tenants[tenant]
 
-    def _select_band_locked(self) -> Optional[int]:
+    def _select_band_locked(self) -> Optional[int]:  # guarded-by: caller
         """Weighted-fair band choice (surplus round-robin over credits)."""
         nonempty = [b for b in sorted(self._bands) if self._bands[b]]
         if not nonempty:
@@ -292,7 +292,7 @@ class FairQueue:
                                      for b in candidates)
         return chosen
 
-    def _shed_expired_locked(self, now: float) -> list[Job]:
+    def _shed_expired_locked(self, now: float) -> list[Job]:  # guarded-by: caller
         """Remove every queued job whose deadline already passed.
 
         Returns the shed jobs; the caller fails their futures OUTSIDE the
@@ -337,7 +337,7 @@ class FairQueue:
 
     def _take_locked(self, tenants, tenant: str, q: deque, n: int,
                      now: float,
-                     exclude_tight_s: Optional[float] = None) -> list[Job]:
+                     exclude_tight_s: Optional[float] = None) -> list[Job]:  # guarded-by: caller
         """Remove up to ``n`` jobs from one tenant FIFO — earliest-deadline
         first when any queued job carries one, plain FIFO otherwise.  With
         ``exclude_tight_s`` set (a coalescing-window extension), jobs whose

@@ -44,10 +44,13 @@ from __future__ import annotations
 import itertools
 import threading
 import time
+from collections import OrderedDict
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
 from typing import Optional, Sequence
 
+from ..core.analysis import (AnalysisError, AnalysisReport, analyze,
+                             validate_wiring)
 from ..core.api import ALL_FEATURES, Stratum
 from ..core.backends import make_backends
 from ..core.cache import IntermediateCache
@@ -56,8 +59,8 @@ from ..core.plan_cache import PlanCache
 from ..core.runtime import ExecutionError, ExecutionPreempted, Runtime
 from .coalesce import SuperBatch, coalesce, cross_agent_dedup, reachable_sigs
 from .control import ControlPolicy, ServiceController
-from .observability import (CANCELLED, COALESCED, COMPLETED, DISPATCHED,
-                            FAILED, PREEMPTED, SHED, SUBMITTED,
+from .observability import (ANALYZED, CANCELLED, COALESCED, COMPLETED,
+                            DISPATCHED, FAILED, PREEMPTED, SHED, SUBMITTED,
                             ThroughputCollector, TraceSink)
 from .priority import Priority
 from .queue import AdmissionError, FairQueue, Job
@@ -77,6 +80,13 @@ class ServiceConfig:
     # admission control
     max_queued_total: int = 1024
     max_queued_per_tenant: int = 256
+    # pre-flight static analysis at admission (docs/ANALYSIS.md): when on,
+    # every submit() runs the wiring/shape/lint analyzer and statically
+    # invalid pipelines raise AnalysisError BEFORE taking a queue slot.
+    # Per-submit SubmitOptions(verify=...) overrides this default either
+    # way.  Clean verdicts are cached by structural signature, so an
+    # agent's refinement stream pays the analyzer once per DAG shape.
+    admission_analysis: bool = False
     # coalescing / fairness
     coalesce_window_s: float = 0.02
     coalesce_max_jobs: int = 16
@@ -234,6 +244,13 @@ class StratumService:
                 config.control, queue=self.queue, windows=self.windows,
                 trace_sink=self.traces, shard_id=config.shard_id)
             self.telemetry.control_provider = self.controller.snapshot
+        # admission-analysis verdict cache: structural signatures of
+        # batches that analyzed clean.  Only OK verdicts are cached —
+        # rejections re-analyze so the error carries exact provenance.
+        # Guarded by _verdict_lock (submit runs on many caller threads).
+        self._verdict_ok: "OrderedDict" = OrderedDict()
+        self._verdict_max = 512
+        self._verdict_lock = threading.Lock()
         self._job_ids = itertools.count()
         self._running = False
         self._dispatcher: Optional[threading.Thread] = None
@@ -329,7 +346,8 @@ class StratumService:
                deadline_s: Optional[float] = None,
                tags: Sequence[str] = (),
                trace_key: Optional[str] = None,
-               trace_hops: Sequence[tuple] = ()) -> PipelineFuture:
+               trace_hops: Sequence[tuple] = (),
+               verify: Optional[bool] = None) -> PipelineFuture:
         # ``affinity`` is a sharded-fabric routing hint; a standalone
         # service has exactly one place to run the job, so it is accepted
         # (keeping Session portable across backends) and ignored.
@@ -361,6 +379,17 @@ class StratumService:
             # SUBMITTED client-side
             trace.stamp(SUBMITTED, shard=self.shard_id,
                         slack=self._slack(job), priority=priority.name)
+        do_verify = (verify if verify is not None
+                     else self.config.admission_analysis)
+        if do_verify:
+            try:
+                self._admission_analysis(tenant, batch, trace)
+            except AnalysisError:
+                if trace is not None:
+                    trace.stamp(FAILED, shard=self.shard_id,
+                                reason="analysis")
+                    self.traces.finish(trace)
+                raise
         try:
             self.queue.push(job)           # may raise AdmissionError
         except AdmissionError:
@@ -370,6 +399,76 @@ class StratumService:
             raise
         self.telemetry.record_submit(tenant, priority)
         return future
+
+    # -- pre-flight static analysis (docs/ANALYSIS.md) ---------------------
+    @staticmethod
+    def _batch_structural_key(batch: PipelineBatch):
+        return tuple(ref.op.structural_signature + f":{ref.index}"
+                     for ref in batch.fused_sinks())
+
+    def _admission_analysis(self, tenant: str, batch: PipelineBatch,
+                            trace) -> None:
+        """Run the pre-flight analyzer; raise AnalysisError on a statically
+        invalid batch.  Clean verdicts are cached by structural signature
+        (shape analysis depends on structure, not tunable values or seeds)
+        so agent refinement streams pay the analyzer once per DAG shape."""
+        try:
+            skey = self._batch_structural_key(batch)
+        except Exception:  # noqa: BLE001 — e.g. cyclic DAG; analyze below
+            skey = None    # will produce the real structured finding
+        if skey is not None:
+            with self._verdict_lock:
+                cached = skey in self._verdict_ok
+                if cached:
+                    self._verdict_ok.move_to_end(skey)
+            if cached:
+                self.telemetry.record_analysis(
+                    tenant, rejected=False, cached=True)
+                if trace is not None:
+                    trace.stamp(ANALYZED, shard=self.shard_id, cached=True)
+                return
+        report = analyze(
+            batch, platform=self.config.platform,
+            memory_budget_bytes=self.config.memory_budget_bytes,
+            lowering="lowering" in self.config.enable,
+            feasibility=False)
+        self.telemetry.record_analysis(
+            tenant, rejected=not report.ok,
+            n_warnings=len(report.warnings),
+            rules=[f.rule for f in report.findings
+                   if f.severity != "info"],
+            time_s=report.analysis_time_s)
+        if not report.ok:
+            raise AnalysisError(report.errors)
+        if skey is not None:
+            with self._verdict_lock:
+                self._verdict_ok[skey] = True
+                self._verdict_ok.move_to_end(skey)
+                while len(self._verdict_ok) > self._verdict_max:
+                    self._verdict_ok.popitem(last=False)
+        if trace is not None:
+            trace.stamp(ANALYZED, shard=self.shard_id,
+                        warnings=len(report.warnings),
+                        analysis_ms=round(report.analysis_time_s * 1e3, 3))
+
+    def analyze(self, batch: PipelineBatch, *,
+                feasibility: bool = True) -> AnalysisReport:
+        """Full static analysis of ``batch`` against this service's
+        configuration — wiring, shape inference, lint and (by default)
+        compile-feasibility classification.  Jax segments that probe clean
+        are marked pre-verified on this service's execution backend, so
+        their first real dispatch skips the execute-time eval_shape probe.
+        Never executes or queues anything."""
+        jax_be = self._backends.get("jax") if feasibility else None
+        allowed = (("python", "jax", "pallas")
+                   if "selection" in self.config.enable else ("python",))
+        return analyze(
+            batch, platform=self.config.platform,
+            memory_budget_bytes=self.config.memory_budget_bytes,
+            lowering="lowering" in self.config.enable,
+            feasibility=feasibility, allowed_backends=allowed,
+            segment_time_budget_s=self.config.segment_time_budget_s,
+            jax_backend=jax_be)
 
     def precompile(self, tenant: str, batch: PipelineBatch) -> dict:
         """Speculative warm-up: optimize+plan ``batch`` WITHOUT queueing
@@ -539,6 +638,39 @@ class StratumService:
         except AdmissionError as e:     # service shutting down mid-yield
             self._fail_jobs(live, e)
 
+    def _isolate_invalid(self, live: list, err: AnalysisError,
+                         allow_retry: bool) -> None:
+        """A coalesced super-batch failed compile-time static validation.
+        Re-validate each job's own pipelines so only the offending jobs
+        fail — each with its OWN findings, not the merged batch's — and
+        innocent coalesced bystanders re-run without the poisoned peer."""
+        if len(live) == 1:
+            self._fail_jobs(live, err)
+            return
+        good = []
+        for job in live:
+            try:
+                errs = [f for f in validate_wiring(job.batch.fused_sinks())
+                        if f.severity == "error"]
+            except Exception:  # noqa: BLE001 — unvalidatable == invalid
+                errs = []
+                self._fail_jobs([job], err)
+                continue
+            if errs:
+                self._fail_jobs([job], AnalysisError(errs))
+            else:
+                good.append(job)
+        if len(good) == len(live):
+            # nothing attributable (the defect only exists merged) —
+            # fall back to failing the whole batch with the merged error
+            self._fail_jobs(live, err)
+            return
+        if good:
+            if allow_retry:
+                self._execute_jobs(good, allow_retry=False, is_retry=True)
+            else:
+                self._fail_jobs(good, err)
+
     def _execute_jobs(self, jobs: list, allow_retry: bool,
                       is_retry: bool = False) -> None:
         now = time.perf_counter()
@@ -569,6 +701,12 @@ class StratumService:
         try:
             (sinks, sel, plan, candidates, rw, ops_submitted,
              opt_time) = self._optimizer.compile_batch(merged.batch)
+        except AnalysisError as e:
+            # statically invalid pipeline in the merged batch: fail only
+            # the offending jobs, re-run innocent coalesced bystanders
+            # (mirrors the ExecutionError isolation below)
+            self._isolate_invalid(live, e, allow_retry)
+            return
         except Exception as e:  # noqa: BLE001 — propagate via futures
             self._fail_jobs(live, e)
             return

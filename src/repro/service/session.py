@@ -166,7 +166,8 @@ class Session:
                affinity: Optional[str] = None,
                deadline_s: Optional[float] = None,
                tags=(),
-               options=None) -> PipelineFuture:
+               options=None,
+               verify: Optional[bool] = None) -> PipelineFuture:
         """Enqueue ``batch``; returns immediately.
 
         Prefer passing one :class:`repro.client.SubmitOptions` as
@@ -181,7 +182,13 @@ class Session:
         priority band and sheds expired work, failing the future with
         :class:`~repro.service.queue.DeadlineExceeded`.  Raises
         :class:`~repro.service.queue.AdmissionError` when admission control
-        rejects the job (queue depth / tenant quota)."""
+        rejects the job (queue depth / tenant quota).
+
+        ``verify`` overrides :attr:`ServiceConfig.admission_analysis` for
+        this one submit: ``True`` forces pre-flight static analysis (raises
+        :class:`~repro.core.analysis.AnalysisError` on a statically-invalid
+        pipeline), ``False`` skips it, ``None`` defers to the service
+        default."""
         if self._closed:
             raise RuntimeError(f"session {self.tenant!r} is closed")
         tenant = self.tenant
@@ -194,6 +201,8 @@ class Session:
             # (quotas/telemetry attribute to the tenant that asked)
             if options.tenant is not None:
                 tenant = options.tenant
+            if getattr(options, "verify", None) is not None:
+                verify = options.verify
         kwargs: dict = {"priority": priority, "affinity": affinity}
         # only pass the newer options to backends that predate them, so a
         # Session still fronts any object with the original submit shape
@@ -201,6 +210,8 @@ class Session:
             kwargs["deadline_s"] = deadline_s
         if tags:
             kwargs["tags"] = tuple(tags)
+        if verify is not None:
+            kwargs["verify"] = verify
         return self._service.submit(tenant, batch, **kwargs)
 
     # -- drop-in synchronous compatibility with Stratum.run_batch ----------
@@ -227,6 +238,20 @@ class Session:
         if precompile is None:
             return {}
         return precompile(self.tenant, batch)
+
+    def analyze(self, batch: PipelineBatch, *, feasibility: bool = True):
+        """Run the pre-flight static analyzer on ``batch`` without
+        submitting it; returns an
+        :class:`~repro.core.analysis.AnalysisReport`.  Raises
+        ``NotImplementedError`` when the backend has no analyzer (older
+        fabric shards)."""
+        if self._closed:
+            raise RuntimeError(f"session {self.tenant!r} is closed")
+        analyze = getattr(self._service, "analyze", None)
+        if analyze is None:
+            raise NotImplementedError(
+                f"backend {type(self._service).__name__} has no analyzer")
+        return analyze(batch, feasibility=feasibility)
 
     @property
     def telemetry(self) -> dict:

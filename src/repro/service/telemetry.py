@@ -107,7 +107,7 @@ def merge_tenant_snapshots(snapshots) -> dict:
 class ServiceTelemetry:
     def __init__(self, cache=None, plan_cache=None, windows=None) -> None:
         self._lock = threading.Lock()
-        self._tenants: dict[str, TenantStats] = {}
+        self._tenants: dict[str, TenantStats] = {}   # guarded-by: _lock
         self._cache = cache            # shared IntermediateCache (optional)
         self._plan_cache = plan_cache  # shared PlanCache (optional)
         self._windows = windows        # ThroughputCollector (optional)
@@ -119,8 +119,16 @@ class ServiceTelemetry:
         self.super_batches = 0
         self.jobs_coalesced = 0
         self.preemptions = 0
+        # pre-flight static analysis at admission (docs/ANALYSIS.md):
+        # counts, per-rule tallies and cumulative analyzer wall time
+        self.analysis_runs = 0
+        self.analysis_rejected = 0
+        self.analysis_warned = 0
+        self.analysis_cached_verdicts = 0
+        self.analysis_time_s = 0.0
+        self.analysis_by_rule: dict = {}            # guarded-by: _lock
 
-    def _t(self, tenant: str) -> TenantStats:
+    def _t(self, tenant: str) -> TenantStats:  # guarded-by: caller
         return self._tenants.setdefault(tenant, TenantStats())
 
     # -- recording hooks ---------------------------------------------------
@@ -206,6 +214,26 @@ class ServiceTelemetry:
             self._windows.record_shed()
             self._windows.record_deadline_outcome(False, band=band)
 
+    def record_analysis(self, tenant: str, *, rejected: bool,
+                        n_warnings: int = 0, rules=(),
+                        time_s: float = 0.0, cached: bool = False) -> None:
+        """One admission-time analysis verdict.  ``rules`` are the rule
+        names of the findings (errors + warnings) for the per-rule tally;
+        ``cached`` marks a verdict served from the structural-signature
+        verdict cache (no analyzer work done)."""
+        with self._lock:
+            self.analysis_runs += 1
+            if rejected:
+                self.analysis_rejected += 1
+            if n_warnings:
+                self.analysis_warned += 1
+            if cached:
+                self.analysis_cached_verdicts += 1
+            self.analysis_time_s += time_s
+            for rule in rules:
+                self.analysis_by_rule[rule] = \
+                    self.analysis_by_rule.get(rule, 0) + 1
+
     def record_job_failed(self, tenant: str) -> None:
         with self._lock:
             self._t(tenant).jobs_failed += 1
@@ -238,6 +266,16 @@ class ServiceTelemetry:
                     "attainment": (d_met / d_jobs) if d_jobs else 1.0,
                 },
             }
+            if self.analysis_runs:
+                # admission-time static analysis (docs/ANALYSIS.md)
+                out["analysis"] = {
+                    "analyzed": self.analysis_runs,
+                    "rejected": self.analysis_rejected,
+                    "warned": self.analysis_warned,
+                    "cached_verdicts": self.analysis_cached_verdicts,
+                    "time_s": round(self.analysis_time_s, 6),
+                    "by_rule": dict(self.analysis_by_rule),
+                }
         if self._cache is not None:
             arb = self._cache.arbitration_snapshot()   # copied under lock
             out["cache_cross_tenant_hits"] = arb["cross_tenant_hits"]

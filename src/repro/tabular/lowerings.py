@@ -15,7 +15,7 @@ from __future__ import annotations
 
 from typing import Any, Mapping
 
-from ..core.dag import ESTIMATOR, EVAL, LazyOp, LazyRef, TRANSFORM
+from ..core.dag import EVAL, LazyOp, LazyRef, TRANSFORM
 from ..core.lowering import register_lowering
 from . import ops
 from ..data.tabular import CATEGORICAL, DATETIME, NUMERIC

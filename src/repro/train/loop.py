@@ -22,10 +22,9 @@ import signal
 import statistics
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
-import numpy as np
 
 from ..ckpt import CheckpointManager
 

@@ -13,13 +13,11 @@
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from ..distributed import current_context
 from ..distributed.policy import Policy
 from ..distributed.vocab_ce import vocab_parallel_ce
 from ..kernels import fused_cross_entropy

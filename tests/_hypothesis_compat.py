@@ -47,5 +47,7 @@ except ModuleNotFoundError:
             argnames = ",".join(names[-len(strategies):])
             cases = list(itertools.product(
                 *(s.samples() for s in strategies)))
+            if len(strategies) == 1:      # 1-tuples would reach the test
+                cases = [c[0] for c in cases]
             return pytest.mark.parametrize(argnames, cases)(fn)
         return deco

@@ -3,7 +3,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.launch.hlo_cost import analyze, parse_module
 from repro.serve.batcher import Batcher, Request

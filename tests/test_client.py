@@ -12,9 +12,12 @@ import numpy as np
 import pytest
 
 import repro
-from repro.client import (CacheConfig, FabricTarget, LocalTarget,
-                          OptimizerConfig, RuntimeConfig, ServiceTarget,
-                          ServiceTuning, StratumConfig, SubmitOptions,
+from repro.client import (CacheConfig,
+                          OptimizerConfig,
+                          RuntimeConfig,
+                          ServiceTuning,
+                          StratumConfig,
+                          SubmitOptions,
                           connect)
 from repro.core import PipelineBatch, Stratum
 from repro.service import DeadlineExceeded, Priority

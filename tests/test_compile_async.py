@@ -11,7 +11,6 @@ import threading
 import time
 
 import numpy as np
-import pytest
 
 import repro.tabular as T
 from repro.core import PipelineBatch, PlanCache, Stratum

@@ -4,7 +4,6 @@ attainment plumbing, the autoscaler's windowed-attainment trend, and the
 observability of every actuation (telemetry block, top row, JSONL)."""
 
 import json
-import os
 import pickle
 
 import pytest

@@ -2,16 +2,13 @@
 cache — unit + hypothesis property tests."""
 
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core import (CONST, LazyOp, LazyRef, PipelineBatch, SOURCE,
-                        Stratum, TRANSFORM, count_ops, toposort)
+from repro.core import CONST, LazyOp, Stratum, TRANSFORM, count_ops, toposort
 from repro.core.cache import IntermediateCache, mark_cache_candidates
-from repro.core.dag import rebuild
 from repro.core.metadata import collect_metadata
 from repro.core.rewrites import cse, optimize_logical, project_pushdown
-from repro.core.runtime import Runtime, execute_reference
+from repro.core.runtime import execute_reference
 from repro.core.scheduler import SchedulerConfig, plan as make_plan
 from repro.core.selection import SelectionConfig, select
 import repro.tabular as T  # registers impls/meta/lowerings

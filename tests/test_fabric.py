@@ -10,7 +10,7 @@ import pytest
 from repro.core import GENERIC, LazyOp, PipelineBatch
 from repro.core.dag import toposort
 from repro.core.runtime import ExecutionError
-from repro.service import Priority, merge_tenant_snapshots
+from repro.service import merge_tenant_snapshots
 from repro.service.fabric import (CodecError, ConsistentHashRing,
                                   JobEnvelope, NoShardsError, ResultEnvelope,
                                   ShardedStratum, decode_job, decode_result,
@@ -561,7 +561,6 @@ def test_deadline_envelope_corruption_still_raises_codec_error():
 def test_stale_attempt_reply_dropped_for_deadline_job():
     """A failover bumps the attempt; a stale reply from the dead shard
     must not resolve a deadline-carrying future."""
-    from concurrent.futures import TimeoutError as FTimeout
     from repro.service.fabric.envelope import FabricJobReport
     fab = _fabric(n_shards=1, autostart=False)
     try:

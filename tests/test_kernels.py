@@ -6,7 +6,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.common import force_backend
 from repro.kernels.cross_entropy.kernel import ce_forward_pallas
 from repro.kernels.cross_entropy.ops import (_forward_chunked,
                                              fused_cross_entropy)

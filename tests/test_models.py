@@ -10,8 +10,7 @@ import numpy as np
 import pytest
 
 from repro.configs import ARCH_NAMES, get_config, reduced
-from repro.models import (decode_step, forward, init_decode_state,
-                          init_params, loss_fn, prefill)
+from repro.models import decode_step, forward, init_params, loss_fn, prefill
 
 RNG = np.random.default_rng(0)
 

@@ -6,7 +6,6 @@ snapshot merging."""
 
 import json
 import os
-import threading
 import time
 from collections import Counter
 from types import SimpleNamespace

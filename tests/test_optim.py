@@ -3,7 +3,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.optim import (adafactor, adamw, cosine_schedule,
                          int8_compress_decompress, linear_warmup,

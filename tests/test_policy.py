@@ -3,16 +3,15 @@ every parameter/optimizer/state/input PartitionSpec must divide its dim and
 never duplicate a mesh axis.  Catches config/policy regressions without a
 single compile (the compile-level proof is the dry-run grid)."""
 
-import numpy as np
 import pytest
 
 import jax
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCH_NAMES, get_config
-from repro.distributed.policy import (decode_state_pspecs, input_pspecs,
-                                      make_policy, param_pspecs)
-from repro.launch.mesh import make_debug_mesh
+from repro.distributed.policy import (decode_state_pspecs,
+                                      make_policy,
+                                      param_pspecs)
 from repro.models.config import SHAPES, shape_applicable
 from repro.models.model import init_decode_state, param_specs
 

@@ -1,0 +1,315 @@
+"""Pre-flight static analysis: wiring/shape/lint verdicts, admission-time
+rejection on every client target, picklable AnalysisError, coalesced
+blast-radius isolation, the AIDE repair loop and the concurrency lint.
+
+The property tests ride ``tests/_hypothesis_compat`` so the suite runs
+with or without hypothesis installed.
+"""
+
+import pickle
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+import repro.tabular as T
+from repro.agents.aide import AIDEAgent, AsyncAIDESearch
+from repro.client import (StratumConfig, SubmitOptions, connect)
+from repro.core import PipelineBatch, Stratum
+from repro.core.analysis import (AnalysisError, analyze, validate_wiring)
+from repro.core.dag import TRANSFORM, LazyOp
+from repro.service import StratumService
+
+from _hypothesis_compat import given, settings, st
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _pipeline(n_rows=2000, cols=(10, 11, 12)):
+    x = T.read("uk_housing", n_rows, seed=0)
+    xs = T.scale(T.impute(T.project(x, list(cols))))
+    return T.metric(T.project(xs, [0]), T.project(x, [0]), kind="mae")
+
+
+def _valid_batch(name="p"):
+    return PipelineBatch([_pipeline()], [name])
+
+
+def _invalid_batch(name="bad", op="no_such_op"):
+    t = T.read("uk_housing", 2000, seed=0)
+    return PipelineBatch([LazyOp(op, TRANSFORM, inputs=(t,)).out()], [name])
+
+
+def _config(**overrides):
+    base = dict(memory_budget_bytes=1 << 30, n_executors=1, n_shards=2,
+                coalesce_window_s=0.0)
+    base.update(overrides)
+    return StratumConfig.make(**base)
+
+
+# ---------------------------------------------------------------------------
+# verdict correctness: no false positives, and OK verdicts really execute
+# ---------------------------------------------------------------------------
+
+def test_zero_false_positives_on_paper_corpus():
+    """Every pipeline the repo's own workloads build must analyze clean."""
+    from repro.agents import paper_workload_batches
+    from repro.agents.aide import PipelineSpec, second_iteration_batch
+    batches = [b for _name, b, _ctx in paper_workload_batches(n_rows=2000)]
+    grid_batch, _specs = second_iteration_batch(PipelineSpec(n_rows=2000))
+    batches.append(grid_batch)
+    assert batches
+    for batch in batches:
+        report = analyze(batch)
+        assert report.ok, [str(f) for f in report.errors]
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(min_value=0, max_value=40))
+def test_analyzer_ok_implies_executable(seed):
+    """Property: any AIDE-space batch the analyzer passes must execute.
+    (The converse is not required — jnp index clamping lets some invalid
+    pipelines 'execute' silently, which is exactly what the analyzer is
+    for.)"""
+    agent = AIDEAgent(n_rows=2000, seed=seed)
+    specs = agent.propose(2)
+    batch = PipelineBatch([s.build() for s in specs],
+                          [f"v{i}" for i in range(len(specs))])
+    report = analyze(batch)
+    assert report.ok, [str(f) for f in report.errors]
+    st_ = Stratum(memory_budget_bytes=1 << 30)
+    results, _ = st_.run_batch(batch)
+    assert len(results) == len(specs)
+
+
+def test_invalid_batch_findings_have_provenance():
+    report = analyze(_invalid_batch())
+    assert not report.ok
+    assert any(f.rule == "unknown-op" and f.op_name == "no_such_op"
+               for f in report.errors)
+    with pytest.raises(AnalysisError) as ei:
+        report.raise_if_invalid()
+    assert "unknown-op" in ei.value.rules
+
+
+# ---------------------------------------------------------------------------
+# admission-time rejection, uniform across the three client targets
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("target", ["local", "service", "fabric"])
+def test_verify_rejects_at_submit_on_every_target(target):
+    with connect(target, _config()) as client:
+        report = client.analyze(_invalid_batch())
+        assert not report.ok and "unknown-op" in {f.rule
+                                                  for f in report.errors}
+        with pytest.raises(AnalysisError):
+            client.submit(_invalid_batch(),
+                          options=SubmitOptions(verify=True))
+        # valid traffic is untouched by verification
+        value, _ = client.run(_pipeline(),
+                              options=SubmitOptions(verify=True))
+        assert float(value) == float(value)        # finite, not NaN-check
+
+
+def test_verify_rejects_at_submit_processes_true():
+    cfg = _config(processes=True)
+    with connect("fabric", cfg) as client:
+        with pytest.raises(AnalysisError) as ei:
+            client.submit(_invalid_batch(),
+                          options=SubmitOptions(verify=True))
+        assert "unknown-op" in ei.value.rules
+
+
+def test_admission_analysis_config_default_and_telemetry():
+    svc = StratumService(memory_budget_bytes=1 << 30, n_executors=1,
+                         coalesce_window_s=0.0, admission_analysis=True)
+    try:
+        ses = svc.session("t")
+        ses.submit(_valid_batch()).result(timeout=120)
+        ses.submit(_valid_batch()).result(timeout=120)   # cached verdict
+        with pytest.raises(AnalysisError):
+            ses.submit(_invalid_batch())
+        snap = svc.telemetry.global_snapshot()["analysis"]
+        assert snap["analyzed"] == 3
+        assert snap["rejected"] == 1
+        assert snap["cached_verdicts"] >= 1
+        assert snap["by_rule"].get("unknown-op", 0) >= 1
+    finally:
+        svc.stop()
+
+
+def test_submit_options_verify_must_be_bool():
+    with pytest.raises(ValueError):
+        SubmitOptions(verify="yes")
+
+
+# ---------------------------------------------------------------------------
+# the error is structured and survives every wire it can cross
+# ---------------------------------------------------------------------------
+
+def test_analysis_error_pickle_roundtrip():
+    err = pytest.raises(AnalysisError,
+                        analyze(_invalid_batch()).raise_if_invalid).value
+    clone = pickle.loads(pickle.dumps(err))
+    assert isinstance(clone, AnalysisError)
+    assert clone.rules == err.rules
+    assert clone.findings == err.findings
+
+
+def test_analysis_error_crosses_envelope_codec():
+    from repro.service.fabric.envelope import (ResultEnvelope,
+                                               decode_result, encode_result)
+    err = pytest.raises(AnalysisError,
+                        analyze(_invalid_batch()).raise_if_invalid).value
+    env = ResultEnvelope(envelope_id="e1", tenant="t", shard_id="s0",
+                         ok=False, results=None, report=None, error=err)
+    back = decode_result(encode_result(env))
+    assert isinstance(back.error, AnalysisError)
+    assert back.error.rules == err.rules
+
+
+# ---------------------------------------------------------------------------
+# without verification, wiring errors still fail deterministically —
+# and a poisoned coalesced batch only takes down its own job
+# ---------------------------------------------------------------------------
+
+def test_wiring_error_is_structured_without_analysis():
+    st_ = Stratum(memory_budget_bytes=1 << 30)
+    with pytest.raises(AnalysisError) as ei:
+        st_.run_batch(_invalid_batch())
+    assert "unknown-op" in ei.value.rules
+
+
+def test_coalesced_blast_radius_is_isolated():
+    """An invalid job merged into a super-batch fails alone, with its own
+    findings; coalesced valid bystanders still complete."""
+    want, _ = Stratum(memory_budget_bytes=1 << 30).run_batch(_valid_batch())
+    svc = StratumService(memory_budget_bytes=1 << 30, n_executors=1,
+                        coalesce_window_s=0.05)
+    try:
+        ses = svc.session("agent")
+        bad_ses = svc.session("adversary")
+        # the executor picks up this head-of-line job first; everything
+        # submitted behind it queues up and coalesces
+        head = ses.submit(_valid_batch("head"))
+        good = [ses.submit(_valid_batch(f"g{i}")) for i in range(3)]
+        bad = bad_ses.submit(_invalid_batch())
+        with pytest.raises(AnalysisError) as ei:
+            bad.result(timeout=120)
+        assert "unknown-op" in ei.value.rules
+        head.result(timeout=120)
+        for f in good:
+            results, _ = f.result(timeout=120)
+            for v in results.values():
+                assert float(v) == pytest.approx(float(want["p"]))
+    finally:
+        svc.stop()
+
+
+# ---------------------------------------------------------------------------
+# feasibility classification pre-verifies compiled segments
+# ---------------------------------------------------------------------------
+
+def test_preverified_segments_recorded_and_results_unchanged():
+    st_ = Stratum(memory_budget_bytes=1 << 30)
+    batch = _valid_batch()
+    report = st_.analyze_batch(batch)
+    assert report.ok
+    assert report.segments                 # feasibility classification ran
+    if any(s.get("kind") == "jax" for s in report.segments):
+        assert report.preverified_segments >= 1
+    results, _ = st_.run_batch(batch)
+    ref, _ = Stratum(memory_budget_bytes=1 << 30).run_batch(_valid_batch())
+    assert float(results["p"]) == pytest.approx(float(ref["p"]))
+
+
+# ---------------------------------------------------------------------------
+# the agent reads the verdict and repairs instead of resubmitting blind
+# ---------------------------------------------------------------------------
+
+def test_aide_agent_never_reproposes_rejected_spec():
+    agent = AIDEAgent(n_rows=2000, seed=3)
+    first = agent.propose(4)
+    err = pytest.raises(AnalysisError,
+                        analyze(_invalid_batch()).raise_if_invalid).value
+    agent.observe_rejection(first[:2], err)
+    assert agent.rejection_rules.get("unknown-op", 0) >= 1
+    for _ in range(6):
+        for spec in agent.propose(4):
+            assert spec not in agent.rejected_specs
+
+
+def test_async_search_survives_admission_analysis():
+    svc = StratumService(memory_budget_bytes=1 << 30, n_executors=1,
+                         coalesce_window_s=0.0, admission_analysis=True)
+    try:
+        agent = AIDEAgent(n_rows=2000, seed=1)
+        search = AsyncAIDESearch(svc.session("aide"), agent, batch_size=2,
+                                 max_inflight=2)
+        best = search.run(n_rounds=2)
+        assert best is not None and best.score is not None
+    finally:
+        svc.stop()
+
+
+# ---------------------------------------------------------------------------
+# the runtime's own concurrency lint
+# ---------------------------------------------------------------------------
+
+_LINT = REPO / "scripts_check_concurrency.py"
+
+_BAD_MODULE = '''\
+import threading
+import time
+
+class Worker:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.jobs = []          # guarded-by: _lock
+
+    def slow(self):
+        with self._lock:
+            time.sleep(0.1)
+
+    def unguarded(self):
+        self.jobs = []
+'''
+
+
+def test_concurrency_lint_flags_synthetic_violations(tmp_path):
+    mod = tmp_path / "bad.py"
+    mod.write_text(_BAD_MODULE)
+    out = subprocess.run([sys.executable, str(_LINT), str(mod)],
+                         capture_output=True, text=True, cwd=REPO)
+    assert out.returncode == 1
+    assert "blocking" in out.stdout       # time.sleep under _lock
+    assert "guarded-by" in out.stdout     # self.jobs written without _lock
+
+
+def test_concurrency_lint_clean_on_runtime():
+    out = subprocess.run([sys.executable, str(_LINT)],
+                         capture_output=True, text=True, cwd=REPO)
+    assert out.returncode == 0, out.stdout + out.stderr
+
+
+# ---------------------------------------------------------------------------
+# lint findings (warnings) don't reject, and reach the report
+# ---------------------------------------------------------------------------
+
+def test_lint_warnings_do_not_reject():
+    x = T.read("uk_housing", 2000, seed=0)
+    dead = T.scale(T.project(x, [1]))     # never reaches a sink
+    sink = T.metric(T.project(x, [0]), T.project(x, [0]), kind="mae")
+    report = analyze(PipelineBatch([sink], ["p"]), extra_roots=(dead,))
+    assert report.ok                       # warnings never reject
+    report2 = analyze(PipelineBatch([sink], ["p"]))
+    assert report2.ok
+
+
+def test_validate_wiring_is_the_always_on_subset():
+    findings = validate_wiring(_invalid_batch().fused_sinks())
+    assert any(f.rule == "unknown-op" for f in findings)
+    assert not [f for f in
+                validate_wiring(_valid_batch().fused_sinks())
+                if f.severity == "error"]

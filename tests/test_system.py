@@ -3,11 +3,9 @@ fusion + CSE + lowering + selection + caching over the two-iteration
 agentic search, plus agent–system co-design hooks."""
 
 import numpy as np
-import pytest
 
 from repro.agents import paper_workload_batches
-from repro.agents.aide import (AIDEAgent, PipelineSpec, diff_fraction,
-                               second_iteration_batch)
+from repro.agents.aide import AIDEAgent, diff_fraction, second_iteration_batch
 from repro.core import ALL_FEATURES, PipelineBatch, Stratum, annotate
 import repro.tabular as T
 

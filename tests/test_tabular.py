@@ -8,7 +8,6 @@ from repro.core.dag import LazyOp, TRANSFORM
 from repro.core.selection import impls_for
 from repro.data.tabular import generate_uk_housing
 from repro.tabular import gbt
-import repro.tabular as T
 
 
 def _table(n=400, seed=0):
